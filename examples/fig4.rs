@@ -1,0 +1,45 @@
+//! Regenerate Figure 4 (§3 microbenchmark): max achievable rate for the
+//! Read / Write / Update workloads across (parallelism, memory)
+//! configurations, printed as grids and written to `results/fig4.json`.
+//!
+//! ```sh
+//! cargo run --release --example fig4 [-- --seed N]
+//! ```
+
+use justin::bench::figures::{fig4_print, fig4_series};
+use justin::config::Config;
+use justin::util::cli::Args;
+use justin::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let mut cfg = Config::default();
+    cfg.sim.seed = args.get_parse("seed", cfg.sim.seed);
+    let cells = fig4_series(&cfg);
+    fig4_print(&cells);
+
+    // Paper-vs-measured highlights (§3 takeaways).
+    println!("\npaper-vs-measured (frontier of sustained configurations):");
+    println!("  paper: Read sustained from (4;1024) or (8;512)          ");
+    println!("  paper: Write constant across memory; (1;128) slightly low");
+    println!("  paper: Update only at p=8 with enough memory; 128 MB never");
+
+    std::fs::create_dir_all("results")?;
+    let json = Json::arr(cells.iter().map(|c| {
+        Json::obj(vec![
+            ("workload", Json::str(format!("{:?}", c.workload))),
+            ("parallelism", Json::num(c.parallelism as f64)),
+            ("memory_mb", Json::num(c.memory_mb as f64)),
+            ("p25", Json::num(c.p25)),
+            ("p50", Json::num(c.p50)),
+            ("p75", Json::num(c.p75)),
+            ("min", Json::num(c.min)),
+            ("max", Json::num(c.max)),
+            ("sustained", Json::Bool(c.sustained)),
+            ("target", Json::num(c.target)),
+        ])
+    }));
+    std::fs::write("results/fig4.json", json.to_pretty())?;
+    println!("\nwrote results/fig4.json ({} cells)", cells.len());
+    Ok(())
+}

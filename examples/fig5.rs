@@ -1,0 +1,32 @@
+//! Regenerate Figure 5 (§5 evaluation): DS2 vs Justin autoscaling traces on
+//! Nexmark q1, q3, q5, q11, q8 — achieved rate, CPU cores and memory over
+//! time, plus the headline resource savings. Written to `results/fig5.json`.
+//!
+//! ```sh
+//! cargo run --release --example fig5 [-- q11] [--verbose] [--seed N]
+//! ```
+
+use justin::bench::figures::{fig5_compare, FIG5_QUERIES};
+use justin::config::Config;
+use justin::util::cli::Args;
+use justin::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let mut cfg = Config::default();
+    cfg.sim.seed = args.get_parse("seed", cfg.sim.seed);
+    let queries: Vec<&str> = match args.positional.first() {
+        Some(q) => vec![q.as_str()],
+        None => FIG5_QUERIES.to_vec(),
+    };
+    let mut out = Vec::new();
+    for q in queries {
+        let summary = fig5_compare(q, &cfg)?;
+        summary.print(args.flag("verbose"));
+        out.push(summary.to_json());
+    }
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/fig5.json", Json::arr(out).to_pretty())?;
+    println!("\nwrote results/fig5.json");
+    Ok(())
+}

@@ -1,0 +1,207 @@
+//! End-to-end driver: the full system on a real workload.
+//!
+//! Runs the §3-shaped read-heavy stateful pipeline **live** (real engine,
+//! real rockslite state backend, real metrics) under the Justin controller
+//! with a compressed control loop, demonstrating every layer composing:
+//!
+//!   Nexmark-style source → stateful operator (LSM state, pre-populated via
+//!   savepoint) → sink, with the scrape → decision window → Algorithm 1 →
+//!   stop-with-savepoint → redeploy loop reconfiguring the job, and — when
+//!   `artifacts/` exist — the XLA/Pallas batch kernel on the q1 hot path.
+//!
+//! Reports throughput, reconfiguration timeline (the paper's headline:
+//! memory pressure ⇒ scale UP, not out), and state-transfer sizes.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example nexmark_live
+//! ```
+
+use justin::config::Config;
+use justin::engine::{
+    autoscale_live, AccessMode, JobManager, KvStoreOp, OpFactory, SinkOp, Source,
+    SourceBatch, StreamJob, XlaCurrencyMapOp,
+};
+use justin::graph::{key_to_group, LogicalGraph, OpKind, Partitioning, Record, ScalingAssignment};
+use justin::metrics::Registry;
+use justin::nexmark::NexmarkGenerator;
+use justin::runtime::{artifacts_dir, SharedModel};
+use justin::scaler::Justin;
+use justin::state::state_key;
+use justin::util::cli::Args;
+use std::sync::Arc;
+use std::time::Duration;
+
+struct KvReadSource {
+    rng: justin::util::rng::Rng,
+    keys: u64,
+    seq: u64,
+}
+
+impl Source for KvReadSource {
+    fn poll(&mut self, max: usize) -> SourceBatch {
+        let out = (0..max)
+            .map(|_| {
+                self.seq += 1;
+                Record::Kv {
+                    key: self.rng.gen_range(self.keys),
+                    payload: Vec::new(),
+                    ts: self.seq,
+                }
+            })
+            .collect();
+        SourceBatch::Records(out)
+    }
+    fn watermark(&self) -> u64 {
+        self.seq
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let seconds: u64 = args.get_parse("seconds", 25);
+    let keys: u64 = args.get_parse("keys", 150_000);
+
+    // ── Part 1: XLA hot path (if artifacts are built) ────────────────────
+    match SharedModel::load(&artifacts_dir()) {
+        Ok(model) => {
+            println!("▶ XLA artifacts loaded (batch {}, slots {})", model.spec().batch, model.spec().slots);
+            // q1 through the AOT JAX/Pallas model, live.
+            let mut graph = LogicalGraph::new("q1-xla");
+            let src = graph.add_op("source", OpKind::Source, false, vec![], 1);
+            let map = graph.add_op(
+                "currency_map",
+                OpKind::Transform,
+                false,
+                vec![(src, Partitioning::Rebalance)],
+                1,
+            );
+            graph.add_op(
+                "sink",
+                OpKind::Sink,
+                false,
+                vec![(map, Partitioning::Rebalance)],
+                1,
+            );
+            let m = model.clone();
+            let job = StreamJob {
+                graph,
+                factories: vec![
+                    OpFactory::source(|subtask, p| {
+                        let mut gen = NexmarkGenerator::new(7, subtask, p, 200_000.0);
+                        Box::new(justin::engine::RateLimitedSource::new(
+                            200_000.0 / p as f64,
+                            move |_| gen.next_event(),
+                        )
+                        .bounded(400_000 / p as u64)) as _
+                    }),
+                    OpFactory::transform(move |_, _| Box::new(XlaCurrencyMapOp::new(m.clone()))),
+                    OpFactory::transform(|_, _| Box::new(SinkOp)),
+                ],
+            };
+            let mut jm = JobManager::new(Config::default());
+            let registry = Registry::new();
+            let t0 = std::time::Instant::now();
+            let running = jm.deploy(&job, &ScalingAssignment::initial(&job.graph), &registry, None)?;
+            let _ = running.wait_drained()?;
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "  q1 via XLA/Pallas batch kernel: 400k events in {wall:.2}s \
+                 ({:.0} ev/s end-to-end, batched 256/call)\n",
+                400_000.0 / wall
+            );
+        }
+        Err(e) => {
+            println!("▶ XLA artifacts not found ({e}); run `make artifacts` for the XLA path\n");
+        }
+    }
+
+    // ── Part 2: live autoscaling under memory pressure ───────────────────
+    println!("▶ live autoscaling: read-heavy stateful pipeline, {keys} × 1 KB state");
+    let mut cfg = Config::default();
+    cfg.engine.batch_size = 128;
+    cfg.engine.flush_interval_ms = 10;
+    let mut graph = LogicalGraph::new("kvread");
+    let src = graph.add_op("source", OpKind::Source, false, vec![], 1);
+    let key_fn: justin::graph::KeyFn = Arc::new(|r: &Record| match r {
+        Record::Kv { key, .. } => *key,
+        _ => 0,
+    });
+    let kv = graph.add_op(
+        "kvstore",
+        OpKind::Transform,
+        true,
+        vec![(src, Partitioning::Hash(key_fn))],
+        1,
+    );
+    graph.add_op(
+        "sink",
+        OpKind::Sink,
+        false,
+        vec![(kv, Partitioning::Rebalance)],
+        1,
+    );
+    let job = StreamJob {
+        graph,
+        factories: vec![
+            OpFactory::source(move |subtask, _| {
+                Box::new(KvReadSource {
+                    rng: justin::util::rng::Rng::new(subtask as u64 + 1),
+                    keys,
+                    seq: 0,
+                }) as _
+            }),
+            OpFactory::transform(|_, _| {
+                Box::new(KvStoreOp {
+                    mode: AccessMode::Read,
+                })
+            }),
+            OpFactory::transform(|_, _| Box::new(SinkOp)),
+        ],
+    };
+    // Pre-populate state through a savepoint (production-restore shape).
+    let mut st = justin::engine::OperatorState::default();
+    let value = vec![7u8; 1024];
+    for k in 0..keys {
+        let group = key_to_group(k, cfg.engine.key_groups);
+        st.keyed
+            .entry(group)
+            .or_default()
+            .push((state_key(group, &k.to_be_bytes()), value.clone()));
+    }
+    let mut sp = justin::engine::Savepoint::default();
+    sp.merge_task_export("kvstore", st);
+    println!("  pre-populated savepoint: {} entries (~{} MB)", sp.total_entries(), sp.total_entries() / 1024);
+    let mut jm = JobManager::new(cfg.clone());
+    let mut policy = Justin::new(cfg.scaler.clone());
+    let report = autoscale_live(
+        &mut jm,
+        &job,
+        &mut policy,
+        "kvstore",
+        Duration::from_secs(seconds),
+        0.03, // 2-min window → 3.6 s
+        Some(&sp),
+    )?;
+    println!("  reconfigurations:");
+    for r in &report.reconfigs {
+        let s = r.assignment.get("kvstore");
+        println!(
+            "    t={:>5.1}s → kvstore = (p={}, level={:?})  savepoint {} entries, downtime {:?}",
+            r.at.as_secs_f64(),
+            s.parallelism,
+            s.memory_level,
+            r.savepoint_entries,
+            r.downtime
+        );
+    }
+    if let Some((_, last_rate)) = report.rate_trace.last() {
+        println!("  final kvstore rate ≈ {last_rate:.0} ev/s");
+    }
+    let final_s = report.final_assignment.get("kvstore");
+    println!(
+        "  final config: kvstore = (p={}, level={:?})",
+        final_s.parallelism, final_s.memory_level
+    );
+    println!("\nE2E complete: engine, LSM, metrics, policy, placement and (if built) XLA all composed.");
+    Ok(())
+}

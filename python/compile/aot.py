@@ -1,0 +1,72 @@
+"""AOT lowering: JAX model → HLO *text* artifacts for the Rust runtime.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage: python -m compile.aot --out ../artifacts/model.hlo.txt
+Writes the HLO text plus a manifest (artifacts/manifest.json) recording the
+shapes the Rust side must feed.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model():
+    lowered = jax.jit(model.nexmark_batch).lower(*model.example_args())
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out", default="../artifacts/model.hlo.txt")
+    args = parser.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    text = lower_model()
+    with open(args.out, "w") as f:
+        f.write(text)
+    manifest = {
+        "model": {
+            "file": os.path.basename(args.out),
+            "batch": model.BATCH,
+            "slots": model.SLOTS,
+            "euro_rate_milli": model.EURO_RATE_MILLI,
+            "q2_modulus": model.Q2_MODULUS,
+            "inputs": [
+                {"name": "keys", "dtype": "s32", "shape": [model.BATCH]},
+                {"name": "prices", "dtype": "f32", "shape": [model.BATCH]},
+                {"name": "valid", "dtype": "f32", "shape": [model.BATCH]},
+            ],
+            "outputs": [
+                {"name": "euros", "dtype": "f32", "shape": [model.BATCH]},
+                {"name": "q2mask", "dtype": "f32", "shape": [model.BATCH]},
+                {"name": "agg", "dtype": "f32", "shape": [model.SLOTS, 2]},
+            ],
+        }
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(text)} chars to {args.out} (+ manifest.json)")
+
+
+if __name__ == "__main__":
+    main()

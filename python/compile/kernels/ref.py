@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth
+pytest checks the kernels against (no Pallas, no tiling, no tricks)."""
+
+import jax.numpy as jnp
+
+
+def window_agg_ref(keys, values, num_slots: int):
+    """Reference keyed aggregation: out[s, v] = sum over i with keys[i] == s
+    of values[i, v]; out-of-range keys ignored."""
+    keys = keys.astype(jnp.int32)
+    values = values.astype(jnp.float32)
+    onehot = (keys[:, None] == jnp.arange(num_slots)[None, :]).astype(jnp.float32)
+    return onehot.T @ values
+
+
+def currency_convert_ref(prices, rate=0.908):
+    """q1 oracle: dollar → euro."""
+    return prices.astype(jnp.float32) * rate
+
+
+def auction_filter_ref(auctions, modulus=123):
+    """q2 oracle: bids on auctions divisible by `modulus`."""
+    return (auctions.astype(jnp.int32) % modulus) == 0

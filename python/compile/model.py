@@ -1,0 +1,57 @@
+"""L2 JAX model: the numeric core of a Nexmark operator batch.
+
+One jitted function processes a batch of B bid events and produces
+everything the engine's operators need downstream:
+
+  * q1 currency conversion (map: dollar → euro),
+  * q2 auction filter mask,
+  * per-slot (count, sum) window-aggregation deltas via the L1 Pallas
+    kernel (q5 hot-items / q11 sessions numeric core).
+
+Lowered once by `aot.py` to HLO text; the Rust runtime compiles and executes
+it on the PJRT CPU client at startup. Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.window_agg import window_agg
+
+# Static shapes of the AOT artifact (the engine pads final batches).
+BATCH = 256
+SLOTS = 256
+EURO_RATE_MILLI = 908  # price × 0.908, fixed-point to match the Rust path
+Q2_MODULUS = 123
+
+
+def nexmark_batch(keys, prices, valid):
+    """Process one batch.
+
+    Args:
+      keys:   int32[BATCH]  — aggregation slot per event (key group / hot
+              key slot as computed by the Rust router); -1 for padding.
+      prices: f32[BATCH]    — bid prices (dollars).
+      valid:  f32[BATCH]    — 1.0 for real events, 0.0 for padding.
+
+    Returns:
+      euros:  f32[BATCH]    — q1 conversion (padding → 0).
+      q2mask: f32[BATCH]    — 1.0 where auction id (= key) % 123 == 0.
+      agg:    f32[SLOTS, 2] — per-slot [count, price sum] deltas.
+    """
+    prices = prices * valid
+    euros = prices * (EURO_RATE_MILLI / 1000.0)
+    q2mask = ((keys % Q2_MODULUS) == 0).astype(jnp.float32) * valid
+    # Invalid rows get key = -1 → contribute to no slot.
+    masked_keys = jnp.where(valid > 0.5, keys, -1)
+    vals = jnp.stack([valid, prices], axis=1)  # [B, 2]: count, sum
+    agg = window_agg(masked_keys, vals, num_slots=SLOTS)
+    return euros, q2mask, agg
+
+
+def example_args():
+    """ShapeDtypeStructs for lowering."""
+    return (
+        jax.ShapeDtypeStruct((BATCH,), jnp.int32),
+        jax.ShapeDtypeStruct((BATCH,), jnp.float32),
+        jax.ShapeDtypeStruct((BATCH,), jnp.float32),
+    )

@@ -1,0 +1,68 @@
+"""L2 correctness: the combined Nexmark batch model vs the oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import (
+    auction_filter_ref,
+    currency_convert_ref,
+    window_agg_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_batch(seed=0, n_valid=200):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, model.SLOTS, size=model.BATCH).astype(np.int32)
+    prices = rng.uniform(1, 10_000, size=model.BATCH).astype(np.float32)
+    valid = np.zeros(model.BATCH, np.float32)
+    valid[:n_valid] = 1.0
+    return jnp.asarray(keys), jnp.asarray(prices), jnp.asarray(valid)
+
+
+def test_output_shapes_and_dtypes():
+    keys, prices, valid = make_batch()
+    euros, q2mask, agg = jax.jit(model.nexmark_batch)(keys, prices, valid)
+    assert euros.shape == (model.BATCH,)
+    assert q2mask.shape == (model.BATCH,)
+    assert agg.shape == (model.SLOTS, 2)
+    assert euros.dtype == jnp.float32
+    assert agg.dtype == jnp.float32
+
+
+def test_q1_conversion_matches_oracle():
+    keys, prices, valid = make_batch(1)
+    euros, _, _ = model.nexmark_batch(keys, prices, valid)
+    want = currency_convert_ref(prices * valid, model.EURO_RATE_MILLI / 1000.0)
+    np.testing.assert_allclose(np.asarray(euros), np.asarray(want), rtol=1e-6)
+
+
+def test_q2_mask_matches_oracle():
+    keys, prices, valid = make_batch(2)
+    _, q2mask, _ = model.nexmark_batch(keys, prices, valid)
+    want = auction_filter_ref(keys, model.Q2_MODULUS).astype(np.float32) * np.asarray(
+        valid
+    )
+    np.testing.assert_array_equal(np.asarray(q2mask), np.asarray(want))
+
+
+def test_agg_matches_oracle_and_ignores_padding():
+    keys, prices, valid = make_batch(3, n_valid=100)
+    _, _, agg = model.nexmark_batch(keys, prices, valid)
+    masked_keys = jnp.where(valid > 0.5, keys, -1)
+    vals = jnp.stack([valid, prices * valid], axis=1)
+    want = window_agg_ref(masked_keys, vals, model.SLOTS)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(want), rtol=1e-5, atol=1e-4)
+    # Count column sums to the number of valid events.
+    assert float(agg[:, 0].sum()) == 100.0
+
+
+def test_fully_padded_batch_is_zero():
+    keys, prices, valid = make_batch(4, n_valid=0)
+    euros, q2mask, agg = model.nexmark_batch(keys, prices, valid)
+    assert float(jnp.abs(euros).sum()) == 0.0
+    assert float(q2mask.sum()) == 0.0
+    assert float(jnp.abs(agg).sum()) == 0.0

@@ -1,0 +1,70 @@
+//! Ablation bench: which ingredients of Justin matter (DESIGN.md §4)?
+//!
+//! Sweeps, on the q8/q11 simulations:
+//!   A. Δθ cache-hit threshold (0.5 / 0.8 / 0.95) — when does Justin stop
+//!      recognising memory pressure?
+//!   B. maxLevel (2 / 3 / 4) — how far vertical scaling may go.
+//!   C. improvement hysteresis ε (0 / 0.02 / 0.2) — rollback sensitivity
+//!      (footnote 3 of the paper).
+//!
+//! Run: `cargo bench --bench ablation`
+
+use justin::config::Config;
+use justin::scaler::{Justin, Policy};
+use justin::sim::profiles::query_profile;
+use justin::sim::runner::{resources, run_autoscaling};
+
+fn run_with(query: &str, tweak: impl FnOnce(&mut Config)) -> (usize, u32, u64, bool) {
+    let mut cfg = Config::default();
+    cfg.sim.duration_s = 1800;
+    tweak(&mut cfg);
+    let profile = query_profile(query).unwrap();
+    let mut policy = Justin::new(cfg.scaler.clone());
+    let trace = run_autoscaling(&profile, &mut policy, &cfg);
+    let (cores, mem) = resources(&profile, &trace.final_assignment);
+    (
+        trace.steps(),
+        cores,
+        mem,
+        trace.converged_at_s.is_some(),
+    )
+}
+
+fn main() {
+    for query in ["q11", "q8"] {
+        println!("\n=== {query} ===");
+        println!("A. Δθ (cache-hit threshold):");
+        for theta in [0.5, 0.8, 0.95] {
+            let (steps, cores, mem, conv) =
+                run_with(query, |c| c.scaler.cache_hit_threshold = theta);
+            println!(
+                "   Δθ={theta:<4}: steps={steps} cores={cores} mem={mem} MB converged={conv}"
+            );
+        }
+        println!("B. maxLevel:");
+        for level in [2u32, 3, 4] {
+            let (steps, cores, mem, conv) = run_with(query, |c| c.scaler.max_level = level);
+            println!(
+                "   maxLevel={level}: steps={steps} cores={cores} mem={mem} MB converged={conv}"
+            );
+        }
+        println!("C. hysteresis ε:");
+        for eps in [0.0, 0.02, 0.2] {
+            let (steps, cores, mem, conv) =
+                run_with(query, |c| c.scaler.improvement_epsilon = eps);
+            println!(
+                "   ε={eps:<4}: steps={steps} cores={cores} mem={mem} MB converged={conv}"
+            );
+        }
+    }
+    // Sanity: the default configuration must converge on both queries (the
+    // bench exits non-zero if the core result regresses).
+    for query in ["q11", "q8"] {
+        let (_, _, _, conv) = run_with(query, |_| {});
+        if !conv {
+            eprintln!("FAIL: default Justin config no longer converges on {query}");
+            std::process::exit(1);
+        }
+    }
+    println!("\n[ok] default configuration converges on q11 and q8");
+}

@@ -1,0 +1,81 @@
+//! Bench: end-to-end engine throughput — the L3 hot path.
+//!
+//! * stateless pipeline (q1 shape): events/s through source → map → sink;
+//! * keyed stateful pipeline (q5 shape): windowed aggregation over LSM;
+//! * scalar operator vs the XLA/Pallas batched operator (when artifacts
+//!   exist) — the L1/L2 integration cost on a CPU PJRT backend.
+//!
+//! Run: `cargo bench --bench engine_throughput` (after `make artifacts` for
+//! the XLA rows)
+
+use justin::config::Config;
+use justin::engine::{JobManager, OpFactory, StreamJob};
+use justin::graph::{LogicalGraph, OpKind, Partitioning, Record, ScalingAssignment};
+use justin::metrics::Registry;
+use justin::nexmark::queries::{build, QuerySpec};
+use justin::runtime::{artifacts_dir, SharedModel};
+
+fn run_job(job: &StreamJob, cfg: &Config, events: u64) -> f64 {
+    let mut jm = JobManager::new(cfg.clone());
+    let registry = Registry::new();
+    let assignment = ScalingAssignment::initial(&job.graph);
+    let t0 = std::time::Instant::now();
+    let running = jm.deploy(job, &assignment, &registry, None).unwrap();
+    running.wait_drained().unwrap();
+    events as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.engine.batch_size = 256;
+    cfg.engine.channel_capacity = 64;
+    cfg.engine.flush_interval_ms = 20;
+    let events = 2_000_000u64;
+
+    // q1 (stateless map) at maximum speed.
+    let spec = QuerySpec {
+        rate: 1e9,
+        bounded: Some(events),
+        seed: 1,
+        source_parallelism: 1,
+        window_ms: 1000,
+    };
+    let q1 = build("q1", spec).unwrap();
+    let rate = run_job(&q1, &cfg, events);
+    println!("{:<52} {:>12.0} ev/s", "q1 stateless pipeline (scalar map)", rate);
+
+    // q5 (stateful sliding window over rockslite).
+    let spec5 = QuerySpec {
+        rate: 200_000.0,
+        bounded: Some(400_000),
+        seed: 1,
+        source_parallelism: 1,
+        window_ms: 10,
+    };
+    let q5 = build("q5", spec5).unwrap();
+    let rate5 = run_job(&q5, &cfg, 400_000);
+    println!("{:<52} {:>12.0} ev/s", "q5 keyed sliding-window agg (LSM state)", rate5);
+
+    // XLA batch model micro-rate (per-call latency and events/s).
+    match SharedModel::load(&artifacts_dir()) {
+        Ok(model) => {
+            let keys: Vec<i64> = (0..256).map(|i| i % 64).collect();
+            let prices: Vec<f32> = (0..256).map(|i| i as f32).collect();
+            let stats = justin::bench::harness::bench(
+                "XLA nexmark_batch call (256 events incl. Pallas agg)",
+                50,
+                2_000,
+                || {
+                    model.run(&keys, &prices).unwrap();
+                },
+            );
+            stats.print();
+            println!(
+                "{:<52} {:>12.0} ev/s",
+                "  → implied XLA hot-path rate",
+                256.0 * stats.rate
+            );
+        }
+        Err(e) => println!("(skipping XLA rows: {e}; run `make artifacts`)"),
+    }
+}

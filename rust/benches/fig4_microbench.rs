@@ -1,0 +1,55 @@
+//! Bench: regenerate Figure 4 (§3 microbenchmark) and time the regeneration.
+//! Prints the same rows the paper plots: max achievable rate per
+//! (workload, parallelism, memory) configuration with box statistics.
+//!
+//! Run: `cargo bench --bench fig4_microbench`
+
+use justin::bench::figures::{fig4_print, fig4_series};
+use justin::bench::harness::bench_once;
+use justin::config::Config;
+use justin::engine::operators::AccessMode;
+
+fn main() {
+    let cfg = Config::default();
+    let (cells, stats) = bench_once("fig4: 3 workloads × 20 configs × 120 samples", || {
+        fig4_series(&cfg)
+    });
+    fig4_print(&cells);
+    println!();
+    stats.print();
+
+    // Shape assertions (the paper's takeaways) — fail loudly if the model
+    // drifts.
+    let get = |m: AccessMode, p: u32, mem: u64| {
+        cells
+            .iter()
+            .find(|c| c.workload == m && c.parallelism == p && c.memory_mb == mem)
+            .unwrap()
+    };
+    let checks = [
+        ("Read (8;512) sustained", get(AccessMode::Read, 8, 512).sustained),
+        ("Read (8;256) NOT sustained", !get(AccessMode::Read, 8, 256).sustained),
+        ("Read (4;1024) sustained", get(AccessMode::Read, 4, 1024).sustained),
+        ("Write (8;256) sustained", get(AccessMode::Write, 8, 256).sustained),
+        (
+            "Write flat across memory",
+            (get(AccessMode::Write, 4, 256).p50 / get(AccessMode::Write, 4, 2048).p50 - 1.0)
+                .abs()
+                < 0.1,
+        ),
+        (
+            "Update 128 MB never sustains",
+            !get(AccessMode::Update, 8, 128).sustained,
+        ),
+        ("Update (8;512) sustains", get(AccessMode::Update, 8, 512).sustained),
+    ];
+    println!("\npaper-shape checks:");
+    let mut ok = true;
+    for (name, pass) in checks {
+        println!("  [{}] {name}", if pass { "ok" } else { "FAIL" });
+        ok &= pass;
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,45 @@
+//! Bench: regenerate Figure 5 (§5 evaluation) — DS2 vs Justin on all five
+//! Nexmark panels — and print paper-vs-measured headline rows.
+//!
+//! Run: `cargo bench --bench fig5_autoscaling`
+
+use justin::bench::figures::{fig5_compare, FIG5_QUERIES, PAPER_EXPECTATIONS};
+use justin::bench::harness::bench_once;
+use justin::config::Config;
+
+fn main() {
+    let cfg = Config::default();
+    let mut ok = true;
+    let mut rows = Vec::new();
+    for q in FIG5_QUERIES {
+        let (summary, stats) = bench_once(&format!("fig5 {q}: DS2 + Justin traces"), || {
+            fig5_compare(q, &cfg).unwrap()
+        });
+        summary.print(false);
+        stats.print();
+        let paper = PAPER_EXPECTATIONS.iter().find(|e| e.query == *q).unwrap();
+        // Shape: Justin never uses more resources, and when the paper
+        // reports savings, we must save in the same direction.
+        let cpu_ok = summary.justin_resources.0 <= summary.ds2_resources.0;
+        let mem_ok = summary.justin_resources.1 <= summary.ds2_resources.1;
+        let cpu_dir = paper.cpu_saving < 0.05 || summary.cpu_saving > 0.15;
+        let mem_dir = paper.mem_saving < 0.05 || summary.mem_saving > 0.10;
+        let steps_ok = summary.justin.steps() <= summary.ds2.steps() + 1;
+        let conv = summary.justin.converged_at_s.is_some()
+            && summary.ds2.converged_at_s.is_some();
+        let pass = cpu_ok && mem_ok && cpu_dir && mem_dir && steps_ok && conv;
+        ok &= pass;
+        rows.push((q, pass));
+    }
+    println!("\npaper-shape checks:");
+    for (q, pass) in rows {
+        println!(
+            "  [{}] {q}: Justin ≤ DS2 resources, savings in paper's direction, \
+             steps ≤ DS2+1, both converge",
+            if pass { "ok" } else { "FAIL" }
+        );
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+}

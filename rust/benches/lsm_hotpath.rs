@@ -1,0 +1,89 @@
+//! Bench: rockslite hot paths — put, get (cache-hot and cache-cold), scan —
+//! the L3-side numbers behind the simulator's calibration constants and the
+//! §Perf targets (get-hit ~1 µs, put ~1 µs amortised at small values).
+//!
+//! Run: `cargo bench --bench lsm_hotpath`
+
+use justin::bench::harness::bench;
+use justin::state::lsm::{Db, DbOptions, MB};
+use justin::util::rng::Rng;
+
+fn open(tag: &str, managed_mb: u64) -> Db {
+    let dir =
+        std::env::temp_dir().join(format!("justin-lsmbench-{tag}-{}", std::process::id()));
+    Db::open(DbOptions::for_managed_memory(dir, managed_mb)).unwrap()
+}
+
+fn main() {
+    // Small values (nexmark-like accumulators).
+    let mut db = open("small", 316);
+    let mut i = 0u64;
+    bench(
+        "put 8 B values (amortised, incl. flush/compaction)",
+        10_000,
+        300_000,
+        || {
+            db.put(&(i % 1_000_000).to_be_bytes(), &i.to_le_bytes())
+                .unwrap();
+            i += 1;
+        },
+    )
+    .print();
+    let stats = db.stats();
+    println!(
+        "  after: {} flushes, {} compactions, {} MB disk, levels {:?}",
+        stats.flushes,
+        stats.compactions,
+        stats.disk_bytes / MB,
+        stats.levels
+    );
+
+    // Cache-hot gets: working set fits the cache.
+    let mut hot = open("hot", 632);
+    for k in 0..50_000u64 {
+        hot.put(&k.to_be_bytes(), &[1u8; 100]).unwrap();
+    }
+    hot.flush().unwrap();
+    for k in 0..50_000u64 {
+        hot.get(&k.to_be_bytes()).unwrap(); // warm
+    }
+    let mut rng = Rng::new(1);
+    bench("get hit (warm cache, 50k × 100 B)", 10_000, 200_000, || {
+        let k = rng.gen_range(50_000);
+        hot.get(&k.to_be_bytes()).unwrap();
+    })
+    .print();
+    println!("  θ = {:?}", hot.cache_hit_rate());
+
+    // Cache-cold gets: working set ≫ cache (the Takeaway-2 regime).
+    let mut cold = open("cold", 158);
+    for k in 0..300_000u64 {
+        cold.put(&k.to_be_bytes(), &[1u8; 1000]).unwrap();
+    }
+    cold.flush().unwrap();
+    cold.resize_cache(4 * MB as usize);
+    cold.reset_window_stats();
+    let mut rng = Rng::new(2);
+    bench(
+        "get miss-heavy (300k × 1 KB, 4 MB cache)",
+        2_000,
+        50_000,
+        || {
+            let k = rng.gen_range(300_000);
+            cold.get(&k.to_be_bytes()).unwrap();
+        },
+    )
+    .print();
+    println!("  θ = {:?}", cold.cache_hit_rate());
+
+    // Savepoint scan rate.
+    let t0 = std::time::Instant::now();
+    let all = hot.scan_all().unwrap();
+    let per = t0.elapsed().as_nanos() as f64 / all.len() as f64;
+    println!(
+        "{:<44} {:>12.0} ns/entry  ({} entries)",
+        "scan_all (savepoint export)",
+        per,
+        all.len()
+    );
+}

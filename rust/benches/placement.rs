@@ -1,0 +1,56 @@
+//! Bench: the §4.3 placement mechanism — multidimensional bin packing of
+//! heterogeneous slot requests onto TM pods; throughput + fragmentation.
+//!
+//! Run: `cargo bench --bench placement`
+
+use justin::bench::harness::bench;
+use justin::placement::{Cluster, PodSpec, SlotRequest};
+use justin::util::rng::Rng;
+
+fn requests(n: usize, seed: u64) -> Vec<SlotRequest> {
+    let mut rng = Rng::new(seed);
+    let levels = [0u64, 158, 316, 632];
+    (0..n)
+        .map(|i| SlotRequest {
+            op_name: format!("op{}", i % 8),
+            subtask: i as u32,
+            cores: 1,
+            managed_mb: *rng.choose(&levels),
+        })
+        .collect()
+}
+
+fn main() {
+    let cluster = Cluster::new(PodSpec::paper_default(), 1024);
+    for n in [16usize, 64, 256] {
+        let reqs = requests(n, n as u64);
+        let mut last = None;
+        let stats = bench(&format!("FFD place {n} heterogeneous slots"), 100, 5_000, || {
+            last = Some(cluster.place(&reqs).unwrap());
+        });
+        stats.print();
+        let p = last.unwrap();
+        println!(
+            "  → {} pods, managed fragmentation {:.1}%",
+            p.pod_count(),
+            p.managed_fragmentation() * 100.0
+        );
+    }
+
+    // Homogeneous baseline (DS2's world): perfect packing expected.
+    let reqs: Vec<SlotRequest> = (0..64)
+        .map(|i| SlotRequest {
+            op_name: "op".into(),
+            subtask: i,
+            cores: 1,
+            managed_mb: 158,
+        })
+        .collect();
+    let p = cluster.place(&reqs).unwrap();
+    println!(
+        "homogeneous 64 × 158 MB: {} pods (expected {}), fragmentation {:.1}%",
+        p.pod_count(),
+        64 / 4,
+        p.managed_fragmentation() * 100.0
+    );
+}

@@ -1,0 +1,350 @@
+//! Regeneration of the paper's evaluation artefacts:
+//!
+//! * **Figure 4** — §3 microbenchmark: max achievable rate for Read / Write /
+//!   Update across 19 (parallelism, memory) configurations each.
+//! * **Figure 5 (a–e)** — §5 autoscaling traces (rate, CPU, memory vs time)
+//!   for DS2 vs Justin on q1, q3, q5, q11, q8, plus the headline resource
+//!   comparison.
+
+use crate::config::Config;
+use crate::engine::operators::AccessMode;
+use crate::scaler::{Ds2, Justin};
+use crate::sim::profiles::{microbench_profile, query_profile};
+use crate::sim::runner::{microbench_capacity, resources, run_autoscaling, AutoscaleTrace};
+use crate::util::json::Json;
+
+/// The §3 sweep: parallelism 1–8 × memory 128–2,048 MB (19 configurations
+/// per workload, as in Fig. 4: not the full cross product — memory ≥ the
+/// per-level minimum for each parallelism row the paper plots).
+pub const FIG4_PARALLELISM: &[u32] = &[1, 2, 4, 8];
+pub const FIG4_MEMORY_MB: &[u64] = &[128, 256, 512, 1024, 2048];
+
+/// One Fig. 4 measurement cell.
+#[derive(Debug, Clone)]
+pub struct Fig4Cell {
+    pub workload: AccessMode,
+    pub parallelism: u32,
+    pub memory_mb: u64,
+    /// Box-plot stats over the 10-minute run's 5 s samples, events/s.
+    pub p25: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Did the configuration sustain the workload target rate?
+    pub sustained: bool,
+    pub target: f64,
+}
+
+/// Produce the Fig. 4 series (one cell per configuration per workload).
+pub fn fig4_series(cfg: &Config) -> Vec<Fig4Cell> {
+    let mut out = Vec::new();
+    for mode in [AccessMode::Read, AccessMode::Write, AccessMode::Update] {
+        let query = microbench_profile(mode);
+        for &p in FIG4_PARALLELISM {
+            for &mem in FIG4_MEMORY_MB {
+                // 10 minutes at 5 s samples = 120 samples (§3).
+                let mut samples = microbench_capacity(&query, p, mem, cfg, 120);
+                samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let q = |f: f64| samples[((f * samples.len() as f64) as usize).min(samples.len() - 1)];
+                let p50 = q(0.50);
+                out.push(Fig4Cell {
+                    workload: mode,
+                    parallelism: p,
+                    memory_mb: mem,
+                    p25: q(0.25),
+                    p50,
+                    p75: q(0.75),
+                    min: samples[0],
+                    max: *samples.last().unwrap(),
+                    sustained: p50 >= query.target_rate * 0.98,
+                    target: query.target_rate,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Render Fig. 4 as text (one grid per workload; `*` marks sustained).
+pub fn fig4_print(cells: &[Fig4Cell]) {
+    for mode in [AccessMode::Read, AccessMode::Write, AccessMode::Update] {
+        let target = cells
+            .iter()
+            .find(|c| c.workload == mode)
+            .map(|c| c.target)
+            .unwrap_or(0.0);
+        println!("\nFig 4 — {mode:?} workload (target {target:.0} ev/s; * = sustained)");
+        print!("{:>8}", "p \\ MB");
+        for &mem in FIG4_MEMORY_MB {
+            print!("{mem:>12}");
+        }
+        println!();
+        for &p in FIG4_PARALLELISM {
+            print!("{p:>8}");
+            for &mem in FIG4_MEMORY_MB {
+                let cell = cells
+                    .iter()
+                    .find(|c| c.workload == mode && c.parallelism == p && c.memory_mb == mem)
+                    .unwrap();
+                print!(
+                    "{:>11.0}{}",
+                    cell.p50,
+                    if cell.sustained { "*" } else { " " }
+                );
+            }
+            println!();
+        }
+    }
+}
+
+/// Expected qualitative outcomes from the paper, used to print
+/// paper-vs-measured rows.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperExpectation {
+    pub query: &'static str,
+    /// Paper's final (tasks; MB) for the primary operator — DS2.
+    pub ds2_final: (u32, u64),
+    /// Paper's final (tasks; MB) — Justin.
+    pub justin_final: (u32, u64),
+    /// Paper's reported CPU saving of Justin vs DS2 (fraction; 0 = none).
+    pub cpu_saving: f64,
+    /// Paper's reported memory saving (fraction).
+    pub mem_saving: f64,
+}
+
+/// Figure 5's headline numbers (§5.1).
+pub const PAPER_EXPECTATIONS: &[PaperExpectation] = &[
+    PaperExpectation {
+        query: "q1",
+        ds2_final: (7, 158),
+        justin_final: (7, 0),
+        cpu_saving: 0.0,
+        mem_saving: 0.40,
+    },
+    PaperExpectation {
+        query: "q3",
+        ds2_final: (12, 158),
+        justin_final: (12, 158),
+        cpu_saving: 0.0,
+        mem_saving: 0.10,
+    },
+    PaperExpectation {
+        query: "q5",
+        ds2_final: (24, 158),
+        justin_final: (24, 158),
+        cpu_saving: 0.0,
+        mem_saving: 0.02,
+    },
+    PaperExpectation {
+        query: "q11",
+        ds2_final: (12, 158),
+        justin_final: (6, 316),
+        cpu_saving: 0.48,
+        mem_saving: 0.28,
+    },
+    PaperExpectation {
+        query: "q8",
+        ds2_final: (24, 158),
+        justin_final: (12, 316),
+        cpu_saving: 0.48,
+        mem_saving: 0.27,
+    },
+];
+
+/// Comparison of the two policies on one query.
+#[derive(Debug, Clone)]
+pub struct Fig5Summary {
+    pub query: String,
+    pub target_rate: f64,
+    pub ds2: AutoscaleTrace,
+    pub justin: AutoscaleTrace,
+    pub ds2_resources: (u32, u64),
+    pub justin_resources: (u32, u64),
+    pub cpu_saving: f64,
+    pub mem_saving: f64,
+}
+
+/// Run both policies on `query` and summarize (the Fig. 5 experiment).
+pub fn fig5_compare(query: &str, cfg: &Config) -> crate::Result<Fig5Summary> {
+    let profile = query_profile(query)?;
+    // Slow queries take 4–5 reconfiguration rounds (~190 s each); give the
+    // trace room to show two quiet windows after convergence.
+    let mut cfg = cfg.clone();
+    cfg.sim.duration_s = cfg.sim.duration_s.max(1800);
+    let cfg = &cfg;
+    let mut ds2 = Ds2::new(cfg.scaler.clone());
+    let mut justin = Justin::new(cfg.scaler.clone());
+    let t_ds2 = run_autoscaling(&profile, &mut ds2, cfg);
+    let t_justin = run_autoscaling(&profile, &mut justin, cfg);
+    let r_d = resources(&profile, &t_ds2.final_assignment);
+    let r_j = resources(&profile, &t_justin.final_assignment);
+    Ok(Fig5Summary {
+        query: query.to_string(),
+        target_rate: profile.target_rate,
+        cpu_saving: 1.0 - r_j.0 as f64 / r_d.0.max(1) as f64,
+        mem_saving: 1.0 - r_j.1 as f64 / r_d.1.max(1) as f64,
+        ds2: t_ds2,
+        justin: t_justin,
+        ds2_resources: r_d,
+        justin_resources: r_j,
+    })
+}
+
+impl Fig5Summary {
+    /// Print the trace (downsampled) and the paper-vs-measured row.
+    pub fn print(&self, verbose: bool) {
+        println!(
+            "\nFig 5 — {} (target {:.0} ev/s)",
+            self.query, self.target_rate
+        );
+        for (label, trace, res) in [
+            ("DS2   ", &self.ds2, self.ds2_resources),
+            ("Justin", &self.justin, self.justin_resources),
+        ] {
+            let final_rate = trace
+                .points
+                .iter()
+                .rev()
+                .find(|p| p.rate > 0.0)
+                .map(|p| p.rate)
+                .unwrap_or(0.0);
+            println!(
+                "  {label}: steps={} converged={} final_rate={:.0} cores={} mem={} MB  finals: {}",
+                trace.steps(),
+                trace
+                    .converged_at_s
+                    .map(|t| format!("{t:.0}s"))
+                    .unwrap_or_else(|| "never".into()),
+                final_rate,
+                res.0,
+                res.1,
+                describe_assignment(trace),
+            );
+            if verbose {
+                for p in trace.points.iter().step_by(6) {
+                    println!(
+                        "    t={:>5.0}s rate={:>10.0} cores={:>3} mem={:>6} MB",
+                        p.t_s, p.rate, p.cores, p.memory_mb
+                    );
+                }
+            }
+        }
+        let paper = PAPER_EXPECTATIONS.iter().find(|e| e.query == self.query);
+        if let Some(e) = paper {
+            println!(
+                "  savings: CPU {:>5.1}% (paper {:>4.0}%)  memory {:>5.1}% (paper {:>4.0}%)",
+                self.cpu_saving * 100.0,
+                e.cpu_saving * 100.0,
+                self.mem_saving * 100.0,
+                e.mem_saving * 100.0
+            );
+        }
+    }
+
+    /// JSON record for EXPERIMENTS.md regeneration.
+    pub fn to_json(&self) -> Json {
+        let trace_json = |t: &AutoscaleTrace| {
+            Json::obj(vec![
+                ("steps", Json::num(t.steps() as f64)),
+                (
+                    "converged_s",
+                    t.converged_at_s.map(Json::num).unwrap_or(Json::Null),
+                ),
+                (
+                    "points",
+                    Json::arr(t.points.iter().step_by(6).map(|p| {
+                        Json::arr([
+                            Json::num(p.t_s),
+                            Json::num(p.rate),
+                            Json::num(p.cores as f64),
+                            Json::num(p.memory_mb as f64),
+                        ])
+                    })),
+                ),
+            ])
+        };
+        Json::obj(vec![
+            ("query", Json::str(&self.query)),
+            ("target_rate", Json::num(self.target_rate)),
+            ("ds2", trace_json(&self.ds2)),
+            ("justin", trace_json(&self.justin)),
+            ("cpu_saving", Json::num(self.cpu_saving)),
+            ("mem_saving", Json::num(self.mem_saving)),
+        ])
+    }
+}
+
+fn describe_assignment(trace: &AutoscaleTrace) -> String {
+    trace
+        .final_assignment
+        .ops
+        .iter()
+        .filter(|(name, _)| *name != "source")
+        .map(|(name, s)| {
+            let mem = match s.memory_level {
+                None => "⊥".to_string(),
+                Some(l) => format!("{}", 158u64 << l.min(16)),
+            };
+            format!("{}=({};{})", name, s.parallelism, mem)
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// All five Fig. 5 panels in paper order.
+pub const FIG5_QUERIES: &[&str] = &["q1", "q3", "q5", "q11", "q8"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> Config {
+        let mut c = Config::default();
+        c.sim.duration_s = 1500;
+        c.sim.seed = 3;
+        c
+    }
+
+    #[test]
+    fn fig4_has_57_cells_with_expected_shape() {
+        let cells = fig4_series(&fast_cfg());
+        assert_eq!(cells.len(), 3 * FIG4_PARALLELISM.len() * FIG4_MEMORY_MB.len());
+        let get = |m: AccessMode, p: u32, mem: u64| {
+            cells
+                .iter()
+                .find(|c| c.workload == m && c.parallelism == p && c.memory_mb == mem)
+                .unwrap()
+        };
+        // Takeaway 2 (Read): (8;512) sustains, (8;256) does not; (4;1024)
+        // sustains, (4;512) does not.
+        assert!(get(AccessMode::Read, 8, 512).sustained);
+        assert!(!get(AccessMode::Read, 8, 256).sustained);
+        assert!(get(AccessMode::Read, 4, 1024).sustained);
+        assert!(!get(AccessMode::Read, 4, 512).sustained);
+        // Takeaway 3 (Write): flat in memory; reached at p=8.
+        assert!(get(AccessMode::Write, 8, 256).sustained);
+        assert!(get(AccessMode::Write, 8, 2048).sustained);
+        let w256 = get(AccessMode::Write, 4, 256).p50;
+        let w2048 = get(AccessMode::Write, 4, 2048).p50;
+        assert!((w256 / w2048 - 1.0).abs() < 0.1, "write flat: {w256} vs {w2048}");
+        // Takeaway 4 (Update): 128 MB never sustains; p=8 with ≥512 does.
+        for p in FIG4_PARALLELISM {
+            assert!(!get(AccessMode::Update, *p, 128).sustained);
+        }
+        assert!(get(AccessMode::Update, 8, 512).sustained);
+        assert!(!get(AccessMode::Update, 4, 512).sustained);
+    }
+
+    #[test]
+    fn fig5_q11_headline() {
+        let s = fig5_compare("q11", &fast_cfg()).unwrap();
+        assert!(s.cpu_saving > 0.2, "cpu saving {}", s.cpu_saving);
+        assert!(s.mem_saving > 0.1, "mem saving {}", s.mem_saving);
+        assert!(s.justin.converged_at_s.is_some());
+        assert!(s.ds2.converged_at_s.is_some());
+        // JSON round-trips.
+        let json = s.to_json().to_string();
+        assert!(crate::util::json::parse(&json).is_ok());
+    }
+}

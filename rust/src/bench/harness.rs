@@ -1,0 +1,95 @@
+//! Minimal wall-clock benchmark harness: warmup + timed iterations with
+//! mean / p50 / p99 reporting (criterion-flavoured, hand-rolled).
+
+use crate::util::histogram::Histogram;
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub min_ns: u64,
+    /// Iterations per second at the mean.
+    pub rate: f64,
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>12.0} ns/iter  p50 {:>10} ns  p99 {:>10} ns  ({:.0}/s)",
+            self.name, self.mean_ns, self.p50_ns, self.p99_ns, self.rate
+        );
+    }
+}
+
+/// Run `f` for `warmup` untimed and `iters` timed iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut hist = Histogram::new();
+    let total_start = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        hist.record(t0.elapsed().as_nanos() as u64);
+    }
+    let total = total_start.elapsed().as_nanos() as f64;
+    let mean = total / iters.max(1) as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: hist.p50(),
+        p99_ns: hist.p99(),
+        min_ns: hist.min(),
+        rate: 1e9 / mean.max(1.0),
+    }
+}
+
+/// Time a single run of `f` (for end-to-end benches where one iteration is
+/// the whole experiment); returns (result, stats).
+pub fn bench_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, BenchStats) {
+    let t0 = Instant::now();
+    let out = f();
+    let ns = t0.elapsed().as_nanos() as u64;
+    (
+        out,
+        BenchStats {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns: ns as f64,
+            p50_ns: ns,
+            p99_ns: ns,
+            min_ns: ns,
+            rate: 1e9 / ns.max(1) as f64,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let stats = bench("spin", 2, 20, || {
+            std::hint::black_box((0..1000u64).sum::<u64>());
+        });
+        assert_eq!(stats.iters, 20);
+        assert!(stats.mean_ns > 0.0);
+        assert!(stats.p99_ns >= stats.p50_ns);
+        assert!(stats.min_ns <= stats.p50_ns);
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let (v, stats) = bench_once("one", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(stats.iters, 1);
+    }
+}

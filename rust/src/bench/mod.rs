@@ -1,0 +1,8 @@
+//! Benchmark harness (no `criterion` in the offline cache) and the figure
+//! regeneration routines shared by `rust/benches/*` and `examples/*`.
+
+pub mod figures;
+pub mod harness;
+
+pub use figures::{fig4_series, fig5_compare, Fig4Cell, Fig5Summary, PAPER_EXPECTATIONS};
+pub use harness::{bench, BenchStats};

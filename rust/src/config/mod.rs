@@ -1,0 +1,72 @@
+//! Configuration: a TOML-subset parser plus the typed configuration tree for
+//! the engine, state backend, auto-scalers, cluster and simulator.
+//!
+//! The subset covers what real deployment configs need: `[section.sub]`
+//! headers, `key = value` with strings, integers, floats, booleans and flat
+//! arrays, comments with `#`. (No `serde`/`toml` crates offline.)
+
+mod toml;
+mod types;
+
+pub use toml::{parse_toml, TomlDoc, TomlValue};
+pub use types::*;
+
+use std::path::Path;
+
+/// Load a [`Config`] from a TOML file; missing keys fall back to defaults.
+pub fn load(path: &Path) -> crate::Result<Config> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    from_str(&text)
+}
+
+/// Parse a [`Config`] from TOML text.
+pub fn from_str(text: &str) -> crate::Result<Config> {
+    let doc = parse_toml(text).map_err(|e| anyhow::anyhow!("config parse error: {e}"))?;
+    Config::from_toml(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_from_empty() {
+        let c = from_str("").unwrap();
+        assert_eq!(c.cluster.tm_cores, 4);
+        assert_eq!(c.cluster.tm_slots, 4);
+        assert_eq!(c.scaler.max_level, 3);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let c = from_str(
+            r#"
+            # test config
+            [cluster]
+            nodes = 4
+            tm_memory_mb = 4096
+
+            [scaler]
+            policy = "justin"
+            cache_hit_threshold = 0.75
+            latency_threshold_us = 1500
+
+            [engine]
+            batch_size = 512
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.cluster.nodes, 4);
+        assert_eq!(c.cluster.tm_memory_mb, 4096);
+        assert_eq!(c.scaler.policy, ScalerKind::Justin);
+        assert!((c.scaler.cache_hit_threshold - 0.75).abs() < 1e-9);
+        assert_eq!(c.scaler.latency_threshold_us, 1500);
+        assert_eq!(c.engine.batch_size, 512);
+    }
+
+    #[test]
+    fn bad_policy_rejected() {
+        assert!(from_str("[scaler]\npolicy = \"nope\"").is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! TOML-subset parser: sections, dotted section names, scalar values,
+//! flat arrays, `#` comments. Returns a flat `section.key -> value` map.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML scalar or flat array.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().and_then(|x| u64::try_from(x).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: flat map keyed by `section.key` (top-level keys have no
+/// section prefix).
+pub type TomlDoc = BTreeMap<String, TomlValue>;
+
+/// Parse TOML-subset text.
+pub fn parse_toml(text: &str) -> Result<TomlDoc, String> {
+    let mut doc = TomlDoc::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(value.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.insert(full, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue, String> {
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {text:?}"))?;
+        return Ok(TomlValue::Str(unescape(inner)));
+    }
+    if text == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if text == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array: {text:?}"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = split_array_items(inner)
+            .into_iter()
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    // Numbers: underscores allowed as separators.
+    let clean: String = text.chars().filter(|&c| c != '_').collect();
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {text:?}"))
+}
+
+fn split_array_items(inner: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                items.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&inner[start..]);
+    items
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_and_scalars() {
+        let doc = parse_toml(
+            r#"
+            top = 1
+            [a]
+            s = "hello"
+            i = 42
+            f = 2.5
+            b = true
+            [a.b]
+            x = -7
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc["top"], TomlValue::Int(1));
+        assert_eq!(doc["a.s"], TomlValue::Str("hello".into()));
+        assert_eq!(doc["a.i"], TomlValue::Int(42));
+        assert_eq!(doc["a.f"], TomlValue::Float(2.5));
+        assert_eq!(doc["a.b"], TomlValue::Bool(true));
+        assert_eq!(doc["a.b.x"], TomlValue::Int(-7));
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let doc = parse_toml("x = 1_000_000 # one million\n# full line\ny = 2").unwrap();
+        assert_eq!(doc["x"], TomlValue::Int(1_000_000));
+        assert_eq!(doc["y"], TomlValue::Int(2));
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let doc = parse_toml(r##"s = "a#b" # comment"##).unwrap();
+        assert_eq!(doc["s"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = parse_toml(r#"xs = [1, 2, 3]
+ss = ["a", "b,c"]"#).unwrap();
+        assert_eq!(
+            doc["xs"],
+            TomlValue::Arr(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ])
+        );
+        assert_eq!(
+            doc["ss"],
+            TomlValue::Arr(vec![
+                TomlValue::Str("a".into()),
+                TomlValue::Str("b,c".into())
+            ])
+        );
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_toml("[unclosed").is_err());
+        assert!(parse_toml("novalue").is_err());
+        assert!(parse_toml("x = ").is_err());
+        assert!(parse_toml("x = \"open").is_err());
+    }
+
+    #[test]
+    fn escapes() {
+        let doc = parse_toml(r#"s = "a\nb\"c""#).unwrap();
+        assert_eq!(doc["s"], TomlValue::Str("a\nb\"c".into()));
+    }
+}

@@ -1,0 +1,469 @@
+//! Typed configuration tree with the paper's defaults (§5 experimental
+//! setup) and conversion from the parsed TOML document.
+
+use super::toml::TomlDoc;
+use anyhow::{bail, Context};
+
+/// Which auto-scaling policy drives reconfiguration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalerKind {
+    /// No auto-scaling (static configuration).
+    None,
+    /// The DS2 baseline (CPU-only, horizontal).
+    Ds2,
+    /// The paper's hybrid CPU/memory policy.
+    Justin,
+}
+
+impl std::str::FromStr for ScalerKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "none" => Ok(ScalerKind::None),
+            "ds2" => Ok(ScalerKind::Ds2),
+            "justin" => Ok(ScalerKind::Justin),
+            other => bail!("unknown scaler policy {other:?} (none|ds2|justin)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ScalerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ScalerKind::None => "none",
+            ScalerKind::Ds2 => "ds2",
+            ScalerKind::Justin => "justin",
+        })
+    }
+}
+
+/// Cluster topology (§5: 7 nodes; 4 host TMs; each TM 4 cores / 2 GB / 4 TSs).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Worker nodes available for Task Managers.
+    pub nodes: u32,
+    /// CPU cores per node.
+    pub node_cores: u32,
+    /// Memory per node in MB.
+    pub node_memory_mb: u64,
+    /// CPU cores per Task Manager pod.
+    pub tm_cores: u32,
+    /// Memory per Task Manager pod in MB.
+    pub tm_memory_mb: u64,
+    /// Task slots per Task Manager.
+    pub tm_slots: u32,
+    /// Default managed memory per task slot in MB (§5: 158 MB).
+    pub managed_mb_per_slot: u64,
+    /// Per-TM framework/JVM overhead in MB (heap + network + framework).
+    pub tm_overhead_mb: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 4,
+            node_cores: 20,
+            node_memory_mb: 128 * 1024,
+            tm_cores: 4,
+            tm_memory_mb: 2048,
+            tm_slots: 4,
+            managed_mb_per_slot: 158,
+            // 2048 total - 4*158 managed = 1416 for heap/network/framework;
+            // DS2's q1 7-task figure (2,317 MB) implies ~173 MB/slot overhead
+            // plus per-TM fixed costs; we model a per-TM lump.
+            tm_overhead_mb: 1416,
+        }
+    }
+}
+
+/// Auto-scaler parameters (§4 Algorithm 1 + §5 setup).
+#[derive(Debug, Clone)]
+pub struct ScalerConfig {
+    pub policy: ScalerKind,
+    /// Busyness band: reconfigure when outside [low, high] (§5: 20–80%).
+    pub busy_low: f64,
+    pub busy_high: f64,
+    /// Target busyness after reconfiguration for DS2's rate model.
+    pub target_busy: f64,
+    /// Δθ — cache hit rate threshold (§5: 80%).
+    pub cache_hit_threshold: f64,
+    /// Δτ — average state access latency threshold in µs (§5: 1 ms).
+    pub latency_threshold_us: u64,
+    /// maxLevel — maximum memory level (Algorithm 1: 3).
+    pub max_level: u32,
+    /// Hysteresis: minimum relative improvement for "did it improve?".
+    pub improvement_epsilon: f64,
+    /// Decision window (§5: 2 minutes), seconds.
+    pub decision_window_s: u64,
+    /// Stabilization period after a reconfiguration (§5: 1 minute), seconds.
+    pub stabilization_s: u64,
+    /// Metric scrape granularity (§5: 5 seconds), seconds.
+    pub metric_granularity_s: u64,
+    /// Maximum parallelism DS2 may assign to one operator.
+    pub max_parallelism: u32,
+}
+
+impl Default for ScalerConfig {
+    fn default() -> Self {
+        Self {
+            policy: ScalerKind::Justin,
+            busy_low: 0.2,
+            busy_high: 0.8,
+            target_busy: 0.7,
+            cache_hit_threshold: 0.8,
+            latency_threshold_us: 1000,
+            max_level: 3,
+            improvement_epsilon: 0.02,
+            decision_window_s: 120,
+            stabilization_s: 60,
+            metric_granularity_s: 5,
+            max_parallelism: 64,
+        }
+    }
+}
+
+/// Engine execution parameters.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Events per exchange buffer / XLA compute batch.
+    pub batch_size: usize,
+    /// Bounded channel capacity (in batches) between tasks — the
+    /// backpressure knob.
+    pub channel_capacity: usize,
+    /// Number of key groups (Flink default 128): unit of state re-assignment.
+    pub key_groups: u32,
+    /// Flush interval for partially-filled output buffers, milliseconds.
+    pub flush_interval_ms: u64,
+    /// Use the XLA runtime for operator batch compute when artifacts exist.
+    pub use_xla: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 256,
+            channel_capacity: 8,
+            key_groups: 128,
+            flush_interval_ms: 50,
+            use_xla: false,
+        }
+    }
+}
+
+/// LSM ("rockslite") parameters mirroring the RocksDB setup in §3.
+#[derive(Debug, Clone)]
+pub struct LsmConfig {
+    /// Maximum MemTable size in MB (§3: 64 MB, power-of-2 granularity).
+    pub memtable_max_mb: u64,
+    /// Block size for SSTable data blocks, KB.
+    pub block_size_kb: u64,
+    /// Level-0 compaction trigger (number of L0 files).
+    pub l0_compaction_trigger: usize,
+    /// Level size multiplier.
+    pub level_multiplier: u64,
+    /// Max levels.
+    pub max_levels: usize,
+    /// Bloom filter bits per key.
+    pub bloom_bits_per_key: u32,
+}
+
+impl Default for LsmConfig {
+    fn default() -> Self {
+        Self {
+            memtable_max_mb: 64,
+            block_size_kb: 4,
+            l0_compaction_trigger: 4,
+            level_multiplier: 10,
+            max_levels: 7,
+            bloom_bits_per_key: 10,
+        }
+    }
+}
+
+/// Simulator parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// PRNG seed for workload + service-time noise.
+    pub seed: u64,
+    /// Virtual experiment duration, seconds.
+    pub duration_s: u64,
+    /// Service-time calibration constants, see `sim::calibrate`.
+    pub stateless_service_us: f64,
+    /// LSM get on cache hit, µs.
+    pub get_hit_us: f64,
+    /// LSM get on cache miss (disk/SSD path), µs.
+    pub get_miss_us: f64,
+    /// LSM put (memtable insert amortised with flush/compaction), µs.
+    pub put_us: f64,
+    /// Reconfiguration downtime (savepoint + redeploy), seconds.
+    pub reconfig_downtime_s: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0xBEEF,
+            duration_s: 900,
+            stateless_service_us: 2.0,
+            get_hit_us: 1.5,
+            get_miss_us: 200.0,
+            put_us: 44.0,
+            reconfig_downtime_s: 10.0,
+        }
+    }
+}
+
+/// Root configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub cluster: ClusterConfig,
+    pub scaler: ScalerConfig,
+    pub engine: EngineConfig,
+    pub lsm: LsmConfig,
+    pub sim: SimConfig,
+}
+
+macro_rules! get_num {
+    ($doc:expr, $key:expr, $field:expr, $ty:ty) => {
+        if let Some(v) = $doc.get($key) {
+            $field = v
+                .as_i64()
+                .with_context(|| format!("{} must be an integer", $key))? as $ty;
+        }
+    };
+}
+
+macro_rules! get_f64 {
+    ($doc:expr, $key:expr, $field:expr) => {
+        if let Some(v) = $doc.get($key) {
+            $field = v
+                .as_f64()
+                .with_context(|| format!("{} must be a number", $key))?;
+        }
+    };
+}
+
+impl Config {
+    /// Build from a parsed TOML document; unknown keys are rejected to catch
+    /// typos in experiment configs.
+    pub fn from_toml(doc: &TomlDoc) -> crate::Result<Config> {
+        let mut c = Config::default();
+
+        const KNOWN: &[&str] = &[
+            "cluster.nodes",
+            "cluster.node_cores",
+            "cluster.node_memory_mb",
+            "cluster.tm_cores",
+            "cluster.tm_memory_mb",
+            "cluster.tm_slots",
+            "cluster.managed_mb_per_slot",
+            "cluster.tm_overhead_mb",
+            "scaler.policy",
+            "scaler.busy_low",
+            "scaler.busy_high",
+            "scaler.target_busy",
+            "scaler.cache_hit_threshold",
+            "scaler.latency_threshold_us",
+            "scaler.max_level",
+            "scaler.improvement_epsilon",
+            "scaler.decision_window_s",
+            "scaler.stabilization_s",
+            "scaler.metric_granularity_s",
+            "scaler.max_parallelism",
+            "engine.batch_size",
+            "engine.channel_capacity",
+            "engine.key_groups",
+            "engine.flush_interval_ms",
+            "engine.use_xla",
+            "lsm.memtable_max_mb",
+            "lsm.block_size_kb",
+            "lsm.l0_compaction_trigger",
+            "lsm.level_multiplier",
+            "lsm.max_levels",
+            "lsm.bloom_bits_per_key",
+            "sim.seed",
+            "sim.duration_s",
+            "sim.stateless_service_us",
+            "sim.get_hit_us",
+            "sim.get_miss_us",
+            "sim.put_us",
+            "sim.reconfig_downtime_s",
+        ];
+        for key in doc.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                bail!("unknown config key: {key}");
+            }
+        }
+
+        get_num!(doc, "cluster.nodes", c.cluster.nodes, u32);
+        get_num!(doc, "cluster.node_cores", c.cluster.node_cores, u32);
+        get_num!(doc, "cluster.node_memory_mb", c.cluster.node_memory_mb, u64);
+        get_num!(doc, "cluster.tm_cores", c.cluster.tm_cores, u32);
+        get_num!(doc, "cluster.tm_memory_mb", c.cluster.tm_memory_mb, u64);
+        get_num!(doc, "cluster.tm_slots", c.cluster.tm_slots, u32);
+        get_num!(
+            doc,
+            "cluster.managed_mb_per_slot",
+            c.cluster.managed_mb_per_slot,
+            u64
+        );
+        get_num!(doc, "cluster.tm_overhead_mb", c.cluster.tm_overhead_mb, u64);
+
+        if let Some(v) = doc.get("scaler.policy") {
+            let s = v
+                .as_str()
+                .context("scaler.policy must be a string")?;
+            c.scaler.policy = s.parse()?;
+        }
+        get_f64!(doc, "scaler.busy_low", c.scaler.busy_low);
+        get_f64!(doc, "scaler.busy_high", c.scaler.busy_high);
+        get_f64!(doc, "scaler.target_busy", c.scaler.target_busy);
+        get_f64!(
+            doc,
+            "scaler.cache_hit_threshold",
+            c.scaler.cache_hit_threshold
+        );
+        get_num!(
+            doc,
+            "scaler.latency_threshold_us",
+            c.scaler.latency_threshold_us,
+            u64
+        );
+        get_num!(doc, "scaler.max_level", c.scaler.max_level, u32);
+        get_f64!(
+            doc,
+            "scaler.improvement_epsilon",
+            c.scaler.improvement_epsilon
+        );
+        get_num!(
+            doc,
+            "scaler.decision_window_s",
+            c.scaler.decision_window_s,
+            u64
+        );
+        get_num!(doc, "scaler.stabilization_s", c.scaler.stabilization_s, u64);
+        get_num!(
+            doc,
+            "scaler.metric_granularity_s",
+            c.scaler.metric_granularity_s,
+            u64
+        );
+        get_num!(doc, "scaler.max_parallelism", c.scaler.max_parallelism, u32);
+
+        get_num!(doc, "engine.batch_size", c.engine.batch_size, usize);
+        get_num!(
+            doc,
+            "engine.channel_capacity",
+            c.engine.channel_capacity,
+            usize
+        );
+        get_num!(doc, "engine.key_groups", c.engine.key_groups, u32);
+        get_num!(
+            doc,
+            "engine.flush_interval_ms",
+            c.engine.flush_interval_ms,
+            u64
+        );
+        if let Some(v) = doc.get("engine.use_xla") {
+            c.engine.use_xla = v.as_bool().context("engine.use_xla must be a bool")?;
+        }
+
+        get_num!(doc, "lsm.memtable_max_mb", c.lsm.memtable_max_mb, u64);
+        get_num!(doc, "lsm.block_size_kb", c.lsm.block_size_kb, u64);
+        get_num!(
+            doc,
+            "lsm.l0_compaction_trigger",
+            c.lsm.l0_compaction_trigger,
+            usize
+        );
+        get_num!(doc, "lsm.level_multiplier", c.lsm.level_multiplier, u64);
+        get_num!(doc, "lsm.max_levels", c.lsm.max_levels, usize);
+        get_num!(doc, "lsm.bloom_bits_per_key", c.lsm.bloom_bits_per_key, u32);
+
+        get_num!(doc, "sim.seed", c.sim.seed, u64);
+        get_num!(doc, "sim.duration_s", c.sim.duration_s, u64);
+        get_f64!(doc, "sim.stateless_service_us", c.sim.stateless_service_us);
+        get_f64!(doc, "sim.get_hit_us", c.sim.get_hit_us);
+        get_f64!(doc, "sim.get_miss_us", c.sim.get_miss_us);
+        get_f64!(doc, "sim.put_us", c.sim.put_us);
+        get_f64!(
+            doc,
+            "sim.reconfig_downtime_s",
+            c.sim.reconfig_downtime_s
+        );
+
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Sanity-check invariants.
+    pub fn validate(&self) -> crate::Result<()> {
+        if !(0.0..=1.0).contains(&self.scaler.busy_low)
+            || !(0.0..=1.0).contains(&self.scaler.busy_high)
+            || self.scaler.busy_low >= self.scaler.busy_high
+        {
+            bail!("scaler busy band must satisfy 0 <= low < high <= 1");
+        }
+        if !(0.0..=1.0).contains(&self.scaler.cache_hit_threshold) {
+            bail!("cache_hit_threshold must be in [0,1]");
+        }
+        if self.cluster.tm_slots == 0 || self.cluster.tm_cores == 0 {
+            bail!("task managers need at least one slot and one core");
+        }
+        if self.engine.batch_size == 0 || self.engine.channel_capacity == 0 {
+            bail!("engine batch size and channel capacity must be positive");
+        }
+        if self.engine.key_groups == 0 {
+            bail!("key_groups must be positive");
+        }
+        Ok(())
+    }
+
+    /// Managed memory in MB for memory level `x` (§4.1: level x = 2^x × min).
+    pub fn managed_mb_for_level(&self, level: u32) -> u64 {
+        self.cluster.managed_mb_per_slot << level.min(16)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_setup() {
+        let c = Config::default();
+        assert_eq!(c.cluster.tm_cores, 4);
+        assert_eq!(c.cluster.tm_memory_mb, 2048);
+        assert_eq!(c.cluster.tm_slots, 4);
+        assert_eq!(c.cluster.managed_mb_per_slot, 158);
+        assert!((c.scaler.busy_low - 0.2).abs() < 1e-9);
+        assert!((c.scaler.busy_high - 0.8).abs() < 1e-9);
+        assert!((c.scaler.cache_hit_threshold - 0.8).abs() < 1e-9);
+        assert_eq!(c.scaler.latency_threshold_us, 1000);
+        assert_eq!(c.scaler.max_level, 3);
+        assert_eq!(c.scaler.decision_window_s, 120);
+        assert_eq!(c.scaler.stabilization_s, 60);
+        assert_eq!(c.scaler.metric_granularity_s, 5);
+    }
+
+    #[test]
+    fn memory_levels_double() {
+        let c = Config::default();
+        assert_eq!(c.managed_mb_for_level(0), 158);
+        assert_eq!(c.managed_mb_for_level(1), 316);
+        assert_eq!(c.managed_mb_for_level(2), 632);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = super::super::parse_toml("[cluster]\nnoodles = 7").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn invalid_band_rejected() {
+        let doc =
+            super::super::parse_toml("[scaler]\nbusy_low = 0.9\nbusy_high = 0.5").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! "streamline" — the distributed stream processing engine.
+//!
+//! A Flink-shaped runtime in miniature: logical graphs deploy as one thread
+//! per task; bounded channels give credit-style backpressure; keyed state
+//! lives in per-task rockslite instances; event time flows via watermarks;
+//! reconfiguration is stop-with-savepoint + key-group redistribution.
+//!
+//! | Flink concept        | here                                  |
+//! |----------------------|---------------------------------------|
+//! | JobManager           | [`job::JobManager`]                   |
+//! | TaskManager/TaskSlot | [`crate::placement`] pods + slots     |
+//! | Task (thread)        | [`task::TaskHarness`]                 |
+//! | Network buffers      | [`exchange`] bounded channels         |
+//! | RocksDB backend      | [`crate::state::lsm`]                 |
+//! | Savepoint + rescale  | [`savepoint`]                         |
+//! | Metrics reporter     | [`scrape::Scraper`]                   |
+
+pub mod controller;
+pub mod exchange;
+pub mod job;
+pub mod operators;
+pub mod savepoint;
+pub mod scrape;
+pub mod sources;
+pub mod task;
+pub mod window;
+pub mod xla_op;
+
+pub use controller::{autoscale_live, LiveReconfig, LiveReport};
+pub use job::{JobManager, OpFactory, RunningJob, StreamJob};
+pub use operators::{
+    AccessMode, Aggregator, CountAggregator, FlatMapOp, IncrementalJoinOp, KeyedWindowAggregate,
+    KvStoreOp, MapOp, OpCtx, Operator, SinkOp, Source, SourceBatch, SumPriceAggregator,
+    WindowedJoinOp,
+};
+pub use savepoint::{OperatorState, Savepoint, TaskRestore};
+pub use scrape::Scraper;
+pub use sources::RateLimitedSource;
+pub use window::{Window, WindowAssigner};
+pub use xla_op::{XlaCurrencyMapOp, XlaWindowCountOp};

@@ -1,0 +1,1069 @@
+//! Operator implementations: map/filter/flatmap, keyed window aggregation
+//! (tumbling/sliding/session), incremental and windowed joins, the §3
+//! microbenchmark state operator, sinks, and the source trait.
+
+use super::window::{Window, WindowAssigner};
+use crate::graph::{key_to_group, Record};
+use crate::state::{state_key, StateBackend};
+use crate::util::hash::FxHashMap;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Execution context handed to operators.
+pub struct OpCtx<'a> {
+    /// Emit buffer — drained to the output partitions by the task loop.
+    pub out: &'a mut Vec<Record>,
+    /// The task's keyed state backend.
+    pub state: &'a mut dyn StateBackend,
+    /// Number of key groups in the job.
+    pub key_groups: u32,
+    /// Current combined input watermark.
+    pub watermark: u64,
+}
+
+impl OpCtx<'_> {
+    /// State key for `user_key` under this job's key-group scheme.
+    pub fn skey(&self, user_key: u64, suffix: &[u8]) -> Vec<u8> {
+        let group = key_to_group(user_key, self.key_groups);
+        let mut user = user_key.to_be_bytes().to_vec();
+        user.extend_from_slice(suffix);
+        state_key(group, &user)
+    }
+}
+
+/// A (non-source) streaming operator.
+pub trait Operator: Send {
+    /// Process one record arriving on `port`.
+    fn on_record(&mut self, port: usize, rec: Record, ctx: &mut OpCtx) -> Result<()>;
+
+    /// The combined input watermark advanced (fire timers/windows).
+    fn on_watermark(&mut self, _wm: u64, _ctx: &mut OpCtx) -> Result<()> {
+        Ok(())
+    }
+
+    /// Called once before the task snapshots state for a savepoint.
+    fn on_drain(&mut self, _ctx: &mut OpCtx) -> Result<()> {
+        Ok(())
+    }
+
+    /// Non-keyed-state bookkeeping (pending windows, sessions) exported per
+    /// key group for redistribution on rescale.
+    fn aux_snapshot(&self) -> Vec<(u16, Vec<u8>)> {
+        Vec::new()
+    }
+
+    /// Restore bookkeeping from fragments of the previous configuration.
+    fn aux_restore(&mut self, _frags: &[Vec<u8>]) {}
+}
+
+/// Stateless 1→(0|1) transform from a closure.
+pub struct MapOp<F: FnMut(Record) -> Option<Record> + Send> {
+    pub f: F,
+}
+
+impl<F: FnMut(Record) -> Option<Record> + Send> Operator for MapOp<F> {
+    fn on_record(&mut self, _port: usize, rec: Record, ctx: &mut OpCtx) -> Result<()> {
+        if let Some(out) = (self.f)(rec) {
+            ctx.out.push(out);
+        }
+        Ok(())
+    }
+}
+
+/// Stateless 1→N transform from a closure.
+pub struct FlatMapOp<F: FnMut(Record, &mut Vec<Record>) + Send> {
+    pub f: F,
+}
+
+impl<F: FnMut(Record, &mut Vec<Record>) + Send> Operator for FlatMapOp<F> {
+    fn on_record(&mut self, _port: usize, rec: Record, ctx: &mut OpCtx) -> Result<()> {
+        (self.f)(rec, ctx.out);
+        Ok(())
+    }
+}
+
+/// Terminal operator: swallows records (the task's `records_in` counter is
+/// the sink throughput metric).
+#[derive(Default)]
+pub struct SinkOp;
+
+impl Operator for SinkOp {
+    fn on_record(&mut self, _port: usize, _rec: Record, _ctx: &mut OpCtx) -> Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Windowed aggregation
+// ---------------------------------------------------------------------------
+
+/// Incremental aggregate over a window's records, with a byte-serializable
+/// accumulator (it lives in the state backend between events — this is the
+/// read-modify-write pattern whose latency Justin watches).
+pub trait Aggregator: Send {
+    fn init(&self) -> Vec<u8>;
+    fn add(&self, acc: &mut Vec<u8>, rec: &Record);
+    /// Produce output records when the window fires.
+    fn result(&self, key: u64, window: Window, acc: &[u8], out: &mut Vec<Record>);
+}
+
+/// Count of records per key.
+pub struct CountAggregator;
+
+impl Aggregator for CountAggregator {
+    fn init(&self) -> Vec<u8> {
+        0i64.to_le_bytes().to_vec()
+    }
+
+    fn add(&self, acc: &mut Vec<u8>, _rec: &Record) {
+        let n = i64::from_le_bytes(acc[..8].try_into().unwrap()) + 1;
+        acc[..8].copy_from_slice(&n.to_le_bytes());
+    }
+
+    fn result(&self, key: u64, window: Window, acc: &[u8], out: &mut Vec<Record>) {
+        let n = i64::from_le_bytes(acc[..8].try_into().unwrap());
+        out.push(Record::Pair {
+            key,
+            value: n,
+            ts: window.end,
+        });
+    }
+}
+
+/// Sum of bid prices per key.
+pub struct SumPriceAggregator;
+
+impl Aggregator for SumPriceAggregator {
+    fn init(&self) -> Vec<u8> {
+        0i64.to_le_bytes().to_vec()
+    }
+
+    fn add(&self, acc: &mut Vec<u8>, rec: &Record) {
+        let add = match rec {
+            Record::Bid { price, .. } => *price as i64,
+            Record::Pair { value, .. } => *value,
+            _ => 0,
+        };
+        let n = i64::from_le_bytes(acc[..8].try_into().unwrap()) + add;
+        acc[..8].copy_from_slice(&n.to_le_bytes());
+    }
+
+    fn result(&self, key: u64, window: Window, acc: &[u8], out: &mut Vec<Record>) {
+        let n = i64::from_le_bytes(acc[..8].try_into().unwrap());
+        out.push(Record::Pair {
+            key,
+            value: n,
+            ts: window.end,
+        });
+    }
+}
+
+/// Keyed windowed aggregation (group-by + aggregate, §2's word-count Count
+/// operator, q5's sliding count, q11's session count).
+///
+/// Accumulators live in the state backend under
+/// `state_key(group, key ++ window)`. Window bookkeeping (which windows are
+/// pending per key) is in-memory, exported via `aux_snapshot` on rescale.
+pub struct KeyedWindowAggregate<A: Aggregator> {
+    pub key_fn: fn(&Record) -> u64,
+    pub assigner: WindowAssigner,
+    pub aggregator: A,
+    /// Pending windows ordered by end timestamp: (end, key, start).
+    pending: BTreeMap<(u64, u64, u64), ()>,
+    /// Active session per key (session windows only).
+    sessions: FxHashMap<u64, Window>,
+    /// Drop events older than the watermark? (late-event policy: drop).
+    pub allow_lateness_ms: u64,
+}
+
+impl<A: Aggregator> KeyedWindowAggregate<A> {
+    pub fn new(key_fn: fn(&Record) -> u64, assigner: WindowAssigner, aggregator: A) -> Self {
+        Self {
+            key_fn,
+            assigner,
+            aggregator,
+            pending: BTreeMap::new(),
+            sessions: FxHashMap::default(),
+            allow_lateness_ms: 0,
+        }
+    }
+
+    fn apply_to_window(
+        &mut self,
+        key: u64,
+        window: Window,
+        rec: &Record,
+        ctx: &mut OpCtx,
+    ) -> Result<()> {
+        let skey = ctx.skey(key, &window.encode());
+        let mut acc = match ctx.state.get(&skey)? {
+            Some(acc) => acc,
+            None => {
+                self.pending.insert((window.end, key, window.start), ());
+                self.aggregator.init()
+            }
+        };
+        self.aggregator.add(&mut acc, rec);
+        ctx.state.put(&skey, &acc)?;
+        Ok(())
+    }
+
+    /// Merge the event's proto-window into the key's active session,
+    /// relocating the accumulator when the window grows.
+    fn apply_session(&mut self, key: u64, ts: u64, rec: &Record, ctx: &mut OpCtx) -> Result<()> {
+        let WindowAssigner::Session { gap_ms } = self.assigner else {
+            unreachable!()
+        };
+        let proto = Window::new(ts, ts + gap_ms);
+        let merged = match self.sessions.get(&key) {
+            // Extend if the proto intersects-or-touches the active session.
+            Some(active) if proto.start <= active.end && active.start <= proto.end => {
+                Window::new(active.start.min(proto.start), active.end.max(proto.end))
+            }
+            _ => proto,
+        };
+        let old = self.sessions.insert(key, merged);
+        // Relocate accumulator if the window bounds changed.
+        let mut acc = match old {
+            Some(old_w) if old_w != merged => {
+                let old_key = ctx.skey(key, &old_w.encode());
+                let acc = ctx.state.get(&old_key)?.unwrap_or_else(|| self.aggregator.init());
+                ctx.state.delete(&old_key)?;
+                self.pending.remove(&(old_w.end, key, old_w.start));
+                acc
+            }
+            Some(_) => {
+                let skey = ctx.skey(key, &merged.encode());
+                ctx.state.get(&skey)?.unwrap_or_else(|| self.aggregator.init())
+            }
+            None => self.aggregator.init(),
+        };
+        self.aggregator.add(&mut acc, rec);
+        let skey = ctx.skey(key, &merged.encode());
+        ctx.state.put(&skey, &acc)?;
+        self.pending.insert((merged.end, key, merged.start), ());
+        Ok(())
+    }
+}
+
+impl<A: Aggregator> Operator for KeyedWindowAggregate<A> {
+    fn on_record(&mut self, _port: usize, rec: Record, ctx: &mut OpCtx) -> Result<()> {
+        let ts = rec.ts();
+        if ts + self.allow_lateness_ms < ctx.watermark {
+            return Ok(()); // late event: drop (Flink default)
+        }
+        let key = (self.key_fn)(&rec);
+        if self.assigner.is_session() {
+            self.apply_session(key, ts, &rec, ctx)?;
+        } else {
+            for window in self.assigner.assign(ts) {
+                self.apply_to_window(key, window, &rec, ctx)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn on_watermark(&mut self, wm: u64, ctx: &mut OpCtx) -> Result<()> {
+        // Fire every pending window with end <= wm.
+        loop {
+            let Some((&(end, key, start), ())) = self.pending.iter().next() else {
+                break;
+            };
+            if end > wm {
+                break;
+            }
+            self.pending.remove(&(end, key, start));
+            let window = Window::new(start, end);
+            let skey = ctx.skey(key, &window.encode());
+            if let Some(acc) = ctx.state.get(&skey)? {
+                self.aggregator.result(key, window, &acc, ctx.out);
+                ctx.state.delete(&skey)?;
+            }
+            if self.assigner.is_session() {
+                if let Some(active) = self.sessions.get(&key) {
+                    if active.end == end && active.start == start {
+                        self.sessions.remove(&key);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn on_drain(&mut self, ctx: &mut OpCtx) -> Result<()> {
+        ctx.state.flush()
+    }
+
+    fn aux_snapshot(&self) -> Vec<(u16, Vec<u8>)> {
+        // Serialize pending windows grouped by key group. 24 bytes/entry.
+        let mut by_group: BTreeMap<u16, Vec<u8>> = BTreeMap::new();
+        for &(end, key, start) in self.pending.keys() {
+            let group = key_to_group(key, 128);
+            let buf = by_group.entry(group).or_default();
+            buf.extend_from_slice(&key.to_be_bytes());
+            buf.extend_from_slice(&start.to_be_bytes());
+            buf.extend_from_slice(&end.to_be_bytes());
+        }
+        by_group.into_iter().collect()
+    }
+
+    fn aux_restore(&mut self, frags: &[Vec<u8>]) {
+        for frag in frags {
+            for chunk in frag.chunks_exact(24) {
+                let key = u64::from_be_bytes(chunk[..8].try_into().unwrap());
+                let start = u64::from_be_bytes(chunk[8..16].try_into().unwrap());
+                let end = u64::from_be_bytes(chunk[16..24].try_into().unwrap());
+                self.pending.insert((end, key, start), ());
+                if self.assigner.is_session() {
+                    self.sessions.insert(key, Window::new(start, end));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Joins
+// ---------------------------------------------------------------------------
+
+/// Compact binary codec for records stored in join state.
+pub fn encode_record(rec: &Record) -> Vec<u8> {
+    let mut out = Vec::with_capacity(40);
+    match rec {
+        Record::Bid {
+            auction,
+            bidder,
+            price,
+            ts,
+        } => {
+            out.push(0);
+            for v in [auction, bidder, price, ts] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Record::Auction {
+            id,
+            seller,
+            category,
+            expires,
+            ts,
+        } => {
+            out.push(1);
+            for v in [id, seller, category, expires, ts] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Record::Person { id, city, ts } => {
+            out.push(2);
+            for v in [id, city, ts] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Record::Kv { key, payload, ts } => {
+            out.push(3);
+            out.extend_from_slice(&key.to_le_bytes());
+            out.extend_from_slice(&ts.to_le_bytes());
+            out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            out.extend_from_slice(payload);
+        }
+        Record::Pair { key, value, ts } => {
+            out.push(4);
+            out.extend_from_slice(&key.to_le_bytes());
+            out.extend_from_slice(&value.to_le_bytes());
+            out.extend_from_slice(&ts.to_le_bytes());
+        }
+        Record::Text { line, ts } => {
+            out.push(5);
+            out.extend_from_slice(&ts.to_le_bytes());
+            out.extend_from_slice(line.as_bytes());
+        }
+    }
+    out
+}
+
+/// Inverse of [`encode_record`].
+pub fn decode_record(data: &[u8]) -> Option<Record> {
+    let tag = *data.first()?;
+    let u = |i: usize| -> Option<u64> {
+        Some(u64::from_le_bytes(data.get(1 + i * 8..9 + i * 8)?.try_into().ok()?))
+    };
+    Some(match tag {
+        0 => Record::Bid {
+            auction: u(0)?,
+            bidder: u(1)?,
+            price: u(2)?,
+            ts: u(3)?,
+        },
+        1 => Record::Auction {
+            id: u(0)?,
+            seller: u(1)?,
+            category: u(2)?,
+            expires: u(3)?,
+            ts: u(4)?,
+        },
+        2 => Record::Person {
+            id: u(0)?,
+            city: u(1)?,
+            ts: u(2)?,
+        },
+        3 => {
+            let key = u(0)?;
+            let ts = u(1)?;
+            let len = u32::from_le_bytes(data.get(17..21)?.try_into().ok()?) as usize;
+            Record::Kv {
+                key,
+                payload: data.get(21..21 + len)?.to_vec(),
+                ts,
+            }
+        }
+        4 => Record::Pair {
+            key: u(0)?,
+            value: i64::from_le_bytes(data.get(9..17)?.try_into().ok()?),
+            ts: u(2)?,
+        },
+        5 => Record::Text {
+            ts: u(0)?,
+            line: String::from_utf8(data.get(9..)?.to_vec()).ok()?,
+        },
+        _ => return None,
+    })
+}
+
+/// Unbounded incremental two-input join (q3): store each side keyed by the
+/// join key; on arrival probe the opposite side and emit matches.
+/// Port 0 = left, port 1 = right.
+pub struct IncrementalJoinOp {
+    pub left_key: fn(&Record) -> u64,
+    pub right_key: fn(&Record) -> u64,
+    /// Join output: (left, right) → emitted record.
+    pub join: fn(&Record, &Record) -> Record,
+    /// Keep only one record per key per side (q3's person/auction semantics:
+    /// ids are unique) — bounds state like the paper's ~8 MB observation.
+    pub unique_keys: bool,
+}
+
+const LEFT_TAG: &[u8] = b"L";
+const RIGHT_TAG: &[u8] = b"R";
+
+impl Operator for IncrementalJoinOp {
+    fn on_record(&mut self, port: usize, rec: Record, ctx: &mut OpCtx) -> Result<()> {
+        let (key, my_tag, other_tag) = if port == 0 {
+            ((self.left_key)(&rec), LEFT_TAG, RIGHT_TAG)
+        } else {
+            ((self.right_key)(&rec), RIGHT_TAG, LEFT_TAG)
+        };
+        // Store self.
+        let my_key = ctx.skey(key, my_tag);
+        ctx.state.put(&my_key, &encode_record(&rec))?;
+        // Probe the other side.
+        let other_key = ctx.skey(key, other_tag);
+        if let Some(stored) = ctx.state.get(&other_key)? {
+            if let Some(other) = decode_record(&stored) {
+                let out = if port == 0 {
+                    (self.join)(&rec, &other)
+                } else {
+                    (self.join)(&other, &rec)
+                };
+                ctx.out.push(out);
+            }
+        }
+        Ok(())
+    }
+
+    fn on_drain(&mut self, ctx: &mut OpCtx) -> Result<()> {
+        ctx.state.flush()
+    }
+}
+
+/// Tumbling-window two-input join (q8): per (key, window) store presence of
+/// each side; fire matches when the window closes.
+pub struct WindowedJoinOp {
+    pub left_key: fn(&Record) -> u64,
+    pub right_key: fn(&Record) -> u64,
+    pub window_ms: u64,
+    /// Output built at fire time from the stored left record.
+    pub emit: fn(u64, &Record, Window, &mut Vec<Record>),
+    /// Pending (end, key, start).
+    pending: BTreeMap<(u64, u64, u64), ()>,
+}
+
+impl WindowedJoinOp {
+    pub fn new(
+        left_key: fn(&Record) -> u64,
+        right_key: fn(&Record) -> u64,
+        window_ms: u64,
+        emit: fn(u64, &Record, Window, &mut Vec<Record>),
+    ) -> Self {
+        Self {
+            left_key,
+            right_key,
+            window_ms,
+            emit,
+            pending: BTreeMap::new(),
+        }
+    }
+}
+
+impl Operator for WindowedJoinOp {
+    fn on_record(&mut self, port: usize, rec: Record, ctx: &mut OpCtx) -> Result<()> {
+        let ts = rec.ts();
+        if ts < ctx.watermark {
+            return Ok(());
+        }
+        let key = if port == 0 {
+            (self.left_key)(&rec)
+        } else {
+            (self.right_key)(&rec)
+        };
+        let start = ts - ts % self.window_ms;
+        let window = Window::new(start, start + self.window_ms);
+        let mut suffix = window.encode().to_vec();
+        suffix.push(if port == 0 { b'L' } else { b'R' });
+        let skey = ctx.skey(key, &suffix);
+        // Read-modify-write: store the (latest) record for this side.
+        let existed = ctx.state.get(&skey)?.is_some();
+        ctx.state.put(&skey, &encode_record(&rec))?;
+        if !existed {
+            self.pending.insert((window.end, key, window.start), ());
+        }
+        Ok(())
+    }
+
+    fn on_watermark(&mut self, wm: u64, ctx: &mut OpCtx) -> Result<()> {
+        loop {
+            let Some((&(end, key, start), ())) = self.pending.iter().next() else {
+                break;
+            };
+            if end > wm {
+                break;
+            }
+            self.pending.remove(&(end, key, start));
+            let window = Window::new(start, end);
+            let mut lkey = window.encode().to_vec();
+            lkey.push(b'L');
+            let mut rkey = window.encode().to_vec();
+            rkey.push(b'R');
+            let lskey = ctx.skey(key, &lkey);
+            let rskey = ctx.skey(key, &rkey);
+            let left = ctx.state.get(&lskey)?;
+            let right = ctx.state.get(&rskey)?;
+            if let (Some(l), Some(_r)) = (&left, &right) {
+                if let Some(lrec) = decode_record(l) {
+                    (self.emit)(key, &lrec, window, ctx.out);
+                }
+            }
+            if left.is_some() {
+                ctx.state.delete(&lskey)?;
+            }
+            if right.is_some() {
+                ctx.state.delete(&rskey)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn on_drain(&mut self, ctx: &mut OpCtx) -> Result<()> {
+        ctx.state.flush()
+    }
+
+    fn aux_snapshot(&self) -> Vec<(u16, Vec<u8>)> {
+        let mut by_group: BTreeMap<u16, Vec<u8>> = BTreeMap::new();
+        for &(end, key, start) in self.pending.keys() {
+            let group = key_to_group(key, 128);
+            let buf = by_group.entry(group).or_default();
+            buf.extend_from_slice(&key.to_be_bytes());
+            buf.extend_from_slice(&start.to_be_bytes());
+            buf.extend_from_slice(&end.to_be_bytes());
+        }
+        by_group.into_iter().collect()
+    }
+
+    fn aux_restore(&mut self, frags: &[Vec<u8>]) {
+        for frag in frags {
+            for chunk in frag.chunks_exact(24) {
+                let key = u64::from_be_bytes(chunk[..8].try_into().unwrap());
+                let start = u64::from_be_bytes(chunk[8..16].try_into().unwrap());
+                let end = u64::from_be_bytes(chunk[16..24].try_into().unwrap());
+                self.pending.insert((end, key, start), ());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §3 microbenchmark operator
+// ---------------------------------------------------------------------------
+
+/// State access pattern for the microbenchmark (§3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessMode {
+    /// Read the value for the event's key.
+    Read,
+    /// Replace the value without reading.
+    Write,
+    /// Read then overwrite.
+    Update,
+}
+
+/// The single-operator workload of §3: every event performs one state
+/// operation against a pre-populated store.
+pub struct KvStoreOp {
+    pub mode: AccessMode,
+}
+
+impl Operator for KvStoreOp {
+    fn on_record(&mut self, _port: usize, rec: Record, ctx: &mut OpCtx) -> Result<()> {
+        if let Record::Kv { key, payload, ts } = rec {
+            let skey = ctx.skey(key, b"");
+            match self.mode {
+                AccessMode::Read => {
+                    let v = ctx.state.get(&skey)?;
+                    ctx.out.push(Record::Pair {
+                        key,
+                        value: v.map(|v| v.len() as i64).unwrap_or(0),
+                        ts,
+                    });
+                }
+                AccessMode::Write => {
+                    ctx.state.put(&skey, &payload)?;
+                    ctx.out.push(Record::Pair { key, value: 1, ts });
+                }
+                AccessMode::Update => {
+                    let old = ctx.state.get(&skey)?;
+                    ctx.state.put(&skey, &payload)?;
+                    ctx.out.push(Record::Pair {
+                        key,
+                        value: old.map(|v| v.len() as i64).unwrap_or(0),
+                        ts,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn on_drain(&mut self, ctx: &mut OpCtx) -> Result<()> {
+        ctx.state.flush()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sources
+// ---------------------------------------------------------------------------
+
+/// What a source produced this poll.
+pub enum SourceBatch {
+    /// Records to emit.
+    Records(Vec<Record>),
+    /// Nothing right now (rate limiting) — the task may sleep briefly.
+    Idle,
+    /// The source is exhausted (bounded inputs / tests).
+    Exhausted,
+}
+
+/// A source operator: generates records, paces itself, tracks event time.
+pub trait Source: Send {
+    /// Produce up to `max` records.
+    fn poll(&mut self, max: usize) -> SourceBatch;
+    /// Low watermark of everything emitted so far.
+    fn watermark(&self) -> u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::HeapBackend;
+
+    fn ctx_with<'a>(
+        out: &'a mut Vec<Record>,
+        state: &'a mut HeapBackend,
+        wm: u64,
+    ) -> OpCtx<'a> {
+        OpCtx {
+            out,
+            state,
+            key_groups: 128,
+            watermark: wm,
+        }
+    }
+
+    fn pair(key: u64, ts: u64) -> Record {
+        Record::Pair { key, value: 1, ts }
+    }
+
+    fn pair_key(r: &Record) -> u64 {
+        match r {
+            Record::Pair { key, .. } => *key,
+            _ => 0,
+        }
+    }
+
+    #[test]
+    fn map_and_flatmap() {
+        let mut out = Vec::new();
+        let mut state = HeapBackend::new();
+        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        let mut m = MapOp {
+            f: |r| match r {
+                Record::Pair { key, value, ts } => Some(Record::Pair {
+                    key,
+                    value: value * 2,
+                    ts,
+                }),
+                _ => None,
+            },
+        };
+        m.on_record(0, pair(1, 0), &mut ctx).unwrap();
+        assert_eq!(ctx.out.len(), 1);
+        let mut fm = FlatMapOp {
+            f: |r: Record, out: &mut Vec<Record>| {
+                out.push(r.clone());
+                out.push(r);
+            },
+        };
+        fm.on_record(0, pair(2, 0), &mut ctx).unwrap();
+        assert_eq!(ctx.out.len(), 3);
+    }
+
+    #[test]
+    fn tumbling_count_fires_on_watermark() {
+        let mut op = KeyedWindowAggregate::new(
+            pair_key,
+            WindowAssigner::Tumbling { size_ms: 1000 },
+            CountAggregator,
+        );
+        let mut out = Vec::new();
+        let mut state = HeapBackend::new();
+        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        for i in 0..5 {
+            op.on_record(0, pair(7, 100 + i), &mut ctx).unwrap();
+        }
+        op.on_record(0, pair(7, 1500), &mut ctx).unwrap();
+        assert!(ctx.out.is_empty());
+        op.on_watermark(1000, &mut ctx).unwrap();
+        assert_eq!(
+            ctx.out.as_slice(),
+            &[Record::Pair {
+                key: 7,
+                value: 5,
+                ts: 1000
+            }]
+        );
+        ctx.out.clear();
+        op.on_watermark(2000, &mut ctx).unwrap();
+        assert_eq!(
+            ctx.out.as_slice(),
+            &[Record::Pair {
+                key: 7,
+                value: 1,
+                ts: 2000
+            }]
+        );
+        // State cleaned up after firing.
+        assert_eq!(state.size_bytes(), 0);
+    }
+
+    #[test]
+    fn sliding_count_multi_window() {
+        let mut op = KeyedWindowAggregate::new(
+            pair_key,
+            WindowAssigner::Sliding {
+                size_ms: 2000,
+                slide_ms: 1000,
+            },
+            CountAggregator,
+        );
+        let mut out = Vec::new();
+        let mut state = HeapBackend::new();
+        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        op.on_record(0, pair(1, 2500), &mut ctx).unwrap();
+        op.on_watermark(10_000, &mut ctx).unwrap();
+        // ts=2500 belongs to [1000,3000) and [2000,4000).
+        assert_eq!(ctx.out.len(), 2);
+    }
+
+    #[test]
+    fn session_windows_merge_and_fire() {
+        let mut op = KeyedWindowAggregate::new(
+            pair_key,
+            WindowAssigner::Session { gap_ms: 100 },
+            CountAggregator,
+        );
+        let mut out = Vec::new();
+        let mut state = HeapBackend::new();
+        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        // Three events within the gap → one session [1000, 1250).
+        op.on_record(0, pair(1, 1000), &mut ctx).unwrap();
+        op.on_record(0, pair(1, 1080), &mut ctx).unwrap();
+        op.on_record(0, pair(1, 1150), &mut ctx).unwrap();
+        // A separate key's session.
+        op.on_record(0, pair(2, 1010), &mut ctx).unwrap();
+        op.on_watermark(1200, &mut ctx).unwrap();
+        // Key 2's session [1010,1110) fired; key 1's [1000,1250) not yet.
+        assert_eq!(ctx.out.len(), 1);
+        assert_eq!(
+            ctx.out[0],
+            Record::Pair {
+                key: 2,
+                value: 1,
+                ts: 1110
+            }
+        );
+        ctx.out.clear();
+        op.on_watermark(1250, &mut ctx).unwrap();
+        assert_eq!(
+            ctx.out.as_slice(),
+            &[Record::Pair {
+                key: 1,
+                value: 3,
+                ts: 1250
+            }]
+        );
+    }
+
+    #[test]
+    fn session_restart_after_fire() {
+        let mut op = KeyedWindowAggregate::new(
+            pair_key,
+            WindowAssigner::Session { gap_ms: 50 },
+            CountAggregator,
+        );
+        let mut out = Vec::new();
+        let mut state = HeapBackend::new();
+        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        op.on_record(0, pair(1, 100), &mut ctx).unwrap();
+        op.on_watermark(150, &mut ctx).unwrap();
+        assert_eq!(ctx.out.len(), 1);
+        ctx.out.clear();
+        ctx.watermark = 150;
+        op.on_record(0, pair(1, 300), &mut ctx).unwrap();
+        op.on_watermark(350, &mut ctx).unwrap();
+        assert_eq!(ctx.out.len(), 1);
+    }
+
+    #[test]
+    fn late_events_dropped() {
+        let mut op = KeyedWindowAggregate::new(
+            pair_key,
+            WindowAssigner::Tumbling { size_ms: 100 },
+            CountAggregator,
+        );
+        let mut out = Vec::new();
+        let mut state = HeapBackend::new();
+        let mut ctx = ctx_with(&mut out, &mut state, 1000);
+        op.on_record(0, pair(1, 50), &mut ctx).unwrap();
+        op.on_watermark(2000, &mut ctx).unwrap();
+        assert!(ctx.out.is_empty());
+    }
+
+    #[test]
+    fn aux_snapshot_roundtrip() {
+        let mut op = KeyedWindowAggregate::new(
+            pair_key,
+            WindowAssigner::Tumbling { size_ms: 1000 },
+            CountAggregator,
+        );
+        let mut out = Vec::new();
+        let mut state = HeapBackend::new();
+        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        op.on_record(0, pair(1, 100), &mut ctx).unwrap();
+        op.on_record(0, pair(2, 1100), &mut ctx).unwrap();
+        let frags = op.aux_snapshot();
+        assert!(!frags.is_empty());
+        let mut op2 = KeyedWindowAggregate::new(
+            pair_key,
+            WindowAssigner::Tumbling { size_ms: 1000 },
+            CountAggregator,
+        );
+        op2.aux_restore(&frags.iter().map(|(_, f)| f.clone()).collect::<Vec<_>>());
+        // Restored operator fires from restored pending set (state shared).
+        op2.on_watermark(10_000, &mut ctx).unwrap();
+        assert_eq!(ctx.out.len(), 2);
+    }
+
+    #[test]
+    fn record_codec_roundtrip() {
+        let records = vec![
+            Record::Bid {
+                auction: 1,
+                bidder: 2,
+                price: 3,
+                ts: 4,
+            },
+            Record::Auction {
+                id: 1,
+                seller: 2,
+                category: 3,
+                expires: 4,
+                ts: 5,
+            },
+            Record::Person { id: 9, city: 8, ts: 7 },
+            Record::Kv {
+                key: 5,
+                payload: vec![1, 2, 3],
+                ts: 6,
+            },
+            Record::Pair {
+                key: 1,
+                value: -42,
+                ts: 2,
+            },
+            Record::Text {
+                line: "hello world".into(),
+                ts: 3,
+            },
+        ];
+        for r in records {
+            assert_eq!(decode_record(&encode_record(&r)), Some(r));
+        }
+        assert_eq!(decode_record(&[99]), None);
+    }
+
+    #[test]
+    fn incremental_join_emits_on_match() {
+        let mut op = IncrementalJoinOp {
+            left_key: |r| match r {
+                Record::Auction { seller, .. } => *seller,
+                _ => 0,
+            },
+            right_key: |r| match r {
+                Record::Person { id, .. } => *id,
+                _ => 0,
+            },
+            join: |a, p| {
+                let (Record::Auction { id, ts, .. }, Record::Person { city, .. }) = (a, p)
+                else {
+                    unreachable!()
+                };
+                Record::Pair {
+                    key: *id,
+                    value: *city as i64,
+                    ts: *ts,
+                }
+            },
+            unique_keys: true,
+        };
+        let mut out = Vec::new();
+        let mut state = HeapBackend::new();
+        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        op.on_record(
+            0,
+            Record::Auction {
+                id: 100,
+                seller: 7,
+                category: 1,
+                expires: 0,
+                ts: 10,
+            },
+            &mut ctx,
+        )
+        .unwrap();
+        assert!(ctx.out.is_empty(), "no person yet");
+        op.on_record(1, Record::Person { id: 7, city: 3, ts: 11 }, &mut ctx)
+            .unwrap();
+        assert_eq!(ctx.out.len(), 1);
+        // A second auction from the same seller joins immediately.
+        op.on_record(
+            0,
+            Record::Auction {
+                id: 101,
+                seller: 7,
+                category: 1,
+                expires: 0,
+                ts: 12,
+            },
+            &mut ctx,
+        )
+        .unwrap();
+        assert_eq!(ctx.out.len(), 2);
+    }
+
+    #[test]
+    fn windowed_join_fires_matches_only() {
+        fn emit(key: u64, _left: &Record, w: Window, out: &mut Vec<Record>) {
+            out.push(Record::Pair {
+                key,
+                value: 1,
+                ts: w.end,
+            });
+        }
+        let mut op = WindowedJoinOp::new(
+            |r| match r {
+                Record::Person { id, .. } => *id,
+                _ => 0,
+            },
+            |r| match r {
+                Record::Auction { seller, .. } => *seller,
+                _ => 0,
+            },
+            1000,
+            emit,
+        );
+        let mut out = Vec::new();
+        let mut state = HeapBackend::new();
+        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        // Person 1 and their auction in the same window → match.
+        op.on_record(0, Record::Person { id: 1, city: 0, ts: 100 }, &mut ctx)
+            .unwrap();
+        op.on_record(
+            1,
+            Record::Auction {
+                id: 50,
+                seller: 1,
+                category: 0,
+                expires: 0,
+                ts: 200,
+            },
+            &mut ctx,
+        )
+        .unwrap();
+        // Person 2 with no auction → no match.
+        op.on_record(0, Record::Person { id: 2, city: 0, ts: 150 }, &mut ctx)
+            .unwrap();
+        op.on_watermark(1000, &mut ctx).unwrap();
+        assert_eq!(ctx.out.len(), 1);
+        assert_eq!(
+            ctx.out[0],
+            Record::Pair {
+                key: 1,
+                value: 1,
+                ts: 1000
+            }
+        );
+        // All window state cleaned.
+        assert_eq!(state.size_bytes(), 0);
+    }
+
+    #[test]
+    fn kvstore_modes() {
+        let mut out = Vec::new();
+        let mut state = HeapBackend::new();
+        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        let rec = |k: u64| Record::Kv {
+            key: k,
+            payload: vec![9u8; 16],
+            ts: 0,
+        };
+        let mut w = KvStoreOp {
+            mode: AccessMode::Write,
+        };
+        w.on_record(0, rec(1), &mut ctx).unwrap();
+        let mut r = KvStoreOp {
+            mode: AccessMode::Read,
+        };
+        r.on_record(0, rec(1), &mut ctx).unwrap();
+        assert_eq!(
+            ctx.out[1],
+            Record::Pair {
+                key: 1,
+                value: 16,
+                ts: 0
+            }
+        );
+        let mut u = KvStoreOp {
+            mode: AccessMode::Update,
+        };
+        u.on_record(0, rec(1), &mut ctx).unwrap();
+        assert_eq!(ctx.out.len(), 3);
+    }
+}

@@ -1,0 +1,249 @@
+//! The metrics scraper: turns raw per-task counters into per-operator 5 s
+//! samples ([`OperatorSample`]) — the engine side of the Prometheus pipeline
+//! the paper's policies consume.
+
+use crate::metrics::window::OperatorSample;
+use crate::metrics::{names, MetricId, Registry, Sample};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Computes deltas between scrapes and aggregates them per operator.
+pub struct Scraper {
+    registry: Registry,
+    prev_counters: BTreeMap<MetricId, u64>,
+    last: Instant,
+}
+
+#[derive(Default, Debug)]
+struct OpAcc {
+    tasks: u32,
+    busy_ns: u64,
+    idle_ns: u64,
+    bp_ns: u64,
+    records_in: u64,
+    records_out: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    has_storage: bool,
+    access_ns_sum: f64,
+    access_ns_n: u64,
+    state_bytes: u64,
+}
+
+impl Scraper {
+    pub fn new(registry: Registry) -> Self {
+        Self {
+            registry,
+            prev_counters: BTreeMap::new(),
+            last: Instant::now(),
+        }
+    }
+
+    /// Scrape now; returns per-operator samples covering the interval since
+    /// the previous scrape.
+    pub fn sample(&mut self) -> BTreeMap<String, OperatorSample> {
+        let wall_ns = self.last.elapsed().as_nanos() as f64;
+        self.last = Instant::now();
+        let snap = self.registry.snapshot();
+        let mut acc: BTreeMap<String, OpAcc> = BTreeMap::new();
+
+        for (id, sample) in &snap {
+            let Some(op) = id.label("op") else { continue };
+            let a = acc.entry(op.to_string()).or_default();
+            match sample {
+                Sample::Counter(value) => {
+                    let prev = self.prev_counters.insert(id.clone(), *value).unwrap_or(0);
+                    let delta = value.saturating_sub(prev);
+                    match id.name.as_str() {
+                        names::BUSY_NS => {
+                            a.busy_ns += delta;
+                            a.tasks += 1; // busy counter exists once per task
+                        }
+                        names::IDLE_NS => a.idle_ns += delta,
+                        names::BACKPRESSURE_NS => a.bp_ns += delta,
+                        names::RECORDS_IN => a.records_in += delta,
+                        names::RECORDS_OUT => a.records_out += delta,
+                        names::STATE_CACHE_HIT => {
+                            a.cache_hits += delta;
+                            a.has_storage = true;
+                        }
+                        names::STATE_CACHE_MISS => {
+                            a.cache_misses += delta;
+                            a.has_storage = true;
+                        }
+                        _ => {}
+                    }
+                }
+                Sample::Gauge(v) => {
+                    if id.name == names::STATE_SIZE_BYTES {
+                        a.state_bytes += *v as u64;
+                        a.has_storage = true;
+                    }
+                }
+                Sample::Histo { count, mean, .. } => {
+                    if id.name == names::STATE_ACCESS_NS && *count > 0 {
+                        a.access_ns_sum += mean * *count as f64;
+                        a.access_ns_n += count;
+                        a.has_storage = true;
+                    }
+                }
+            }
+        }
+
+        acc.into_iter()
+            .map(|(op, a)| {
+                let tasks = a.tasks.max(1) as f64;
+                let wall_total = wall_ns * tasks;
+                // Utilization denominator: the *accounted* time components
+                // (busy + idle + blocked). On an oversubscribed host the
+                // wall clock includes time the task was descheduled, which
+                // would systematically understate busyness (Flink's
+                // busyTimeMsPerSecond has the same bias); components are
+                // the truthful denominator whenever they cover the
+                // interval reasonably.
+                let components = (a.busy_ns + a.idle_ns + a.bp_ns) as f64;
+                let denom = if components > 0.1 * wall_total {
+                    components
+                } else {
+                    wall_total
+                };
+                let busy_s = a.busy_ns as f64 / 1e9;
+                let sample = OperatorSample {
+                    busyness: (a.busy_ns as f64 / denom).min(1.0),
+                    backpressure: (a.bp_ns as f64 / denom).min(1.0),
+                    observed_rate: a.records_in as f64 / (wall_ns / 1e9),
+                    true_rate: if busy_s > 1e-9 {
+                        a.records_in as f64 / busy_s
+                    } else {
+                        0.0
+                    },
+                    output_rate: a.records_out as f64 / (wall_ns / 1e9),
+                    cache_hit_rate: (a.has_storage
+                        && a.cache_hits + a.cache_misses > 0)
+                        .then(|| {
+                            a.cache_hits as f64 / (a.cache_hits + a.cache_misses) as f64
+                        }),
+                    access_latency_us: (a.access_ns_n > 0)
+                        .then(|| a.access_ns_sum / a.access_ns_n as f64 / 1e3),
+                    state_size_bytes: a.state_bytes,
+                };
+                (op, sample)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deltas_not_cumulative() {
+        let reg = Registry::new();
+        let busy = reg.counter(
+            MetricId::new(names::BUSY_NS)
+                .with("op", "map")
+                .with("task", 0),
+        );
+        let rin = reg.counter(
+            MetricId::new(names::RECORDS_IN)
+                .with("op", "map")
+                .with("task", 0),
+        );
+        let mut scraper = Scraper::new(reg);
+        busy.add(1_000_000);
+        rin.add(100);
+        let s1 = scraper.sample();
+        assert_eq!(s1["map"].true_rate, 100.0 / 0.001);
+        // No activity since → zero deltas.
+        let s2 = scraper.sample();
+        assert_eq!(s2["map"].observed_rate, 0.0);
+        assert_eq!(s2["map"].true_rate, 0.0);
+    }
+
+    #[test]
+    fn stateless_vs_stateful_detection() {
+        let reg = Registry::new();
+        reg.counter(
+            MetricId::new(names::BUSY_NS)
+                .with("op", "a")
+                .with("task", 0),
+        )
+        .add(1);
+        reg.counter(
+            MetricId::new(names::BUSY_NS)
+                .with("op", "b")
+                .with("task", 0),
+        )
+        .add(1);
+        reg.counter(
+            MetricId::new(names::STATE_CACHE_HIT)
+                .with("op", "b")
+                .with("task", 0),
+        )
+        .add(9);
+        reg.counter(
+            MetricId::new(names::STATE_CACHE_MISS)
+                .with("op", "b")
+                .with("task", 0),
+        )
+        .add(1);
+        let mut scraper = Scraper::new(reg);
+        let s = scraper.sample();
+        assert!(s["a"].cache_hit_rate.is_none());
+        let theta = s["b"].cache_hit_rate.unwrap();
+        assert!((theta - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn busyness_from_time_components() {
+        let reg = Registry::new();
+        let id = |n: &str, task: u32| MetricId::new(n).with("op", "x").with("task", task);
+        // Task 0: 3 ms busy, 1 ms idle → 75% busy. Task 1: 1 ms busy,
+        // 3 ms idle → 25%. Operator average: (3+1)/(3+1+1+3) = 50%.
+        reg.counter(id(names::BUSY_NS, 0)).add(3_000_000);
+        reg.counter(id(names::IDLE_NS, 0)).add(1_000_000);
+        reg.counter(id(names::BUSY_NS, 1)).add(1_000_000);
+        reg.counter(id(names::IDLE_NS, 1)).add(3_000_000);
+        let mut scraper = Scraper::new(reg);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let s = scraper.sample();
+        let b = s["x"].busyness;
+        assert!((b - 0.5).abs() < 0.01, "busyness {b}");
+    }
+
+    #[test]
+    fn busyness_falls_back_to_wall_when_unaccounted() {
+        let reg = Registry::new();
+        // Only 0.01 ms of components over a ~5 ms interval → wall fallback.
+        reg.counter(
+            MetricId::new(names::BUSY_NS).with("op", "y").with("task", 0),
+        )
+        .add(10_000);
+        let mut scraper = Scraper::new(reg);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let s = scraper.sample();
+        assert!(s["y"].busyness < 0.1, "busyness {}", s["y"].busyness);
+    }
+
+    #[test]
+    fn access_latency_from_histogram() {
+        let reg = Registry::new();
+        reg.counter(
+            MetricId::new(names::BUSY_NS)
+                .with("op", "s")
+                .with("task", 0),
+        )
+        .add(1);
+        reg.histo(
+            MetricId::new(names::STATE_ACCESS_NS)
+                .with("op", "s")
+                .with("task", 0),
+        )
+        .record_n(2_000_000, 10); // 2ms × 10
+        let mut scraper = Scraper::new(reg);
+        let s = scraper.sample();
+        let tau = s["s"].access_latency_us.unwrap();
+        assert!((tau - 2000.0).abs() / 2000.0 < 0.05, "tau={tau}");
+    }
+}

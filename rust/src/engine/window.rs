@@ -1,0 +1,170 @@
+//! Window assignment: tumbling, sliding and session windows (§2: aggregates
+//! and joins compute over count- or time-defined windows; q5 uses sliding,
+//! q8 tumbling, q11 session windows).
+
+/// A time window `[start, end)` in milliseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Window {
+    pub start: u64,
+    pub end: u64,
+}
+
+impl Window {
+    pub fn new(start: u64, end: u64) -> Self {
+        debug_assert!(start < end);
+        Self { start, end }
+    }
+
+    pub fn contains(&self, ts: u64) -> bool {
+        self.start <= ts && ts < self.end
+    }
+
+    /// Serialize (16 bytes BE) for state-key suffixes.
+    pub fn encode(&self) -> [u8; 16] {
+        let mut out = [0u8; 16];
+        out[..8].copy_from_slice(&self.start.to_be_bytes());
+        out[8..].copy_from_slice(&self.end.to_be_bytes());
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Option<Window> {
+        if bytes.len() < 16 {
+            return None;
+        }
+        Some(Window {
+            start: u64::from_be_bytes(bytes[..8].try_into().ok()?),
+            end: u64::from_be_bytes(bytes[8..16].try_into().ok()?),
+        })
+    }
+}
+
+/// Time-based window assigners.
+#[derive(Debug, Clone, Copy)]
+pub enum WindowAssigner {
+    /// Fixed, non-overlapping windows of `size_ms`.
+    Tumbling { size_ms: u64 },
+    /// Overlapping windows of `size_ms` advancing by `slide_ms`.
+    Sliding { size_ms: u64, slide_ms: u64 },
+    /// Per-key windows that extend while events arrive within `gap_ms`.
+    /// (Assignment is stateful — handled by the operator; this only sizes
+    /// the initial window.)
+    Session { gap_ms: u64 },
+}
+
+impl WindowAssigner {
+    /// Windows a record with timestamp `ts` belongs to (tumbling/sliding).
+    /// Session windows return the initial `[ts, ts+gap)` proto-window; the
+    /// operator merges it with the key's active session.
+    pub fn assign(&self, ts: u64) -> Vec<Window> {
+        match *self {
+            WindowAssigner::Tumbling { size_ms } => {
+                let start = ts - ts % size_ms;
+                vec![Window::new(start, start + size_ms)]
+            }
+            WindowAssigner::Sliding { size_ms, slide_ms } => {
+                debug_assert!(slide_ms > 0 && slide_ms <= size_ms);
+                // Last window starting at or before ts.
+                let last_start = ts - ts % slide_ms;
+                let mut out = Vec::with_capacity((size_ms / slide_ms) as usize);
+                let mut start = last_start;
+                loop {
+                    if start + size_ms > ts {
+                        out.push(Window::new(start, start + size_ms));
+                    }
+                    if start < slide_ms {
+                        break;
+                    }
+                    start -= slide_ms;
+                    if start + size_ms <= ts {
+                        break;
+                    }
+                }
+                out.reverse(); // ascending by start
+                out
+            }
+            WindowAssigner::Session { gap_ms } => vec![Window::new(ts, ts + gap_ms)],
+        }
+    }
+
+    pub fn is_session(&self) -> bool {
+        matches!(self, WindowAssigner::Session { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn tumbling_aligned() {
+        let a = WindowAssigner::Tumbling { size_ms: 1000 };
+        assert_eq!(a.assign(0), vec![Window::new(0, 1000)]);
+        assert_eq!(a.assign(999), vec![Window::new(0, 1000)]);
+        assert_eq!(a.assign(1000), vec![Window::new(1000, 2000)]);
+    }
+
+    #[test]
+    fn sliding_covers_ts() {
+        let a = WindowAssigner::Sliding {
+            size_ms: 1000,
+            slide_ms: 250,
+        };
+        let ws = a.assign(1100);
+        assert_eq!(ws.len(), 4);
+        for w in &ws {
+            assert!(w.contains(1100), "{w:?}");
+        }
+        // Ascending and distinct.
+        assert!(ws.windows(2).all(|p| p[0].start < p[1].start));
+    }
+
+    #[test]
+    fn sliding_near_zero_no_underflow() {
+        let a = WindowAssigner::Sliding {
+            size_ms: 1000,
+            slide_ms: 250,
+        };
+        let ws = a.assign(100);
+        assert!(!ws.is_empty());
+        for w in &ws {
+            assert!(w.contains(100));
+        }
+    }
+
+    #[test]
+    fn sliding_window_count_property() {
+        prop(100, |g| {
+            let slide = g.u64(1..500);
+            let mult = g.u64(1..8);
+            let size = slide * mult;
+            let ts = g.u64(size..1_000_000);
+            let a = WindowAssigner::Sliding {
+                size_ms: size,
+                slide_ms: slide,
+            };
+            let ws = a.assign(ts);
+            // Away from t=0 a point belongs to exactly size/slide windows.
+            assert_eq!(ws.len() as u64, mult, "ts={ts} size={size} slide={slide}");
+            for w in &ws {
+                assert!(w.contains(ts));
+                assert_eq!(w.end - w.start, size);
+                assert_eq!(w.start % slide, 0);
+            }
+        });
+    }
+
+    #[test]
+    fn session_proto_window() {
+        let a = WindowAssigner::Session { gap_ms: 100 };
+        assert_eq!(a.assign(500), vec![Window::new(500, 600)]);
+        assert!(a.is_session());
+    }
+
+    #[test]
+    fn window_encode_roundtrip() {
+        let w = Window::new(123, 456);
+        assert_eq!(Window::decode(&w.encode()), Some(w));
+        assert_eq!(Window::decode(&[1, 2, 3]), None);
+    }
+}

@@ -1,0 +1,362 @@
+//! XLA-backed operators: the L2/L1 artifact on the engine's hot path.
+//!
+//! These operators buffer events into fixed-size batches and hand the
+//! numeric core to the AOT-compiled JAX/Pallas model (see
+//! `python/compile/model.py`): currency conversion (q1), filter mask (q2)
+//! and keyed window aggregation deltas (q5/q11's numeric core, computed by
+//! the Pallas one-hot-matmul kernel). The per-slot deltas are folded into
+//! the task's LSM state — one read-modify-write per *hot slot per batch*
+//! instead of one per event, a mini-batch pre-aggregation that preserves
+//! the paper's state-access pattern while the arithmetic rides XLA.
+
+use super::operators::{OpCtx, Operator};
+use super::window::Window;
+use crate::graph::Record;
+use crate::runtime::SharedModel;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// q1 via XLA: batched dollar→euro conversion of bids.
+pub struct XlaCurrencyMapOp {
+    model: SharedModel,
+    batch: usize,
+    keys: Vec<i64>,
+    prices: Vec<f32>,
+    pending: Vec<Record>,
+}
+
+impl XlaCurrencyMapOp {
+    pub fn new(model: SharedModel) -> Self {
+        let batch = model.spec().batch;
+        Self {
+            model,
+            batch,
+            keys: Vec::with_capacity(batch),
+            prices: Vec::with_capacity(batch),
+            pending: Vec::with_capacity(batch),
+        }
+    }
+
+    fn flush(&mut self, ctx: &mut OpCtx) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        let out = self.model.run(&self.keys, &self.prices)?;
+        for (rec, euro) in self.pending.drain(..).zip(out.euros) {
+            if let Record::Bid {
+                auction,
+                bidder,
+                ts,
+                ..
+            } = rec
+            {
+                ctx.out.push(Record::Bid {
+                    auction,
+                    bidder,
+                    price: euro.round() as u64,
+                    ts,
+                });
+            }
+        }
+        self.keys.clear();
+        self.prices.clear();
+        Ok(())
+    }
+}
+
+impl Operator for XlaCurrencyMapOp {
+    fn on_record(&mut self, _port: usize, rec: Record, ctx: &mut OpCtx) -> Result<()> {
+        if let Record::Bid { auction, price, .. } = &rec {
+            self.keys.push(*auction as i64);
+            self.prices.push(*price as f32);
+            self.pending.push(rec);
+            if self.pending.len() >= self.batch {
+                self.flush(ctx)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn on_watermark(&mut self, _wm: u64, ctx: &mut OpCtx) -> Result<()> {
+        self.flush(ctx)
+    }
+
+    fn on_drain(&mut self, ctx: &mut OpCtx) -> Result<()> {
+        self.flush(ctx)
+    }
+}
+
+/// Tumbling-window bid count per slot, with the per-batch aggregation done
+/// by the Pallas kernel and only the non-zero slot deltas folded into the
+/// keyed state backend.
+pub struct XlaWindowCountOp {
+    model: SharedModel,
+    batch: usize,
+    slots: usize,
+    window_ms: u64,
+    keys: Vec<i64>,
+    prices: Vec<f32>,
+    /// The window the current buffer belongs to.
+    buffer_window: Option<Window>,
+    /// Pending windows to fire: window start → ().
+    pending: BTreeMap<u64, ()>,
+}
+
+impl XlaWindowCountOp {
+    pub fn new(model: SharedModel, window_ms: u64) -> Self {
+        let spec = model.spec();
+        Self {
+            batch: spec.batch,
+            slots: spec.slots,
+            model,
+            window_ms,
+            keys: Vec::new(),
+            prices: Vec::new(),
+            buffer_window: None,
+            pending: BTreeMap::new(),
+        }
+    }
+
+    fn window_of(&self, ts: u64) -> Window {
+        let start = ts - ts % self.window_ms;
+        Window::new(start, start + self.window_ms)
+    }
+
+    fn state_key(&self, window: Window, slot: usize, ctx: &OpCtx) -> Vec<u8> {
+        let mut suffix = window.encode().to_vec();
+        suffix.extend_from_slice(&(slot as u32).to_be_bytes());
+        ctx.skey(slot as u64, &suffix)
+    }
+
+    /// Run the kernel over the buffer and fold non-zero deltas into state.
+    fn flush(&mut self, ctx: &mut OpCtx) -> Result<()> {
+        let Some(window) = self.buffer_window else {
+            return Ok(());
+        };
+        if self.keys.is_empty() {
+            return Ok(());
+        }
+        let out = self.model.run(&self.keys, &self.prices)?;
+        self.keys.clear();
+        self.prices.clear();
+        for slot in 0..self.slots {
+            let count = out.agg[2 * slot];
+            if count > 0.0 {
+                let skey = self.state_key(window, slot, ctx);
+                let prev = ctx
+                    .state
+                    .get(&skey)?
+                    .map(|v| i64::from_le_bytes(v[..8].try_into().unwrap()))
+                    .unwrap_or(0);
+                let next = prev + count as i64;
+                ctx.state.put(&skey, &next.to_le_bytes())?;
+            }
+        }
+        self.pending.insert(window.start, ());
+        Ok(())
+    }
+}
+
+impl Operator for XlaWindowCountOp {
+    fn on_record(&mut self, _port: usize, rec: Record, ctx: &mut OpCtx) -> Result<()> {
+        let Record::Bid {
+            auction, price, ts, ..
+        } = rec
+        else {
+            return Ok(());
+        };
+        if ts < ctx.watermark {
+            return Ok(()); // late
+        }
+        let window = self.window_of(ts);
+        if self.buffer_window != Some(window) {
+            self.flush(ctx)?; // batch never spans windows
+            self.buffer_window = Some(window);
+        }
+        self.keys.push(auction as i64);
+        self.prices.push(price as f32);
+        if self.keys.len() >= self.batch {
+            self.flush(ctx)?;
+            self.buffer_window = Some(window);
+        }
+        Ok(())
+    }
+
+    fn on_watermark(&mut self, wm: u64, ctx: &mut OpCtx) -> Result<()> {
+        self.flush(ctx)?;
+        let fire: Vec<u64> = self
+            .pending
+            .keys()
+            .copied()
+            .filter(|start| start + self.window_ms <= wm)
+            .collect();
+        for start in fire {
+            self.pending.remove(&start);
+            let window = Window::new(start, start + self.window_ms);
+            for slot in 0..self.slots {
+                let skey = self.state_key(window, slot, ctx);
+                if let Some(v) = ctx.state.get(&skey)? {
+                    let count = i64::from_le_bytes(v[..8].try_into().unwrap());
+                    ctx.out.push(Record::Pair {
+                        key: slot as u64,
+                        value: count,
+                        ts: window.end,
+                    });
+                    ctx.state.delete(&skey)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn on_drain(&mut self, ctx: &mut OpCtx) -> Result<()> {
+        self.flush(ctx)?;
+        ctx.state.flush()
+    }
+
+    fn aux_snapshot(&self) -> Vec<(u16, Vec<u8>)> {
+        // Pending windows are slot-global; replicate into group 0 (the whole
+        // operator is rebuilt from keyed state on restore anyway).
+        let mut buf = Vec::new();
+        for start in self.pending.keys() {
+            buf.extend_from_slice(&start.to_be_bytes());
+        }
+        if buf.is_empty() {
+            Vec::new()
+        } else {
+            vec![(0, buf)]
+        }
+    }
+
+    fn aux_restore(&mut self, frags: &[Vec<u8>]) {
+        for frag in frags {
+            for chunk in frag.chunks_exact(8) {
+                self.pending
+                    .insert(u64::from_be_bytes(chunk.try_into().unwrap()), ());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+    use crate::state::{HeapBackend, StateBackend};
+
+    fn model() -> Option<SharedModel> {
+        let dir = artifacts_dir();
+        dir.join("model.hlo.txt")
+            .exists()
+            .then(|| SharedModel::load(&dir).unwrap())
+    }
+
+    fn bid(auction: u64, price: u64, ts: u64) -> Record {
+        Record::Bid {
+            auction,
+            bidder: 0,
+            price,
+            ts,
+        }
+    }
+
+    #[test]
+    fn xla_currency_map_converts() {
+        let Some(model) = model() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let mut op = XlaCurrencyMapOp::new(model);
+        let mut out = Vec::new();
+        let mut state = HeapBackend::new();
+        let mut ctx = OpCtx {
+            out: &mut out,
+            state: &mut state,
+            key_groups: 128,
+            watermark: 0,
+        };
+        for i in 0..300 {
+            op.on_record(0, bid(i, 1000, i), &mut ctx).unwrap();
+        }
+        // 256 flushed at the batch boundary; 44 still buffered.
+        assert_eq!(ctx.out.len(), 256);
+        op.on_drain(&mut ctx).unwrap();
+        assert_eq!(ctx.out.len(), 300);
+        for rec in ctx.out.iter() {
+            let Record::Bid { price, .. } = rec else {
+                panic!()
+            };
+            assert_eq!(*price, 908);
+        }
+    }
+
+    #[test]
+    fn xla_window_count_matches_scalar_path() {
+        let Some(model) = model() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let mut op = XlaWindowCountOp::new(model, 100);
+        let mut out = Vec::new();
+        let mut state = HeapBackend::new();
+        let mut ctx = OpCtx {
+            out: &mut out,
+            state: &mut state,
+            key_groups: 128,
+            watermark: 0,
+        };
+        // Window [0,100): slot 5 ×3, slot 9 ×1; window [100,200): slot 5 ×1.
+        for (k, ts) in [(5u64, 10u64), (5, 20), (9, 30), (5, 99), (5, 150)] {
+            let k = if k == 5 && ts == 99 { 5 } else { k };
+            op.on_record(0, bid(k, 1, ts), &mut ctx).unwrap();
+        }
+        op.on_watermark(100, &mut ctx).unwrap();
+        let mut fired: Vec<(u64, i64)> = ctx
+            .out
+            .iter()
+            .map(|r| match r {
+                Record::Pair { key, value, .. } => (*key, *value),
+                _ => panic!(),
+            })
+            .collect();
+        fired.sort();
+        assert_eq!(fired, vec![(5, 3), (9, 1)]);
+        ctx.out.clear();
+        op.on_watermark(200, &mut ctx).unwrap();
+        assert_eq!(ctx.out.len(), 1);
+        // All window state cleaned up.
+        assert_eq!(state.size_bytes(), 0);
+    }
+
+    #[test]
+    fn xla_window_count_large_batch_consistency() {
+        let Some(model) = model() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let mut op = XlaWindowCountOp::new(model, 1_000_000);
+        let mut out = Vec::new();
+        let mut state = HeapBackend::new();
+        let mut ctx = OpCtx {
+            out: &mut out,
+            state: &mut state,
+            key_groups: 128,
+            watermark: 0,
+        };
+        // 1000 events over 13 slots — crosses several batch flushes.
+        let mut want = std::collections::BTreeMap::new();
+        for i in 0..1000u64 {
+            let slot = i % 13;
+            *want.entry(slot).or_insert(0i64) += 1;
+            op.on_record(0, bid(slot, 1, 10), &mut ctx).unwrap();
+        }
+        op.on_watermark(1_000_000, &mut ctx).unwrap();
+        let mut got = std::collections::BTreeMap::new();
+        for r in ctx.out.iter() {
+            if let Record::Pair { key, value, .. } = r {
+                got.insert(*key, *value);
+            }
+        }
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,350 @@
+//! Dataflow graphs: records, logical plans (operators + edges), and the
+//! physical plan derived from a scaling configuration.
+//!
+//! Terminology follows Flink/§2: a query is a DAG of *operators*; at runtime
+//! each operator runs as `parallelism` *tasks*; keyed edges partition records
+//! by key group (hash of the key modulo a fixed number of groups, each task
+//! owning a contiguous group range — Flink's rescale unit).
+
+pub mod plan;
+
+pub use plan::{OpScaling, PhysicalPlan, PhysicalTask, ScalingAssignment};
+
+use crate::util::hash::hash_u64;
+use std::sync::Arc;
+
+/// A stream record. One shared enum keeps heterogeneous graphs simple to
+/// wire (the engine is not generic over the event type).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    /// Nexmark bid event.
+    Bid {
+        auction: u64,
+        bidder: u64,
+        price: u64,
+        /// Event time, milliseconds.
+        ts: u64,
+    },
+    /// Nexmark auction event.
+    Auction {
+        id: u64,
+        seller: u64,
+        category: u64,
+        expires: u64,
+        ts: u64,
+    },
+    /// Nexmark person (new user) event.
+    Person { id: u64, city: u64, ts: u64 },
+    /// Generic keyed event with opaque payload (microbenchmarks: §3 uses
+    /// 1,000 B events with a key in [0, 1M)).
+    Kv { key: u64, payload: Vec<u8>, ts: u64 },
+    /// Keyed integer pair (aggregation outputs).
+    Pair { key: u64, value: i64, ts: u64 },
+    /// Text line (wordcount quickstart).
+    Text { line: String, ts: u64 },
+}
+
+impl Record {
+    /// Event time in milliseconds.
+    pub fn ts(&self) -> u64 {
+        match self {
+            Record::Bid { ts, .. }
+            | Record::Auction { ts, .. }
+            | Record::Person { ts, .. }
+            | Record::Kv { ts, .. }
+            | Record::Pair { ts, .. }
+            | Record::Text { ts, .. } => *ts,
+        }
+    }
+
+    /// Approximate wire size in bytes (used for rate accounting).
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            Record::Bid { .. } => 32,
+            Record::Auction { .. } => 40,
+            Record::Person { .. } => 24,
+            Record::Kv { payload, .. } => 24 + payload.len(),
+            Record::Pair { .. } => 24,
+            Record::Text { line, .. } => 16 + line.len(),
+        }
+    }
+}
+
+/// Key extractor for hash-partitioned edges.
+pub type KeyFn = Arc<dyn Fn(&Record) -> u64 + Send + Sync>;
+
+/// How records travel across an edge.
+#[derive(Clone)]
+pub enum Partitioning {
+    /// Round-robin across downstream tasks (stateless rebalancing).
+    Rebalance,
+    /// Hash of the extracted key → key group → owning task.
+    Hash(KeyFn),
+    /// Copy to every downstream task.
+    Broadcast,
+}
+
+impl std::fmt::Debug for Partitioning {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Partitioning::Rebalance => write!(f, "Rebalance"),
+            Partitioning::Hash(_) => write!(f, "Hash"),
+            Partitioning::Broadcast => write!(f, "Broadcast"),
+        }
+    }
+}
+
+/// Operator id within a logical graph.
+pub type OpId = usize;
+
+/// What kind of vertex this is (drives scaling policy decisions: sources are
+/// excluded from resource accounting per §5; sinks are fixed at p=1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Source,
+    Transform,
+    Sink,
+}
+
+/// One logical operator.
+pub struct LogicalOp {
+    pub id: OpId,
+    pub name: String,
+    pub kind: OpKind,
+    /// Is the operator stateful (uses the keyed state backend)?
+    pub stateful: bool,
+    /// Inbound edges: (upstream operator, partitioning).
+    pub inputs: Vec<(OpId, Partitioning)>,
+    /// Default parallelism at t = 0.
+    pub initial_parallelism: u32,
+}
+
+/// A logical dataflow graph (the query).
+pub struct LogicalGraph {
+    pub name: String,
+    pub ops: Vec<LogicalOp>,
+}
+
+impl LogicalGraph {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            ops: Vec::new(),
+        }
+    }
+
+    /// Add an operator; returns its id.
+    pub fn add_op(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        stateful: bool,
+        inputs: Vec<(OpId, Partitioning)>,
+        initial_parallelism: u32,
+    ) -> OpId {
+        let id = self.ops.len();
+        for (src, _) in &inputs {
+            assert!(*src < id, "inputs must reference existing operators");
+        }
+        self.ops.push(LogicalOp {
+            id,
+            name: name.to_string(),
+            kind,
+            stateful,
+            inputs,
+            initial_parallelism,
+        });
+        id
+    }
+
+    pub fn op(&self, id: OpId) -> &LogicalOp {
+        &self.ops[id]
+    }
+
+    pub fn sources(&self) -> impl Iterator<Item = &LogicalOp> {
+        self.ops.iter().filter(|o| o.kind == OpKind::Source)
+    }
+
+    pub fn sinks(&self) -> impl Iterator<Item = &LogicalOp> {
+        self.ops.iter().filter(|o| o.kind == OpKind::Sink)
+    }
+
+    /// Downstream edges of `id`: (downstream op, partitioning, input port).
+    pub fn downstream(&self, id: OpId) -> Vec<(OpId, Partitioning, usize)> {
+        let mut out = Vec::new();
+        for op in &self.ops {
+            for (port, (src, part)) in op.inputs.iter().enumerate() {
+                if *src == id {
+                    out.push((op.id, part.clone(), port));
+                }
+            }
+        }
+        out
+    }
+
+    /// Operators in topological order (inputs always precede consumers —
+    /// guaranteed by construction since edges point backwards).
+    pub fn topo_order(&self) -> Vec<OpId> {
+        (0..self.ops.len()).collect()
+    }
+
+    /// Validate graph invariants.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.sources().count() == 0 {
+            anyhow::bail!("graph has no source");
+        }
+        if self.sinks().count() == 0 {
+            anyhow::bail!("graph has no sink");
+        }
+        for op in &self.ops {
+            match op.kind {
+                OpKind::Source => {
+                    if !op.inputs.is_empty() {
+                        anyhow::bail!("source {} has inputs", op.name);
+                    }
+                }
+                _ => {
+                    if op.inputs.is_empty() {
+                        anyhow::bail!("non-source {} has no inputs", op.name);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Key group assignment (Flink's `KeyGroupRangeAssignment`).
+///
+/// `key → hash → group ∈ [0, num_groups)`; each of `parallelism` tasks owns a
+/// contiguous range of groups.
+pub fn key_to_group(key: u64, num_groups: u32) -> u16 {
+    (hash_u64(key) % num_groups as u64) as u16
+}
+
+/// Range of key groups `[start, end)` owned by `task` of `parallelism`.
+pub fn groups_for_task(num_groups: u32, parallelism: u32, task: u32) -> (u16, u16) {
+    debug_assert!(task < parallelism);
+    let start = (task as u64 * num_groups as u64 / parallelism as u64) as u16;
+    let end = ((task as u64 + 1) * num_groups as u64 / parallelism as u64) as u16;
+    (start, end)
+}
+
+/// Which task owns `group` under `parallelism`?
+pub fn task_for_group(group: u16, num_groups: u32, parallelism: u32) -> u32 {
+    debug_assert!((group as u32) < num_groups);
+    ((group as u64 + 1) * parallelism as u64)
+        .div_ceil(num_groups as u64)
+        .saturating_sub(1) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn group_ranges_partition_exactly() {
+        prop(200, |g| {
+            let num_groups = 128u32;
+            let p = g.u64(1..65) as u32;
+            let mut covered = vec![0u32; num_groups as usize];
+            for task in 0..p {
+                let (lo, hi) = groups_for_task(num_groups, p, task);
+                assert!(lo <= hi);
+                for grp in lo..hi {
+                    covered[grp as usize] += 1;
+                    // The inverse map must agree.
+                    assert_eq!(
+                        task_for_group(grp, num_groups, p),
+                        task,
+                        "group {grp} p {p}"
+                    );
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "p={p}: {covered:?}");
+        });
+    }
+
+    #[test]
+    fn key_to_group_stable_and_in_range() {
+        for key in [0u64, 1, 42, u64::MAX] {
+            let g1 = key_to_group(key, 128);
+            let g2 = key_to_group(key, 128);
+            assert_eq!(g1, g2);
+            assert!((g1 as u32) < 128);
+        }
+    }
+
+    #[test]
+    fn rescale_preserves_group_ownership_contiguity() {
+        // After rescaling p=3 → p=5, every group still has exactly one owner.
+        for p in [1u32, 2, 3, 5, 8, 128] {
+            let mut seen = std::collections::HashSet::new();
+            for grp in 0..128u16 {
+                let t = task_for_group(grp, 128, p);
+                assert!(t < p);
+                seen.insert(t);
+            }
+            assert_eq!(seen.len(), p.min(128) as usize);
+        }
+    }
+
+    #[test]
+    fn graph_construction_and_validation() {
+        let mut g = LogicalGraph::new("wordcount");
+        let src = g.add_op("source", OpKind::Source, false, vec![], 1);
+        let flat = g.add_op(
+            "flatmap",
+            OpKind::Transform,
+            false,
+            vec![(src, Partitioning::Rebalance)],
+            1,
+        );
+        let count = g.add_op(
+            "count",
+            OpKind::Transform,
+            true,
+            vec![(
+                flat,
+                Partitioning::Hash(Arc::new(|r: &Record| match r {
+                    Record::Pair { key, .. } => *key,
+                    _ => 0,
+                })),
+            )],
+            2,
+        );
+        let _sink = g.add_op(
+            "sink",
+            OpKind::Sink,
+            false,
+            vec![(count, Partitioning::Rebalance)],
+            1,
+        );
+        g.validate().unwrap();
+        assert_eq!(g.downstream(flat).len(), 1);
+        assert_eq!(g.downstream(count)[0].0, 3);
+        assert_eq!(g.sources().count(), 1);
+    }
+
+    #[test]
+    fn invalid_graphs_rejected() {
+        let g = LogicalGraph::new("empty");
+        assert!(g.validate().is_err());
+
+        let mut g = LogicalGraph::new("no-sink");
+        g.add_op("src", OpKind::Source, false, vec![], 1);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn record_ts_and_size() {
+        let r = Record::Kv {
+            key: 1,
+            payload: vec![0; 1000],
+            ts: 99,
+        };
+        assert_eq!(r.ts(), 99);
+        assert_eq!(r.approx_bytes(), 1024);
+    }
+}

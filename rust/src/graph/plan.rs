@@ -1,0 +1,233 @@
+//! Physical plans: a logical graph plus a scaling assignment (parallelism
+//! and memory level per operator — the configuration C^t of §4).
+
+use super::{LogicalGraph, OpId, OpKind};
+use std::collections::BTreeMap;
+
+/// Scaling decision for one operator: parallelism and managed-memory level.
+/// `memory_level = None` is the paper's ⊥ (no managed memory — stateless).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpScaling {
+    pub parallelism: u32,
+    pub memory_level: Option<u32>,
+}
+
+impl OpScaling {
+    pub fn new(parallelism: u32, memory_level: Option<u32>) -> Self {
+        Self {
+            parallelism,
+            memory_level,
+        }
+    }
+}
+
+/// The configuration C^t: operator name → scaling decision.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScalingAssignment {
+    pub ops: BTreeMap<String, OpScaling>,
+}
+
+impl ScalingAssignment {
+    /// Initial configuration from the logical graph defaults: every operator
+    /// at its initial parallelism; stateful operators at memory level 0,
+    /// stateless at level 0 too (the *engine default* before Justin strips it
+    /// — DS2 never changes it).
+    pub fn initial(graph: &LogicalGraph) -> Self {
+        let mut ops = BTreeMap::new();
+        for op in &graph.ops {
+            ops.insert(
+                op.name.clone(),
+                OpScaling::new(op.initial_parallelism, Some(0)),
+            );
+        }
+        Self { ops }
+    }
+
+    pub fn get(&self, name: &str) -> OpScaling {
+        *self
+            .ops
+            .get(name)
+            .unwrap_or(&OpScaling::new(1, Some(0)))
+    }
+
+    pub fn set(&mut self, name: &str, s: OpScaling) {
+        self.ops.insert(name.to_string(), s);
+    }
+
+    pub fn parallelism(&self, name: &str) -> u32 {
+        self.get(name).parallelism
+    }
+}
+
+/// One deployable task (a slot request).
+#[derive(Debug, Clone)]
+pub struct PhysicalTask {
+    pub op_id: OpId,
+    pub op_name: String,
+    pub subtask: u32,
+    pub parallelism: u32,
+    /// Managed memory in MB for this task's state backend (0 = stateless/⊥).
+    pub managed_mb: u64,
+    /// CPU cores (one-core-per-task model, §2).
+    pub cores: u32,
+    pub kind: OpKind,
+}
+
+/// The deployable physical plan.
+#[derive(Debug, Clone)]
+pub struct PhysicalPlan {
+    pub tasks: Vec<PhysicalTask>,
+    /// Parallelism per op id.
+    pub parallelism: Vec<u32>,
+    /// Managed MB per op id (per task).
+    pub managed_mb: Vec<u64>,
+}
+
+impl PhysicalPlan {
+    /// Expand a logical graph + assignment into tasks.
+    ///
+    /// `managed_mb_base` is the per-slot managed memory at level 0 (§5:
+    /// 158 MB); level x gets `2^x ×` that.
+    pub fn build(
+        graph: &LogicalGraph,
+        assignment: &ScalingAssignment,
+        managed_mb_base: u64,
+    ) -> Self {
+        let mut tasks = Vec::new();
+        let mut parallelism = Vec::with_capacity(graph.ops.len());
+        let mut managed = Vec::with_capacity(graph.ops.len());
+        for op in &graph.ops {
+            let scaling = assignment.get(&op.name);
+            let p = scaling.parallelism.max(1);
+            let mb = match scaling.memory_level {
+                None => 0,
+                Some(level) => managed_mb_base << level.min(16),
+            };
+            parallelism.push(p);
+            managed.push(mb);
+            for subtask in 0..p {
+                tasks.push(PhysicalTask {
+                    op_id: op.id,
+                    op_name: op.name.clone(),
+                    subtask,
+                    parallelism: p,
+                    managed_mb: mb,
+                    cores: 1,
+                    kind: op.kind,
+                });
+            }
+        }
+        Self {
+            tasks,
+            parallelism,
+            managed_mb: managed,
+        }
+    }
+
+    /// Task count for one operator.
+    pub fn op_parallelism(&self, op_id: OpId) -> u32 {
+        self.parallelism[op_id]
+    }
+
+    /// Total CPU cores, excluding sources (§5 excludes workload injectors).
+    pub fn total_cores_excl_sources(&self) -> u32 {
+        self.tasks
+            .iter()
+            .filter(|t| t.kind != OpKind::Source)
+            .map(|t| t.cores)
+            .sum()
+    }
+
+    /// Total managed memory in MB, excluding sources.
+    pub fn total_managed_mb_excl_sources(&self) -> u64 {
+        self.tasks
+            .iter()
+            .filter(|t| t.kind != OpKind::Source)
+            .map(|t| t.managed_mb)
+            .sum()
+    }
+
+    /// Slot requests for the placement layer, excluding sources (which the
+    /// paper treats as external injectors).
+    pub fn slot_requests(&self) -> Vec<crate::placement::SlotRequest> {
+        self.tasks
+            .iter()
+            .filter(|t| t.kind != OpKind::Source)
+            .map(|t| crate::placement::SlotRequest {
+                op_name: t.op_name.clone(),
+                subtask: t.subtask,
+                cores: t.cores,
+                managed_mb: t.managed_mb,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, Partitioning};
+
+    fn graph() -> LogicalGraph {
+        let mut g = LogicalGraph::new("test");
+        let src = g.add_op("src", OpKind::Source, false, vec![], 1);
+        let map = g.add_op(
+            "map",
+            OpKind::Transform,
+            false,
+            vec![(src, Partitioning::Rebalance)],
+            2,
+        );
+        g.add_op(
+            "sink",
+            OpKind::Sink,
+            false,
+            vec![(map, Partitioning::Rebalance)],
+            1,
+        );
+        g
+    }
+
+    #[test]
+    fn initial_assignment_uses_defaults() {
+        let g = graph();
+        let a = ScalingAssignment::initial(&g);
+        assert_eq!(a.parallelism("map"), 2);
+        assert_eq!(a.get("map").memory_level, Some(0));
+    }
+
+    #[test]
+    fn build_expands_tasks() {
+        let g = graph();
+        let mut a = ScalingAssignment::initial(&g);
+        a.set("map", OpScaling::new(3, Some(1)));
+        let plan = PhysicalPlan::build(&g, &a, 158);
+        assert_eq!(plan.tasks.len(), 1 + 3 + 1);
+        assert_eq!(plan.op_parallelism(1), 3);
+        // level 1 = 316 MB per task
+        assert!(plan
+            .tasks
+            .iter()
+            .filter(|t| t.op_name == "map")
+            .all(|t| t.managed_mb == 316));
+    }
+
+    #[test]
+    fn stateless_bottom_gets_zero_memory() {
+        let g = graph();
+        let mut a = ScalingAssignment::initial(&g);
+        a.set("map", OpScaling::new(2, None));
+        let plan = PhysicalPlan::build(&g, &a, 158);
+        assert_eq!(plan.total_managed_mb_excl_sources(), 158); // only sink
+    }
+
+    #[test]
+    fn resource_totals_exclude_sources() {
+        let g = graph();
+        let a = ScalingAssignment::initial(&g);
+        let plan = PhysicalPlan::build(&g, &a, 158);
+        // map(2) + sink(1), source excluded.
+        assert_eq!(plan.total_cores_excl_sources(), 3);
+        assert_eq!(plan.total_managed_mb_excl_sources(), 3 * 158);
+    }
+}

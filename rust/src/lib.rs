@@ -1,0 +1,44 @@
+//! # Justin — hybrid CPU/memory elastic scaling for distributed stream processing
+//!
+//! A from-scratch reproduction of *Justin: Hybrid CPU/Memory Elastic Scaling
+//! for Distributed Stream Processing* (Schmitz, Rosinosky, Rivière, 2025).
+//!
+//! The crate contains, as independent layers:
+//!
+//! * [`engine`] — "streamline", a Flink-like distributed stream processing
+//!   engine: dataflow graphs, task threads, key groups, backpressure,
+//!   windows, savepoint/rescale reconfiguration.
+//! * [`state`] — state backends, including "rockslite" ([`state::lsm`]), a
+//!   log-structured-merge state store with a MemTable, leveled SSTables,
+//!   bloom filters and an LRU block cache (the RocksDB stand-in).
+//! * [`metrics`] — "promlite", a metrics registry with 5 s scrape windows.
+//! * [`scaler`] — the paper's contribution: the DS2 baseline auto-scaler and
+//!   the Justin hybrid CPU/memory policy (Algorithm 1).
+//! * [`placement`] — "k8slite": task-manager pods and multidimensional
+//!   bin-packing of heterogeneous task slots.
+//! * [`nexmark`] — the Nexmark benchmark generator and queries
+//!   q1, q2, q3, q5, q8, q11.
+//! * [`sim`] — a discrete-event simulator of the paper's 7-node testbed used
+//!   to regenerate Figure 4 and Figure 5 in virtual time.
+//! * [`runtime`] — the PJRT/XLA runtime that loads AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) for operator batch compute.
+//!
+//! Python (JAX + Pallas) participates only at build time (`make artifacts`);
+//! the binary is self-contained afterwards.
+
+pub mod bench;
+pub mod config;
+pub mod engine;
+pub mod graph;
+pub mod metrics;
+pub mod nexmark;
+pub mod placement;
+pub mod runtime;
+pub mod scaler;
+pub mod sim;
+pub mod state;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

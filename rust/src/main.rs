@@ -1,0 +1,151 @@
+//! `justin` — CLI launcher for the Justin reproduction.
+//!
+//! ```text
+//! justin fig4                         # regenerate Figure 4 (microbench)
+//! justin fig5 [q1|q3|q5|q11|q8|all]   # regenerate Figure 5 (DS2 vs Justin)
+//! justin sim --query q11 --policy justin [--duration 1500] [--verbose]
+//! justin run --query q5 --rate 200000 --events 2000000  # real engine
+//! justin config --file path.toml      # validate a config file
+//! ```
+
+use justin::bench::figures::{fig4_print, fig4_series, fig5_compare, FIG5_QUERIES};
+use justin::config::{Config, ScalerKind};
+use justin::engine::{JobManager, Scraper};
+use justin::graph::ScalingAssignment;
+use justin::metrics::Registry;
+use justin::nexmark::queries::{self, QuerySpec};
+use justin::scaler::{Ds2, Justin, Policy};
+use justin::sim::profiles::query_profile;
+use justin::sim::runner::run_autoscaling;
+use justin::util::cli::Args;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => justin::config::load(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    if let Some(d) = args.get("duration") {
+        cfg.sim.duration_s = d.parse()?;
+    }
+    if let Some(s) = args.get("seed") {
+        cfg.sim.seed = s.parse()?;
+    }
+    Ok(cfg)
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let command = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match command {
+        "fig4" => {
+            let cfg = load_config(&args)?;
+            let cells = fig4_series(&cfg);
+            fig4_print(&cells);
+        }
+        "fig5" => {
+            let cfg = load_config(&args)?;
+            let which = args
+                .positional
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            let queries: Vec<&str> = if which == "all" {
+                FIG5_QUERIES.to_vec()
+            } else {
+                vec![which]
+            };
+            for q in queries {
+                fig5_compare(q, &cfg)?.print(args.flag("verbose"));
+            }
+        }
+        "sim" => {
+            let cfg = load_config(&args)?;
+            let query = args.get_or("query", "q11");
+            let policy_kind: ScalerKind = args.get_or("policy", "justin").parse()?;
+            let profile = query_profile(query)?;
+            let mut policy: Box<dyn Policy> = match policy_kind {
+                ScalerKind::Ds2 => Box::new(Ds2::new(cfg.scaler.clone())),
+                _ => Box::new(Justin::new(cfg.scaler.clone())),
+            };
+            let trace = run_autoscaling(&profile, policy.as_mut(), &cfg);
+            println!(
+                "{query} under {policy_kind}: steps={} converged={:?}",
+                trace.steps(),
+                trace.converged_at_s
+            );
+            for p in trace.points.iter().step_by(6) {
+                println!(
+                    "t={:>5.0}s rate={:>10.0} cores={:>3} mem={:>6} MB",
+                    p.t_s, p.rate, p.cores, p.memory_mb
+                );
+            }
+            for r in &trace.reconfigs {
+                println!("reconfig at t={:.0}s → {:?}", r.t_s, r.assignment.ops);
+            }
+        }
+        "run" => {
+            // Real engine: run a Nexmark query for a bounded number of
+            // events, print sink throughput.
+            let cfg = load_config(&args)?;
+            let query = args.get_or("query", "q1");
+            let rate: f64 = args.get_parse("rate", 100_000.0);
+            let events: u64 = args.get_parse("events", 1_000_000);
+            let spec = QuerySpec {
+                rate,
+                bounded: Some(events),
+                seed: cfg.sim.seed,
+                source_parallelism: 2,
+                window_ms: args.get_parse("window-ms", 1000),
+            };
+            let job = queries::build(query, spec)?;
+            let registry = Registry::new();
+            let mut jm = JobManager::new(cfg);
+            let assignment = ScalingAssignment::initial(&job.graph);
+            let t0 = std::time::Instant::now();
+            let running = jm.deploy(&job, &assignment, &registry, None)?;
+            let mut scraper = Scraper::new(registry.clone());
+            let sp = running.wait_drained()?;
+            let wall = t0.elapsed().as_secs_f64();
+            let _ = scraper.sample();
+            let sink_in: u64 = {
+                let snap = registry.snapshot();
+                snap.iter()
+                    .filter_map(|(id, s)| {
+                        (id.name == justin::metrics::names::RECORDS_IN
+                            && id.label("op") == Some("sink"))
+                        .then(|| match s {
+                            justin::metrics::Sample::Counter(v) => *v,
+                            _ => 0,
+                        })
+                    })
+                    .sum()
+            };
+            println!(
+                "{query}: {events} events in {wall:.2}s ({:.0} ev/s through the engine); \
+                 sink received {sink_in}; savepoint entries {}",
+                events as f64 / wall,
+                sp.total_entries()
+            );
+        }
+        "config" => {
+            let path = args.get("file").unwrap_or("justin.toml");
+            let cfg = justin::config::load(std::path::Path::new(path))?;
+            println!("ok: {cfg:#?}");
+        }
+        _ => {
+            println!(
+                "usage: justin <fig4|fig5 [query]|sim|run|config> [--query q] \
+                 [--policy ds2|justin] [--rate N] [--events N] [--duration S] \
+                 [--seed N] [--config file.toml] [--verbose]"
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,385 @@
+//! "promlite" — a Prometheus-flavoured metrics layer.
+//!
+//! The paper's control loop consumes metrics scraped at a 5 s granularity and
+//! averaged over 2-minute decision windows (§5). This module provides:
+//!
+//! * lock-free [`Counter`]/[`Gauge`] cells and a mutex-guarded [`Histo`]
+//!   shared between task threads and the scraper,
+//! * a [`Registry`] keyed by `(name, labels)`,
+//! * [`scrape`](Registry::snapshot) producing point-in-time snapshots, and
+//! * [`OperatorWindow`]/[`window::MetricsWindow`] — the per-operator
+//!   decision-window aggregation (busyness, backpressure, true rate, cache
+//!   hit rate θ, state access latency τ) read by the auto-scalers.
+
+pub mod window;
+
+use crate::util::histogram::Histogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub use window::{OperatorWindow, WindowAggregator};
+
+/// Monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1)
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous value. Stored as `f64` bits in an `AtomicU64`.
+#[derive(Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    pub fn add(&self, delta: f64) {
+        // CAS loop; gauges are low-frequency so contention is negligible.
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + delta).to_bits();
+            match self.bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+/// Shared histogram (mutex-guarded; recorded from task threads, drained by
+/// the scraper).
+#[derive(Default)]
+pub struct Histo {
+    inner: Mutex<Histogram>,
+}
+
+impl Histo {
+    pub fn record(&self, v: u64) {
+        self.inner.lock().unwrap().record(v);
+    }
+
+    pub fn record_n(&self, v: u64, n: u64) {
+        self.inner.lock().unwrap().record_n(v, n);
+    }
+
+    /// Snapshot and reset (delta-style scrape).
+    pub fn drain(&self) -> Histogram {
+        let mut guard = self.inner.lock().unwrap();
+        let out = guard.clone();
+        guard.clear();
+        out
+    }
+
+    /// Snapshot without reset.
+    pub fn peek(&self) -> Histogram {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+/// Metric identity: name plus ordered label pairs,
+/// e.g. `("task_busy_ns", [("op","Count"),("task","2")])`.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct MetricId {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+}
+
+impl MetricId {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            labels: Vec::new(),
+        }
+    }
+
+    pub fn with(mut self, key: &str, value: impl std::fmt::Display) -> Self {
+        self.labels.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+impl std::fmt::Display for MetricId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name)?;
+        if !self.labels.is_empty() {
+            write!(f, "{{")?;
+            for (i, (k, v)) in self.labels.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ",")?;
+                }
+                write!(f, "{k}=\"{v}\"")?;
+            }
+            write!(f, "}}")?;
+        }
+        Ok(())
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histo(Arc<Histo>),
+}
+
+/// A scraped value.
+#[derive(Debug, Clone)]
+pub enum Sample {
+    Counter(u64),
+    Gauge(f64),
+    /// (count, mean, p99) of the histogram since the last drain.
+    Histo {
+        count: u64,
+        mean: f64,
+        p99: u64,
+    },
+}
+
+/// Point-in-time scrape of the whole registry.
+pub type Snapshot = BTreeMap<MetricId, Sample>;
+
+/// Thread-safe metric registry. Cloning shares the underlying metrics.
+#[derive(Clone, Default)]
+pub struct Registry {
+    metrics: Arc<Mutex<BTreeMap<MetricId, Metric>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create a counter.
+    pub fn counter(&self, id: MetricId) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(id)
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+        {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric registered with a different type"),
+        }
+    }
+
+    /// Get or create a gauge.
+    pub fn gauge(&self, id: MetricId) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(id)
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+        {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric registered with a different type"),
+        }
+    }
+
+    /// Get or create a histogram.
+    pub fn histo(&self, id: MetricId) -> Arc<Histo> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(id)
+            .or_insert_with(|| Metric::Histo(Arc::new(Histo::default())))
+        {
+            Metric::Histo(h) => h.clone(),
+            _ => panic!("metric registered with a different type"),
+        }
+    }
+
+    /// Scrape all metrics. Histograms are drained (delta semantics, like a
+    /// Prometheus summary over the scrape interval); counters and gauges are
+    /// read without reset.
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.metrics.lock().unwrap();
+        m.iter()
+            .map(|(id, metric)| {
+                let sample = match metric {
+                    Metric::Counter(c) => Sample::Counter(c.get()),
+                    Metric::Gauge(g) => Sample::Gauge(g.get()),
+                    Metric::Histo(h) => {
+                        let hist = h.drain();
+                        Sample::Histo {
+                            count: hist.count(),
+                            mean: hist.mean(),
+                            p99: hist.p99(),
+                        }
+                    }
+                };
+                (id.clone(), sample)
+            })
+            .collect()
+    }
+
+    /// Remove all metrics whose id matches `pred` (used when tasks are torn
+    /// down during reconfiguration).
+    pub fn retain(&self, pred: impl Fn(&MetricId) -> bool) {
+        self.metrics.lock().unwrap().retain(|id, _| pred(id));
+    }
+
+    /// Render in Prometheus text exposition format (for debugging/export).
+    pub fn render_text(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::new();
+        for (id, sample) in &snap {
+            match sample {
+                Sample::Counter(v) => out.push_str(&format!("{id} {v}\n")),
+                Sample::Gauge(v) => out.push_str(&format!("{id} {v}\n")),
+                Sample::Histo { count, mean, p99 } => {
+                    out.push_str(&format!("{id}_count {count}\n"));
+                    out.push_str(&format!("{id}_mean {mean}\n"));
+                    out.push_str(&format!("{id}_p99 {p99}\n"));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Canonical metric names used across the engine (single source of truth so
+/// the scaler and the engine agree).
+pub mod names {
+    /// Nanoseconds spent processing events (per task).
+    pub const BUSY_NS: &str = "task_busy_ns";
+    /// Nanoseconds blocked pushing to downstream (backpressure, per task).
+    pub const BACKPRESSURE_NS: &str = "task_backpressure_ns";
+    /// Nanoseconds idle waiting for input (per task).
+    pub const IDLE_NS: &str = "task_idle_ns";
+    /// Events processed (per task).
+    pub const RECORDS_IN: &str = "task_records_in";
+    /// Events emitted (per task).
+    pub const RECORDS_OUT: &str = "task_records_out";
+    /// RocksDB/rockslite block cache hits (per task).
+    pub const STATE_CACHE_HIT: &str = "state_cache_hit";
+    /// Block cache misses (per task).
+    pub const STATE_CACHE_MISS: &str = "state_cache_miss";
+    /// State access latency histogram, nanoseconds (per task).
+    pub const STATE_ACCESS_NS: &str = "state_access_ns";
+    /// Current state size in bytes (per task).
+    pub const STATE_SIZE_BYTES: &str = "state_size_bytes";
+    /// Source: current emitted rate (events/s).
+    pub const SOURCE_RATE: &str = "source_rate";
+    /// Sink: observed end-to-end rate (events/s).
+    pub const SINK_RATE: &str = "sink_rate";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let reg = Registry::new();
+        let c = reg.counter(MetricId::new("c"));
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = reg.gauge(MetricId::new("g"));
+        g.set(2.5);
+        g.add(0.5);
+        assert!((g.get() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_id_shares_metric() {
+        let reg = Registry::new();
+        let a = reg.counter(MetricId::new("x").with("op", "map"));
+        let b = reg.counter(MetricId::new("x").with("op", "map"));
+        a.inc();
+        assert_eq!(b.get(), 1);
+        // Different label → different metric.
+        let c = reg.counter(MetricId::new("x").with("op", "filter"));
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn histo_drain_resets() {
+        let reg = Registry::new();
+        let h = reg.histo(MetricId::new("lat"));
+        h.record(100);
+        h.record(200);
+        let snap = h.drain();
+        assert_eq!(snap.count(), 2);
+        assert_eq!(h.peek().count(), 0);
+    }
+
+    #[test]
+    fn snapshot_contains_all() {
+        let reg = Registry::new();
+        reg.counter(MetricId::new("a")).add(7);
+        reg.gauge(MetricId::new("b")).set(1.5);
+        reg.histo(MetricId::new("c")).record(10);
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 3);
+        match &snap[&MetricId::new("a")] {
+            Sample::Counter(7) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn retain_drops() {
+        let reg = Registry::new();
+        reg.counter(MetricId::new("keep"));
+        reg.counter(MetricId::new("drop"));
+        reg.retain(|id| id.name == "keep");
+        assert_eq!(reg.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn concurrent_counting() {
+        let reg = Registry::new();
+        let c = reg.counter(MetricId::new("n"));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn display_format() {
+        let id = MetricId::new("m").with("op", "count").with("task", 3);
+        assert_eq!(id.to_string(), "m{op=\"count\",task=\"3\"}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Decision-window aggregation: 5 s operator samples → per-window averages
+//! consumed by the auto-scalers (§5: 2-minute decision windows, metrics
+//! aggregated at 5 s granularity, averaged across an operator's tasks).
+
+use std::collections::BTreeMap;
+
+/// One 5 s sample for one operator (already averaged over its tasks).
+#[derive(Debug, Clone, Default)]
+pub struct OperatorSample {
+    /// Fraction of CPU time spent processing events, in [0,1].
+    pub busyness: f64,
+    /// Fraction of time blocked on downstream (backpressure), in [0,1].
+    pub backpressure: f64,
+    /// Events processed per second of wall time (whole operator).
+    pub observed_rate: f64,
+    /// Events processed per second of *busy* time (whole operator) — DS2's
+    /// "true processing rate".
+    pub true_rate: f64,
+    /// Events emitted per second (whole operator), for cascade selectivity.
+    pub output_rate: f64,
+    /// Cache hit rate θ in [0,1]; `None` for stateless operators (§4:
+    /// statelessness is detected by the absence of RocksDB metrics).
+    pub cache_hit_rate: Option<f64>,
+    /// Mean state access latency τ in µs; `None` for stateless operators.
+    pub access_latency_us: Option<f64>,
+    /// Total state size in bytes across tasks.
+    pub state_size_bytes: u64,
+}
+
+/// Aggregated metrics for one operator over one decision window.
+#[derive(Debug, Clone, Default)]
+pub struct OperatorWindow {
+    pub samples: u32,
+    pub busyness: f64,
+    pub backpressure: f64,
+    pub observed_rate: f64,
+    pub true_rate: f64,
+    pub output_rate: f64,
+    /// `None` if no task of this operator reported storage metrics.
+    pub cache_hit_rate: Option<f64>,
+    pub access_latency_us: Option<f64>,
+    pub state_size_bytes: u64,
+}
+
+impl OperatorWindow {
+    /// Operators with no storage metrics are stateless (§4).
+    pub fn is_stateless(&self) -> bool {
+        self.cache_hit_rate.is_none() && self.access_latency_us.is_none()
+    }
+
+    /// Selectivity: output events per input event over the window.
+    pub fn selectivity(&self) -> f64 {
+        if self.observed_rate <= 0.0 {
+            1.0
+        } else {
+            self.output_rate / self.observed_rate
+        }
+    }
+}
+
+/// Accumulates [`OperatorSample`]s per operator and closes into
+/// [`OperatorWindow`]s at the end of a decision window.
+#[derive(Debug, Default)]
+pub struct WindowAggregator {
+    acc: BTreeMap<String, Acc>,
+}
+
+#[derive(Debug, Default)]
+struct Acc {
+    n: u32,
+    busyness: f64,
+    backpressure: f64,
+    observed_rate: f64,
+    true_rate: f64,
+    output_rate: f64,
+    hit_sum: f64,
+    hit_n: u32,
+    lat_sum: f64,
+    lat_n: u32,
+    state_size_last: u64,
+}
+
+impl WindowAggregator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one 5 s sample for `operator`.
+    pub fn record(&mut self, operator: &str, s: &OperatorSample) {
+        let a = self.acc.entry(operator.to_string()).or_default();
+        a.n += 1;
+        a.busyness += s.busyness;
+        a.backpressure += s.backpressure;
+        a.observed_rate += s.observed_rate;
+        a.true_rate += s.true_rate;
+        a.output_rate += s.output_rate;
+        if let Some(h) = s.cache_hit_rate {
+            a.hit_sum += h;
+            a.hit_n += 1;
+        }
+        if let Some(l) = s.access_latency_us {
+            a.lat_sum += l;
+            a.lat_n += 1;
+        }
+        a.state_size_last = s.state_size_bytes;
+    }
+
+    /// Number of samples recorded for `operator` in the open window.
+    pub fn sample_count(&self, operator: &str) -> u32 {
+        self.acc.get(operator).map(|a| a.n).unwrap_or(0)
+    }
+
+    /// Close the window: produce per-operator averages and reset.
+    pub fn close(&mut self) -> BTreeMap<String, OperatorWindow> {
+        let out = self
+            .acc
+            .iter()
+            .map(|(op, a)| {
+                let n = a.n.max(1) as f64;
+                (
+                    op.clone(),
+                    OperatorWindow {
+                        samples: a.n,
+                        busyness: a.busyness / n,
+                        backpressure: a.backpressure / n,
+                        observed_rate: a.observed_rate / n,
+                        true_rate: a.true_rate / n,
+                        output_rate: a.output_rate / n,
+                        cache_hit_rate: (a.hit_n > 0).then(|| a.hit_sum / a.hit_n as f64),
+                        access_latency_us: (a.lat_n > 0)
+                            .then(|| a.lat_sum / a.lat_n as f64),
+                        state_size_bytes: a.state_size_last,
+                    },
+                )
+            })
+            .collect();
+        self.acc.clear();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(busy: f64, rate: f64, hit: Option<f64>) -> OperatorSample {
+        OperatorSample {
+            busyness: busy,
+            backpressure: 0.1,
+            observed_rate: rate,
+            true_rate: rate / busy.max(1e-9),
+            output_rate: rate * 2.0,
+            cache_hit_rate: hit,
+            access_latency_us: hit.map(|_| 500.0),
+            state_size_bytes: 1024,
+        }
+    }
+
+    #[test]
+    fn averages_over_samples() {
+        let mut w = WindowAggregator::new();
+        w.record("count", &sample(0.4, 100.0, Some(0.9)));
+        w.record("count", &sample(0.6, 200.0, Some(0.7)));
+        let out = w.close();
+        let c = &out["count"];
+        assert_eq!(c.samples, 2);
+        assert!((c.busyness - 0.5).abs() < 1e-9);
+        assert!((c.observed_rate - 150.0).abs() < 1e-9);
+        assert!((c.cache_hit_rate.unwrap() - 0.8).abs() < 1e-9);
+        assert!(!c.is_stateless());
+    }
+
+    #[test]
+    fn stateless_detection() {
+        let mut w = WindowAggregator::new();
+        w.record("map", &sample(0.5, 100.0, None));
+        let out = w.close();
+        assert!(out["map"].is_stateless());
+    }
+
+    #[test]
+    fn close_resets() {
+        let mut w = WindowAggregator::new();
+        w.record("op", &sample(0.5, 1.0, None));
+        let _ = w.close();
+        assert!(w.close().is_empty());
+        assert_eq!(w.sample_count("op"), 0);
+    }
+
+    #[test]
+    fn selectivity() {
+        let mut w = WindowAggregator::new();
+        w.record("flatmap", &sample(0.5, 100.0, None));
+        let out = w.close();
+        assert!((out["flatmap"].selectivity() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mixed_stateful_samples_average_only_present() {
+        let mut w = WindowAggregator::new();
+        w.record("op", &sample(0.5, 10.0, Some(0.6)));
+        w.record("op", &sample(0.5, 10.0, None));
+        let out = w.close();
+        assert!((out["op"].cache_hit_rate.unwrap() - 0.6).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,200 @@
+//! The Nexmark benchmark (§5): an auction-system event generator and the six
+//! queries the paper evaluates (q1, q2, q3, q5, q8, q11 — the same set the
+//! original DS2 evaluation used).
+//!
+//! Event mix follows the classic Nexmark proportions: per 50 events,
+//! 1 person, 3 auctions, 46 bids.
+
+pub mod queries;
+
+use crate::graph::Record;
+use crate::util::rng::Rng;
+
+/// Nexmark event-mix period (1 person : 3 auctions : 46 bids).
+pub const PERSON_PROPORTION: u64 = 1;
+pub const AUCTION_PROPORTION: u64 = 3;
+pub const TOTAL_PROPORTION: u64 = 50;
+
+/// Deterministic Nexmark event generator.
+///
+/// A single logical event stream is defined by the global sequence number;
+/// source subtask `i` of `p` generates the subsequence `i, i+p, i+2p, …`, so
+/// any parallelism yields the same merged stream (Flink's Nexmark generator
+/// behaves the same way).
+pub struct NexmarkGenerator {
+    rng: Rng,
+    /// Global sequence of the next event.
+    seq: u64,
+    /// Stride between this task's events (source parallelism).
+    stride: u64,
+    /// Total target rate across all source subtasks, events/s (drives the
+    /// synthetic event time).
+    total_rate: f64,
+    /// Number of distinct hot/cold entities (controls working-set size —
+    /// the §3 microbench uses 1M keys; queries use smaller active sets).
+    pub active_people: u64,
+    pub active_auctions: u64,
+}
+
+impl NexmarkGenerator {
+    pub fn new(seed: u64, subtask: u32, parallelism: u32, total_rate: f64) -> Self {
+        Self {
+            // Independent streams per subtask, deterministic per seed.
+            rng: Rng::new(seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(subtask as u64 + 1))),
+            seq: subtask as u64,
+            stride: parallelism as u64,
+            total_rate,
+            active_people: 50_000,
+            active_auctions: 200_000,
+        }
+    }
+
+    /// Synthetic event time for global sequence `seq` at the target rate.
+    #[inline]
+    pub fn ts_of(&self, seq: u64) -> u64 {
+        (seq as f64 * 1000.0 / self.total_rate) as u64
+    }
+
+    /// Number of person events before global sequence `seq`.
+    fn person_id_at(seq: u64) -> u64 {
+        let period = seq / TOTAL_PROPORTION;
+        let offset = seq % TOTAL_PROPORTION;
+        period * PERSON_PROPORTION + offset.min(PERSON_PROPORTION)
+    }
+
+    fn auction_id_at(seq: u64) -> u64 {
+        let period = seq / TOTAL_PROPORTION;
+        let offset = (seq % TOTAL_PROPORTION).saturating_sub(PERSON_PROPORTION);
+        period * AUCTION_PROPORTION + offset.min(AUCTION_PROPORTION)
+    }
+
+    /// Generate the next event of this subtask's subsequence.
+    pub fn next_event(&mut self) -> Record {
+        let seq = self.seq;
+        self.seq += self.stride;
+        let ts = self.ts_of(seq);
+        let in_period = seq % TOTAL_PROPORTION;
+        if in_period < PERSON_PROPORTION {
+            let id = Self::person_id_at(seq);
+            Record::Person {
+                id,
+                city: self.rng.gen_range(1000),
+                ts,
+            }
+        } else if in_period < PERSON_PROPORTION + AUCTION_PROPORTION {
+            let id = Self::auction_id_at(seq);
+            let max_person = Self::person_id_at(seq).max(1);
+            Record::Auction {
+                id,
+                seller: self.rng.gen_range(max_person),
+                category: self.rng.gen_range(10),
+                expires: ts + 10_000 + self.rng.gen_range(100_000),
+                ts,
+            }
+        } else {
+            // Bids reference a recent auction and bidder (bounded working
+            // set: hot entities, like the Nexmark generator's hot keys).
+            let max_auction = Self::auction_id_at(seq).max(1);
+            let max_person = Self::person_id_at(seq).max(1);
+            let auction_lo = max_auction.saturating_sub(self.active_auctions);
+            let person_lo = max_person.saturating_sub(self.active_people);
+            Record::Bid {
+                auction: self.rng.range(auction_lo, max_auction.max(auction_lo + 1)),
+                bidder: self.rng.range(person_lo, max_person.max(person_lo + 1)),
+                price: 100 + self.rng.gen_range(10_000),
+                ts,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn event_mix_proportions() {
+        let mut g = NexmarkGenerator::new(1, 0, 1, 1000.0);
+        let (mut p, mut a, mut b) = (0u64, 0u64, 0u64);
+        for _ in 0..50_000 {
+            match g.next_event() {
+                Record::Person { .. } => p += 1,
+                Record::Auction { .. } => a += 1,
+                Record::Bid { .. } => b += 1,
+                _ => unreachable!(),
+            }
+        }
+        assert_eq!(p, 1000);
+        assert_eq!(a, 3000);
+        assert_eq!(b, 46_000);
+    }
+
+    #[test]
+    fn timestamps_monotone_per_subtask() {
+        let mut g = NexmarkGenerator::new(2, 1, 4, 10_000.0);
+        let mut last = 0;
+        for _ in 0..10_000 {
+            let ts = g.next_event().ts();
+            assert!(ts >= last);
+            last = ts;
+        }
+    }
+
+    #[test]
+    fn parallel_subtasks_partition_sequence() {
+        // Merged ids from p subtasks == ids from a single generator.
+        let mut solo = NexmarkGenerator::new(7, 0, 1, 1000.0);
+        let mut solo_people = std::collections::BTreeSet::new();
+        for _ in 0..5000 {
+            if let Record::Person { id, .. } = solo.next_event() {
+                solo_people.insert(id);
+            }
+        }
+        let mut merged_people = std::collections::BTreeSet::new();
+        for sub in 0..4 {
+            let mut g = NexmarkGenerator::new(7, sub, 4, 1000.0);
+            for _ in 0..1250 {
+                if let Record::Person { id, .. } = g.next_event() {
+                    merged_people.insert(id);
+                }
+            }
+        }
+        assert_eq!(solo_people, merged_people);
+    }
+
+    #[test]
+    fn bids_reference_existing_entities() {
+        prop(20, |gen| {
+            let seed = gen.u64(0..1_000_000);
+            let mut g = NexmarkGenerator::new(seed, 0, 1, 1000.0);
+            let mut max_auction = 0;
+            let mut max_person = 0;
+            for _ in 0..2000 {
+                match g.next_event() {
+                    Record::Person { id, .. } => max_person = max_person.max(id + 1),
+                    Record::Auction { id, seller, .. } => {
+                        assert!(seller < max_person.max(1), "seller references person");
+                        max_auction = max_auction.max(id + 1);
+                    }
+                    Record::Bid {
+                        auction, bidder, ..
+                    } => {
+                        assert!(auction < max_auction.max(1));
+                        assert!(bidder < max_person.max(1));
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = NexmarkGenerator::new(42, 0, 2, 1000.0);
+        let mut b = NexmarkGenerator::new(42, 0, 2, 1000.0);
+        for _ in 0..100 {
+            assert_eq!(a.next_event(), b.next_event());
+        }
+    }
+}

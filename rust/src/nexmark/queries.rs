@@ -1,0 +1,625 @@
+//! The six Nexmark queries of the paper's evaluation (§5), as deployable
+//! [`StreamJob`]s. Operator names follow the paper's descriptions:
+//!
+//! * **q1** — currency conversion: one stateless Map.
+//! * **q2** — selection: one stateless Filter.
+//! * **q3** — incremental (unbounded) join of filtered persons/auctions;
+//!   state converges small (~8 MB in the paper).
+//! * **q5** — hot items: sliding-window count of bids per auction.
+//! * **q8** — monitor new users: tumbling-window join persons ⋈ auctions.
+//! * **q11** — user sessions: session-window count of bids per bidder.
+
+use super::NexmarkGenerator;
+use crate::engine::operators::{
+    CountAggregator, FlatMapOp, IncrementalJoinOp, KeyedWindowAggregate, SinkOp, Source,
+    WindowedJoinOp,
+};
+use crate::engine::sources::RateLimitedSource;
+use crate::engine::window::{Window, WindowAssigner};
+use crate::engine::{OpFactory, StreamJob};
+use crate::graph::{LogicalGraph, OpKind, Partitioning, Record};
+use std::sync::Arc;
+
+/// Workload parameters shared by all query builders.
+#[derive(Debug, Clone, Copy)]
+pub struct QuerySpec {
+    /// Total source rate, events/s.
+    pub rate: f64,
+    /// Bound on total events (None = run until stopped).
+    pub bounded: Option<u64>,
+    /// Generator seed.
+    pub seed: u64,
+    /// Source parallelism.
+    pub source_parallelism: u32,
+    /// Window length scale in ms (paper uses seconds-to-minutes windows;
+    /// examples use smaller ones so runs finish quickly).
+    pub window_ms: u64,
+}
+
+impl Default for QuerySpec {
+    fn default() -> Self {
+        Self {
+            rate: 100_000.0,
+            bounded: None,
+            seed: 0xEC0,
+            source_parallelism: 2,
+            window_ms: 10_000,
+        }
+    }
+}
+
+fn nexmark_source(spec: QuerySpec) -> OpFactory {
+    OpFactory::source(move |subtask, p| {
+        let mut gen = NexmarkGenerator::new(spec.seed, subtask, p, spec.rate);
+        let per_task = (spec.bounded.unwrap_or(u64::MAX) / p as u64).max(1);
+        let src = RateLimitedSource::new(spec.rate / p as f64, move |_seq| gen.next_event());
+        let src = if spec.bounded.is_some() {
+            src.bounded(per_task)
+        } else {
+            src
+        };
+        Box::new(src) as Box<dyn Source>
+    })
+}
+
+/// Which query names exist (CLI surface).
+pub const ALL_QUERIES: &[&str] = &["q1", "q2", "q3", "q5", "q8", "q11"];
+
+/// Build a query by name.
+pub fn build(name: &str, spec: QuerySpec) -> crate::Result<StreamJob> {
+    match name {
+        "q1" => Ok(q1(spec)),
+        "q2" => Ok(q2(spec)),
+        "q3" => Ok(q3(spec)),
+        "q5" => Ok(q5(spec)),
+        "q8" => Ok(q8(spec)),
+        "q11" => Ok(q11(spec)),
+        other => anyhow::bail!("unknown query {other:?} (expected one of {ALL_QUERIES:?})"),
+    }
+}
+
+/// q1 — currency conversion (dollar → euro, the paper's rate 0.908 analog):
+/// Source → Map → Sink.
+pub fn q1(spec: QuerySpec) -> StreamJob {
+    let mut graph = LogicalGraph::new("q1");
+    let src = graph.add_op("source", OpKind::Source, false, vec![], spec.source_parallelism);
+    let map = graph.add_op(
+        "currency_map",
+        OpKind::Transform,
+        false,
+        vec![(src, Partitioning::Rebalance)],
+        1,
+    );
+    graph.add_op(
+        "sink",
+        OpKind::Sink,
+        false,
+        vec![(map, Partitioning::Rebalance)],
+        1,
+    );
+    let factories = vec![
+        nexmark_source(spec),
+        OpFactory::transform(|_, _| {
+            Box::new(FlatMapOp {
+                f: |r: Record, out: &mut Vec<Record>| {
+                    if let Record::Bid {
+                        auction,
+                        bidder,
+                        price,
+                        ts,
+                    } = r
+                    {
+                        out.push(Record::Bid {
+                            auction,
+                            bidder,
+                            price: price * 908 / 1000, // to euros
+                            ts,
+                        });
+                    }
+                },
+            })
+        }),
+        OpFactory::transform(|_, _| Box::new(SinkOp)),
+    ];
+    StreamJob { graph, factories }
+}
+
+/// q2 — selection: bids on a fixed set of auctions (`auction % 123 == 0`).
+pub fn q2(spec: QuerySpec) -> StreamJob {
+    let mut graph = LogicalGraph::new("q2");
+    let src = graph.add_op("source", OpKind::Source, false, vec![], spec.source_parallelism);
+    let filter = graph.add_op(
+        "filter",
+        OpKind::Transform,
+        false,
+        vec![(src, Partitioning::Rebalance)],
+        1,
+    );
+    graph.add_op(
+        "sink",
+        OpKind::Sink,
+        false,
+        vec![(filter, Partitioning::Rebalance)],
+        1,
+    );
+    let factories = vec![
+        nexmark_source(spec),
+        OpFactory::transform(|_, _| {
+            Box::new(FlatMapOp {
+                f: |r: Record, out: &mut Vec<Record>| {
+                    if let Record::Bid { auction, .. } = &r {
+                        if auction % 123 == 0 {
+                            out.push(r);
+                        }
+                    }
+                },
+            })
+        }),
+        OpFactory::transform(|_, _| Box::new(SinkOp)),
+    ];
+    StreamJob { graph, factories }
+}
+
+/// q3 — local-item suggestion: persons (filtered by city) ⋈ auctions
+/// (filtered by category) on seller = person id, incremental over the whole
+/// stream. Two stateless filters + one stateful join.
+pub fn q3(spec: QuerySpec) -> StreamJob {
+    let mut graph = LogicalGraph::new("q3");
+    let src = graph.add_op("source", OpKind::Source, false, vec![], spec.source_parallelism);
+    let fa = graph.add_op(
+        "filter_auctions",
+        OpKind::Transform,
+        false,
+        vec![(src, Partitioning::Rebalance)],
+        1,
+    );
+    let fp = graph.add_op(
+        "filter_persons",
+        OpKind::Transform,
+        false,
+        vec![(src, Partitioning::Rebalance)],
+        1,
+    );
+    let auction_key: crate::graph::KeyFn = Arc::new(|r: &Record| match r {
+        Record::Auction { seller, .. } => *seller,
+        _ => 0,
+    });
+    let person_key: crate::graph::KeyFn = Arc::new(|r: &Record| match r {
+        Record::Person { id, .. } => *id,
+        _ => 0,
+    });
+    let join = graph.add_op(
+        "join",
+        OpKind::Transform,
+        true,
+        vec![
+            (fa, Partitioning::Hash(auction_key)),
+            (fp, Partitioning::Hash(person_key)),
+        ],
+        1,
+    );
+    graph.add_op(
+        "sink",
+        OpKind::Sink,
+        false,
+        vec![(join, Partitioning::Rebalance)],
+        1,
+    );
+    let factories = vec![
+        nexmark_source(spec),
+        OpFactory::transform(|_, _| {
+            Box::new(FlatMapOp {
+                f: |r: Record, out: &mut Vec<Record>| {
+                    if let Record::Auction { category, .. } = &r {
+                        if *category == 3 {
+                            out.push(r);
+                        }
+                    }
+                },
+            })
+        }),
+        OpFactory::transform(|_, _| {
+            Box::new(FlatMapOp {
+                f: |r: Record, out: &mut Vec<Record>| {
+                    if let Record::Person { city, .. } = &r {
+                        // ~10% of cities, like q3's OR/ID/CA state filter.
+                        if city % 10 == 0 {
+                            out.push(r);
+                        }
+                    }
+                },
+            })
+        }),
+        OpFactory::transform(|_, _| {
+            Box::new(IncrementalJoinOp {
+                left_key: |r| match r {
+                    Record::Auction { seller, .. } => *seller,
+                    _ => 0,
+                },
+                right_key: |r| match r {
+                    Record::Person { id, .. } => *id,
+                    _ => 0,
+                },
+                join: |a, p| match (a, p) {
+                    (
+                        Record::Auction { id, ts, .. },
+                        Record::Person { city, .. },
+                    ) => Record::Pair {
+                        key: *id,
+                        value: *city as i64,
+                        ts: *ts,
+                    },
+                    _ => Record::Pair {
+                        key: 0,
+                        value: 0,
+                        ts: 0,
+                    },
+                },
+                unique_keys: true,
+            })
+        }),
+        OpFactory::transform(|_, _| Box::new(SinkOp)),
+    ];
+    StreamJob { graph, factories }
+}
+
+/// q5 — hot items: count bids per auction over a sliding window
+/// (size = `window_ms`, slide = `window_ms`/5).
+pub fn q5(spec: QuerySpec) -> StreamJob {
+    let mut graph = LogicalGraph::new("q5");
+    let src = graph.add_op("source", OpKind::Source, false, vec![], spec.source_parallelism);
+    let key: crate::graph::KeyFn = Arc::new(|r: &Record| match r {
+        Record::Bid { auction, .. } => *auction,
+        _ => 0,
+    });
+    let agg = graph.add_op(
+        "hot_items",
+        OpKind::Transform,
+        true,
+        vec![(src, Partitioning::Hash(key))],
+        1,
+    );
+    graph.add_op(
+        "sink",
+        OpKind::Sink,
+        false,
+        vec![(agg, Partitioning::Rebalance)],
+        1,
+    );
+    let window_ms = spec.window_ms;
+    let factories = vec![
+        nexmark_source(spec),
+        OpFactory::transform(move |_, _| {
+            Box::new(BidOnly(KeyedWindowAggregate::new(
+                |r| match r {
+                    Record::Bid { auction, .. } => *auction,
+                    _ => 0,
+                },
+                WindowAssigner::Sliding {
+                    size_ms: window_ms,
+                    slide_ms: (window_ms / 5).max(1),
+                },
+                CountAggregator,
+            )))
+        }),
+        OpFactory::transform(|_, _| Box::new(SinkOp)),
+    ];
+    StreamJob { graph, factories }
+}
+
+/// q8 — monitor new users: persons ⋈ auctions (by seller) in a tumbling
+/// window of `window_ms`.
+pub fn q8(spec: QuerySpec) -> StreamJob {
+    let mut graph = LogicalGraph::new("q8");
+    let src = graph.add_op("source", OpKind::Source, false, vec![], spec.source_parallelism);
+    let fp = graph.add_op(
+        "persons",
+        OpKind::Transform,
+        false,
+        vec![(src, Partitioning::Rebalance)],
+        1,
+    );
+    let fa = graph.add_op(
+        "auctions",
+        OpKind::Transform,
+        false,
+        vec![(src, Partitioning::Rebalance)],
+        1,
+    );
+    let pkey: crate::graph::KeyFn = Arc::new(|r: &Record| match r {
+        Record::Person { id, .. } => *id,
+        _ => 0,
+    });
+    let akey: crate::graph::KeyFn = Arc::new(|r: &Record| match r {
+        Record::Auction { seller, .. } => *seller,
+        _ => 0,
+    });
+    let join = graph.add_op(
+        "window_join",
+        OpKind::Transform,
+        true,
+        vec![
+            (fp, Partitioning::Hash(pkey)),
+            (fa, Partitioning::Hash(akey)),
+        ],
+        1,
+    );
+    graph.add_op(
+        "sink",
+        OpKind::Sink,
+        false,
+        vec![(join, Partitioning::Rebalance)],
+        1,
+    );
+    let window_ms = spec.window_ms;
+    fn emit(key: u64, _left: &Record, w: Window, out: &mut Vec<Record>) {
+        out.push(Record::Pair {
+            key,
+            value: 1,
+            ts: w.end,
+        });
+    }
+    let factories = vec![
+        nexmark_source(spec),
+        OpFactory::transform(|_, _| {
+            Box::new(FlatMapOp {
+                f: |r: Record, out: &mut Vec<Record>| {
+                    if matches!(r, Record::Person { .. }) {
+                        out.push(r);
+                    }
+                },
+            })
+        }),
+        OpFactory::transform(|_, _| {
+            Box::new(FlatMapOp {
+                f: |r: Record, out: &mut Vec<Record>| {
+                    if matches!(r, Record::Auction { .. }) {
+                        out.push(r);
+                    }
+                },
+            })
+        }),
+        OpFactory::transform(move |_, _| {
+            Box::new(WindowedJoinOp::new(
+                |r| match r {
+                    Record::Person { id, .. } => *id,
+                    _ => 0,
+                },
+                |r| match r {
+                    Record::Auction { seller, .. } => *seller,
+                    _ => 0,
+                },
+                window_ms,
+                emit,
+            ))
+        }),
+        OpFactory::transform(|_, _| Box::new(SinkOp)),
+    ];
+    StreamJob { graph, factories }
+}
+
+/// q11 — user sessions: number of bids per user per session window
+/// (gap = `window_ms`).
+pub fn q11(spec: QuerySpec) -> StreamJob {
+    let mut graph = LogicalGraph::new("q11");
+    let src = graph.add_op("source", OpKind::Source, false, vec![], spec.source_parallelism);
+    let key: crate::graph::KeyFn = Arc::new(|r: &Record| match r {
+        Record::Bid { bidder, .. } => *bidder,
+        _ => 0,
+    });
+    let agg = graph.add_op(
+        "sessions",
+        OpKind::Transform,
+        true,
+        vec![(src, Partitioning::Hash(key))],
+        1,
+    );
+    graph.add_op(
+        "sink",
+        OpKind::Sink,
+        false,
+        vec![(agg, Partitioning::Rebalance)],
+        1,
+    );
+    let window_ms = spec.window_ms;
+    let factories = vec![
+        nexmark_source(spec),
+        OpFactory::transform(move |_, _| {
+            Box::new(BidOnly(KeyedWindowAggregate::new(
+                |r| match r {
+                    Record::Bid { bidder, .. } => *bidder,
+                    _ => 0,
+                },
+                WindowAssigner::Session { gap_ms: window_ms },
+                CountAggregator,
+            )))
+        }),
+        OpFactory::transform(|_, _| Box::new(SinkOp)),
+    ];
+    StreamJob { graph, factories }
+}
+
+/// Adapter: forward only bids into an inner operator (q5/q11 aggregate over
+/// the bid stream; persons/auctions pass the source but are dropped here).
+struct BidOnly<O: crate::engine::Operator>(O);
+
+impl<O: crate::engine::Operator> crate::engine::Operator for BidOnly<O> {
+    fn on_record(
+        &mut self,
+        port: usize,
+        rec: Record,
+        ctx: &mut crate::engine::OpCtx,
+    ) -> anyhow::Result<()> {
+        if matches!(rec, Record::Bid { .. }) {
+            self.0.on_record(port, rec, ctx)
+        } else {
+            Ok(())
+        }
+    }
+
+    fn on_watermark(&mut self, wm: u64, ctx: &mut crate::engine::OpCtx) -> anyhow::Result<()> {
+        self.0.on_watermark(wm, ctx)
+    }
+
+    fn on_drain(&mut self, ctx: &mut crate::engine::OpCtx) -> anyhow::Result<()> {
+        self.0.on_drain(ctx)
+    }
+
+    fn aux_snapshot(&self) -> Vec<(u16, Vec<u8>)> {
+        self.0.aux_snapshot()
+    }
+
+    fn aux_restore(&mut self, frags: &[Vec<u8>]) {
+        self.0.aux_restore(frags)
+    }
+}
+
+/// Paper metadata: which operator is each query's "primary" (the one the
+/// evaluation tracks), and the final configurations Figure 5 reports.
+pub fn primary_operator(query: &str) -> &'static str {
+    match query {
+        "q1" => "currency_map",
+        "q2" => "filter",
+        "q3" => "join",
+        "q5" => "hot_items",
+        "q8" => "window_join",
+        "q11" => "sessions",
+        _ => "unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::engine::JobManager;
+    use crate::graph::ScalingAssignment;
+    use crate::metrics::{names, Registry};
+
+    fn run_bounded(query: &str, events: u64) -> (Registry, crate::engine::Savepoint) {
+        run_bounded_w(query, events, 2)
+    }
+
+    /// Rate 100k ev/s means `events` span `events/100` ms of event time, so
+    /// small windows fire many times within a bounded run.
+    fn run_bounded_w(
+        query: &str,
+        events: u64,
+        window_ms: u64,
+    ) -> (Registry, crate::engine::Savepoint) {
+        let spec = QuerySpec {
+            rate: 100_000.0,
+            bounded: Some(events),
+            seed: 7,
+            source_parallelism: 2,
+            window_ms,
+        };
+        let job = build(query, spec).unwrap();
+        job.validate().unwrap();
+        let mut cfg = Config::default();
+        cfg.engine.batch_size = 64;
+        cfg.engine.flush_interval_ms = 5;
+        let mut jm = JobManager::new(cfg);
+        let registry = Registry::new();
+        let assignment = ScalingAssignment::initial(&job.graph);
+        let running = jm.deploy(&job, &assignment, &registry, None).unwrap();
+        let sp = running.wait_drained().unwrap();
+        (registry, sp)
+    }
+
+    fn counter(reg: &Registry, op: &str, name: &str) -> u64 {
+        reg.snapshot()
+            .iter()
+            .filter_map(|(id, s)| {
+                (id.name == name && id.label("op") == Some(op)).then(|| match s {
+                    crate::metrics::Sample::Counter(v) => *v,
+                    _ => 0,
+                })
+            })
+            .sum()
+    }
+
+    #[test]
+    fn all_queries_build_and_validate() {
+        for q in ALL_QUERIES {
+            let job = build(q, QuerySpec::default()).unwrap();
+            job.validate().unwrap();
+            assert!(
+                job.graph
+                    .ops
+                    .iter()
+                    .any(|o| o.name == primary_operator(q)),
+                "{q} primary operator missing"
+            );
+        }
+        assert!(build("q99", QuerySpec::default()).is_err());
+    }
+
+    #[test]
+    fn q1_converts_all_bids() {
+        let (reg, _) = run_bounded("q1", 5000);
+        let bids_out = counter(&reg, "currency_map", names::RECORDS_OUT);
+        // 46/50 of events are bids.
+        assert_eq!(bids_out, 4600);
+        assert_eq!(counter(&reg, "sink", names::RECORDS_IN), 4600);
+    }
+
+    #[test]
+    fn q2_filters_by_auction_id() {
+        let (reg, _) = run_bounded("q2", 5000);
+        let out = counter(&reg, "filter", names::RECORDS_OUT);
+        let input = counter(&reg, "filter", names::RECORDS_IN);
+        assert_eq!(input, 5000);
+        assert!(out < input / 20, "selective filter: {out}/{input}");
+    }
+
+    #[test]
+    fn q3_join_emits_and_keeps_small_state() {
+        let (reg, sp) = run_bounded("q3", 20_000);
+        let joined = counter(&reg, "join", names::RECORDS_OUT);
+        assert!(joined > 0, "q3 should emit matches");
+        // Unbounded-but-small state: bounded by filtered persons+auctions.
+        let st = sp.operator("join").unwrap();
+        assert!(st.entry_count() > 0);
+        assert!(st.entry_count() < 3000, "{}", st.entry_count());
+    }
+
+    #[test]
+    fn q5_sliding_counts() {
+        let (reg, _) = run_bounded("q5", 10_000);
+        assert!(counter(&reg, "hot_items", names::RECORDS_OUT) > 0);
+        assert!(counter(&reg, "sink", names::RECORDS_IN) > 0);
+    }
+
+    #[test]
+    fn q8_window_join_matches_persons_with_auctions() {
+        let (reg, _) = run_bounded("q8", 20_000);
+        let matched = counter(&reg, "window_join", names::RECORDS_OUT);
+        assert!(matched > 0, "q8 should emit new-user matches");
+        // Matches can't exceed the number of persons.
+        assert!(matched <= 20_000 / 50 + 1);
+    }
+
+    #[test]
+    fn q11_sessions_fire() {
+        // gap 1 ms ≈ 5× the mean per-bidder inter-arrival → sessions close.
+        let (reg, _) = run_bounded_w("q11", 10_000, 1);
+        let sessions = counter(&reg, "sessions", names::RECORDS_OUT);
+        assert!(sessions > 0, "q11 should emit session counts");
+    }
+
+    #[test]
+    fn stateful_queries_use_lsm_metrics() {
+        let (reg, _) = run_bounded("q11", 5000);
+        let hits = counter(&reg, "sessions", names::STATE_CACHE_HIT);
+        let misses = counter(&reg, "sessions", names::STATE_CACHE_MISS);
+        // Sessions state is tiny → memtable-resident, no block-cache traffic
+        // is fine; but metric handles must exist for the policy to classify
+        // the operator as stateful.
+        let snap = reg.snapshot();
+        let has_metric = snap.keys().any(|id| {
+            id.name == names::STATE_CACHE_HIT && id.label("op") == Some("sessions")
+        });
+        assert!(has_metric, "hits={hits} misses={misses}");
+    }
+}

@@ -1,0 +1,336 @@
+//! "k8slite" — Task-Manager pods and slot placement (§4.3's mechanisms).
+//!
+//! Justin's heterogeneous memory levels mean task slots are no longer
+//! identical: the scheduler maps slot requests (1 core, m MB managed memory)
+//! onto TM pods with a fixed capacity vector using multidimensional
+//! first-fit-decreasing bin packing, spawning new pods when packing fails —
+//! exactly the mechanism the paper adds to the Flink Kubernetes Operator.
+
+use std::collections::BTreeMap;
+
+/// A slot request: one task to place.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlotRequest {
+    pub op_name: String,
+    pub subtask: u32,
+    /// One-core-per-task model (§2).
+    pub cores: u32,
+    /// Managed memory demand in MB (0 for stateless / ⊥).
+    pub managed_mb: u64,
+}
+
+/// Capacity of one Task Manager pod.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PodSpec {
+    pub slots: u32,
+    pub cores: u32,
+    /// Managed-memory budget of the pod, MB (§5: 4 slots × 158 MB = 632).
+    pub managed_mb: u64,
+    /// Non-managed footprint of the pod, MB (framework + heap + network),
+    /// used for cluster-level memory accounting.
+    pub overhead_mb: u64,
+}
+
+impl PodSpec {
+    /// The §5 testbed TM: 4 cores, 4 slots, 2 GB total.
+    pub fn paper_default() -> Self {
+        Self {
+            slots: 4,
+            cores: 4,
+            managed_mb: 4 * 158,
+            overhead_mb: 2048 - 4 * 158,
+        }
+    }
+}
+
+/// A Task Manager pod with current occupancy.
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub id: u32,
+    pub spec: PodSpec,
+    pub used_slots: u32,
+    pub used_cores: u32,
+    pub used_managed_mb: u64,
+    /// Placed tasks: (op_name, subtask).
+    pub tasks: Vec<(String, u32)>,
+}
+
+impl Pod {
+    fn new(id: u32, spec: PodSpec) -> Self {
+        Self {
+            id,
+            spec,
+            used_slots: 0,
+            used_cores: 0,
+            used_managed_mb: 0,
+            tasks: Vec::new(),
+        }
+    }
+
+    fn fits(&self, req: &SlotRequest) -> bool {
+        self.used_slots + 1 <= self.spec.slots
+            && self.used_cores + req.cores <= self.spec.cores
+            && self.used_managed_mb + req.managed_mb <= self.spec.managed_mb
+    }
+
+    fn place(&mut self, req: &SlotRequest) {
+        debug_assert!(self.fits(req));
+        self.used_slots += 1;
+        self.used_cores += req.cores;
+        self.used_managed_mb += req.managed_mb;
+        self.tasks.push((req.op_name.clone(), req.subtask));
+    }
+}
+
+/// Result of placing a physical plan.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub pods: Vec<Pod>,
+    /// task (op, subtask) → pod id.
+    pub task_pod: BTreeMap<(String, u32), u32>,
+}
+
+impl Placement {
+    /// Number of pods in use.
+    pub fn pod_count(&self) -> usize {
+        self.pods.len()
+    }
+
+    /// Total cluster memory footprint in MB: per-pod overhead + *requested*
+    /// managed memory (unused managed budget inside a pod is not charged to
+    /// the query; the paper's memory curves track allocated memory).
+    pub fn total_memory_mb(&self) -> u64 {
+        self.pods
+            .iter()
+            .map(|p| p.spec.overhead_mb + p.used_managed_mb)
+            .sum()
+    }
+
+    /// Total CPU cores actually occupied by tasks.
+    pub fn total_cores(&self) -> u32 {
+        self.pods.iter().map(|p| p.used_cores).sum()
+    }
+
+    /// Fraction of managed-memory budget wasted across allocated pods.
+    pub fn managed_fragmentation(&self) -> f64 {
+        let budget: u64 = self.pods.iter().map(|p| p.spec.managed_mb).sum();
+        let used: u64 = self.pods.iter().map(|p| p.used_managed_mb).sum();
+        if budget == 0 {
+            0.0
+        } else {
+            1.0 - used as f64 / budget as f64
+        }
+    }
+}
+
+/// Errors from the placement layer.
+#[derive(Debug, thiserror::Error)]
+pub enum PlacementError {
+    #[error("cluster out of capacity: {needed} pods needed, {available} available")]
+    OutOfCapacity { needed: usize, available: usize },
+    #[error("request {op}[{subtask}] cannot fit any pod (managed {managed_mb} MB > pod budget {pod_mb} MB)")]
+    RequestTooLarge {
+        op: String,
+        subtask: u32,
+        managed_mb: u64,
+        pod_mb: u64,
+    },
+}
+
+/// The cluster: a bounded supply of pods on worker nodes.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub pod_spec: PodSpec,
+    /// Maximum number of pods the nodes can host.
+    pub max_pods: u32,
+}
+
+impl Cluster {
+    /// §5 testbed: 4 worker nodes × (20 cores / 4 per TM) = 20 pods max.
+    pub fn new(pod_spec: PodSpec, max_pods: u32) -> Self {
+        Self { pod_spec, max_pods }
+    }
+
+    pub fn from_config(c: &crate::config::ClusterConfig) -> Self {
+        let pods_per_node_cpu = c.node_cores / c.tm_cores.max(1);
+        let pods_per_node_mem = (c.node_memory_mb / c.tm_memory_mb.max(1)) as u32;
+        let spec = PodSpec {
+            slots: c.tm_slots,
+            cores: c.tm_cores,
+            managed_mb: c.tm_slots as u64 * c.managed_mb_per_slot,
+            overhead_mb: c.tm_memory_mb - c.tm_slots as u64 * c.managed_mb_per_slot,
+        };
+        Self {
+            pod_spec: spec,
+            max_pods: c.nodes * pods_per_node_cpu.min(pods_per_node_mem).max(1),
+        }
+    }
+
+    /// Place all requests using first-fit-decreasing on (managed_mb, cores):
+    /// sort requests by managed memory (then cores) descending, place each in
+    /// the first pod that fits, spawning pods up to `max_pods`.
+    pub fn place(&self, requests: &[SlotRequest]) -> Result<Placement, PlacementError> {
+        let mut sorted: Vec<&SlotRequest> = requests.iter().collect();
+        sorted.sort_by(|a, b| {
+            (b.managed_mb, b.cores, &a.op_name, a.subtask).cmp(&(
+                a.managed_mb,
+                a.cores,
+                &b.op_name,
+                b.subtask,
+            ))
+        });
+        let mut pods: Vec<Pod> = Vec::new();
+        let mut task_pod = BTreeMap::new();
+        for req in sorted {
+            if req.managed_mb > self.pod_spec.managed_mb {
+                return Err(PlacementError::RequestTooLarge {
+                    op: req.op_name.clone(),
+                    subtask: req.subtask,
+                    managed_mb: req.managed_mb,
+                    pod_mb: self.pod_spec.managed_mb,
+                });
+            }
+            let slot = pods.iter_mut().find(|p| p.fits(req));
+            let pod = match slot {
+                Some(p) => p,
+                None => {
+                    if pods.len() as u32 >= self.max_pods {
+                        return Err(PlacementError::OutOfCapacity {
+                            needed: pods.len() + 1,
+                            available: self.max_pods as usize,
+                        });
+                    }
+                    pods.push(Pod::new(pods.len() as u32, self.pod_spec));
+                    pods.last_mut().unwrap()
+                }
+            };
+            pod.place(req);
+            task_pod.insert((req.op_name.clone(), req.subtask), pod.id);
+        }
+        Ok(Placement { pods, task_pod })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    fn req(op: &str, subtask: u32, managed: u64) -> SlotRequest {
+        SlotRequest {
+            op_name: op.into(),
+            subtask,
+            cores: 1,
+            managed_mb: managed,
+        }
+    }
+
+    fn cluster() -> Cluster {
+        Cluster::new(PodSpec::paper_default(), 20)
+    }
+
+    #[test]
+    fn homogeneous_fills_pods() {
+        // 8 × 158 MB slots → exactly 2 pods (4 slots each).
+        let reqs: Vec<_> = (0..8).map(|i| req("op", i, 158)).collect();
+        let p = cluster().place(&reqs).unwrap();
+        assert_eq!(p.pod_count(), 2);
+        assert_eq!(p.total_cores(), 8);
+        assert_eq!(
+            p.total_memory_mb(),
+            2 * (2048 - 632) + 8 * 158
+        );
+    }
+
+    #[test]
+    fn high_memory_slots_spread() {
+        // Level-2 tasks (632 MB) exhaust a pod's managed budget alone:
+        // 3 such tasks need 3 pods even though slots/cores would fit in one.
+        let reqs: Vec<_> = (0..3).map(|i| req("big", i, 632)).collect();
+        let p = cluster().place(&reqs).unwrap();
+        assert_eq!(p.pod_count(), 3);
+        // Each pod has 3 idle slots → stateless tasks can co-locate for free.
+        let mut reqs2 = reqs.clone();
+        for i in 0..9 {
+            reqs2.push(req("stateless", i, 0));
+        }
+        let p2 = cluster().place(&reqs2).unwrap();
+        assert_eq!(p2.pod_count(), 3, "stateless fills the fragmentation");
+        assert!(p2.managed_fragmentation() < 1e-9);
+    }
+
+    #[test]
+    fn mixed_levels_pack_ffd() {
+        // 316+316 = 632 fits one pod's budget; two pairs → 2 pods.
+        let reqs = vec![
+            req("a", 0, 316),
+            req("a", 1, 316),
+            req("b", 0, 316),
+            req("b", 1, 316),
+        ];
+        let p = cluster().place(&reqs).unwrap();
+        assert_eq!(p.pod_count(), 2);
+    }
+
+    #[test]
+    fn capacity_exhaustion_errors() {
+        let c = Cluster::new(PodSpec::paper_default(), 2);
+        let reqs: Vec<_> = (0..9).map(|i| req("op", i, 158)).collect();
+        match c.place(&reqs) {
+            Err(PlacementError::OutOfCapacity { needed: 3, available: 2 }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let c = cluster();
+        let r = vec![req("huge", 0, 4096)];
+        assert!(matches!(
+            c.place(&r),
+            Err(PlacementError::RequestTooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn placement_is_deterministic() {
+        let reqs: Vec<_> = (0..12)
+            .map(|i| req("op", i, if i % 3 == 0 { 316 } else { 158 }))
+            .collect();
+        let p1 = cluster().place(&reqs).unwrap();
+        let p2 = cluster().place(&reqs).unwrap();
+        assert_eq!(p1.task_pod, p2.task_pod);
+    }
+
+    #[test]
+    fn never_exceeds_pod_capacity() {
+        prop(100, |g| {
+            let n = g.usize(1..40);
+            let levels = [0u64, 158, 316, 632];
+            let reqs: Vec<_> = (0..n)
+                .map(|i| req("op", i as u32, *g.pick(&levels)))
+                .collect();
+            let c = Cluster::new(PodSpec::paper_default(), 64);
+            if let Ok(p) = c.place(&reqs) {
+                for pod in &p.pods {
+                    assert!(pod.used_slots <= pod.spec.slots);
+                    assert!(pod.used_cores <= pod.spec.cores);
+                    assert!(pod.used_managed_mb <= pod.spec.managed_mb);
+                }
+                // Every request placed exactly once.
+                assert_eq!(p.task_pod.len(), n);
+                let placed: usize = p.pods.iter().map(|p| p.tasks.len()).sum();
+                assert_eq!(placed, n);
+            }
+        });
+    }
+
+    #[test]
+    fn from_config_derives_caps() {
+        let cfg = crate::config::ClusterConfig::default();
+        let c = Cluster::from_config(&cfg);
+        assert_eq!(c.pod_spec.slots, 4);
+        assert_eq!(c.pod_spec.managed_mb, 632);
+        assert_eq!(c.max_pods, 4 * 5); // 4 nodes × (20 cores / 4)
+    }
+}

@@ -1,0 +1,86 @@
+//! Artifact manifest (`artifacts/manifest.json`), written by
+//! `python/compile/aot.py` — records what the AOT artifacts expect.
+
+use crate::util::json::{parse, Json};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Specification of the Nexmark batch model artifact.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub file: String,
+    pub batch: usize,
+    pub slots: usize,
+    pub euro_rate_milli: u64,
+    pub q2_modulus: u64,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelSpec,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Manifest> {
+        let doc = parse(text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let model = doc.get("model").context("manifest missing `model`")?;
+        let get_num = |key: &str| -> Result<u64> {
+            model
+                .get(key)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("manifest missing model.{key}"))
+        };
+        Ok(Manifest {
+            model: ModelSpec {
+                file: model
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .context("manifest missing model.file")?
+                    .to_string(),
+                batch: get_num("batch")? as usize,
+                slots: get_num("slots")? as usize,
+                euro_rate_milli: get_num("euro_rate_milli")?,
+                q2_modulus: get_num("q2_modulus")?,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {
+        "file": "model.hlo.txt",
+        "batch": 256,
+        "slots": 256,
+        "euro_rate_milli": 908,
+        "q2_modulus": 123,
+        "inputs": [{"name": "keys", "dtype": "s32", "shape": [256]}],
+        "outputs": []
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        assert_eq!(m.model.batch, 256);
+        assert_eq!(m.model.slots, 256);
+        assert_eq!(m.model.file, "model.hlo.txt");
+        assert_eq!(m.model.q2_modulus, 123);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::from_json_text("{}").is_err());
+        assert!(Manifest::from_json_text(r#"{"model": {"file": "x"}}"#).is_err());
+    }
+}

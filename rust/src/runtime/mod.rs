@@ -1,0 +1,217 @@
+//! PJRT/XLA runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them from operator hot paths. Python never runs at request time — the
+//! binary is self-contained after the artifacts exist.
+//!
+//! Path: `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::cpu().compile` → `execute` (see /opt/xla-example/load_hlo).
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ModelSpec};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One batch's outputs from the Nexmark model artifact.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// q1 currency conversion (euro prices), length = batch.
+    pub euros: Vec<f32>,
+    /// q2 filter mask (1.0 = keep), length = batch.
+    pub q2_mask: Vec<f32>,
+    /// Per-slot [count, sum] aggregation deltas, length = slots × 2
+    /// (row-major [slot][0=count,1=sum]).
+    pub agg: Vec<f32>,
+}
+
+/// Compiled Nexmark batch model, ready to execute.
+pub struct NexmarkModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ModelSpec,
+}
+
+// The PJRT client/executable wrap thread-safe C++ objects; the xla crate
+// just doesn't mark them. Each engine instance owns one model behind a
+// mutex (see `SharedModel`).
+unsafe impl Send for NexmarkModel {}
+
+impl NexmarkModel {
+    /// Load and compile `model.hlo.txt` + `manifest.json` from `dir`.
+    pub fn load(dir: &Path) -> Result<NexmarkModel> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let spec = manifest.model;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let hlo_path = dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .context("artifact path is not valid UTF-8")?,
+        )
+        .with_context(|| format!("parsing {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling model artifact")?;
+        Ok(NexmarkModel { exe, spec })
+    }
+
+    /// Execute one batch. Inputs shorter than the artifact batch are padded
+    /// (padding rows get key = -1 / valid = 0 and contribute nothing).
+    pub fn run(&self, keys: &[i64], prices: &[f32]) -> Result<BatchOutput> {
+        let batch = self.spec.batch;
+        anyhow::ensure!(
+            keys.len() == prices.len() && keys.len() <= batch,
+            "batch too large: {} > {batch}",
+            keys.len()
+        );
+        let n = keys.len();
+        let slots = self.spec.slots as i64;
+        let mut k = vec![-1i32; batch];
+        let mut p = vec![0f32; batch];
+        let mut v = vec![0f32; batch];
+        for i in 0..n {
+            // Router: fold arbitrary keys into the artifact's slot space.
+            k[i] = (keys[i].rem_euclid(slots)) as i32;
+            p[i] = prices[i];
+            v[i] = 1.0;
+        }
+        let lk = xla::Literal::vec1(&k);
+        let lp = xla::Literal::vec1(&p);
+        let lv = xla::Literal::vec1(&v);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lk, lp, lv])
+            .context("executing model")?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → one tuple of 3.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 3, "expected 3 outputs, got {}", parts.len());
+        let euros = parts[0].to_vec::<f32>()?;
+        let q2_mask = parts[1].to_vec::<f32>()?;
+        let agg = parts[2].to_vec::<f32>()?;
+        anyhow::ensure!(agg.len() == self.spec.slots * 2);
+        Ok(BatchOutput {
+            euros: euros[..n].to_vec(),
+            q2_mask: q2_mask[..n].to_vec(),
+            agg,
+        })
+    }
+}
+
+/// Thread-shared handle (one compiled executable per process, like one
+/// loaded model per engine in a serving system).
+#[derive(Clone)]
+pub struct SharedModel(std::sync::Arc<std::sync::Mutex<NexmarkModel>>);
+
+impl SharedModel {
+    pub fn load(dir: &Path) -> Result<SharedModel> {
+        Ok(SharedModel(std::sync::Arc::new(std::sync::Mutex::new(
+            NexmarkModel::load(dir)?,
+        ))))
+    }
+
+    pub fn run(&self, keys: &[i64], prices: &[f32]) -> Result<BatchOutput> {
+        self.0.lock().unwrap().run(keys, prices)
+    }
+
+    pub fn spec(&self) -> ModelSpec {
+        self.0.lock().unwrap().spec.clone()
+    }
+}
+
+/// Default artifact directory: `$JUSTIN_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("JUSTIN_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| "artifacts".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        // Tests run from the crate root; skip gracefully if `make artifacts`
+        // hasn't been run (CI runs it first via the Makefile).
+        let dir = artifacts_dir();
+        dir.join("model.hlo.txt").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_and_run_batch() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let model = NexmarkModel::load(&dir).unwrap();
+        assert_eq!(model.spec.batch, 256);
+        let keys: Vec<i64> = (0..100).map(|i| i % 7).collect();
+        let prices: Vec<f32> = (0..100).map(|i| 100.0 + i as f32).collect();
+        let out = model.run(&keys, &prices).unwrap();
+        assert_eq!(out.euros.len(), 100);
+        // q1: euro = price × 0.908.
+        for (e, p) in out.euros.iter().zip(&prices) {
+            assert!((e - p * 0.908).abs() < 1e-3, "{e} vs {p}");
+        }
+        // Aggregation: counts sum to the number of valid events.
+        let count_sum: f32 = out.agg.chunks(2).map(|c| c[0]).sum();
+        assert_eq!(count_sum, 100.0);
+        // Slot 0 holds keys {0, 7, 14, …} → ceil(100/7) = 15 events.
+        assert_eq!(out.agg[0], 15.0);
+        // Sum column matches a manual sum for slot 1 (keys ≡ 1 mod 7).
+        let want: f32 = (0..100)
+            .filter(|i| i % 7 == 1)
+            .map(|i| 100.0 + i as f32)
+            .sum();
+        assert!((out.agg[2 * 1 + 1] - want).abs() / want < 1e-5);
+    }
+
+    #[test]
+    fn padding_contributes_nothing() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let model = NexmarkModel::load(&dir).unwrap();
+        let out = model.run(&[], &[]).unwrap();
+        assert!(out.euros.is_empty());
+        assert_eq!(out.agg.iter().map(|x| x.abs()).sum::<f32>(), 0.0);
+    }
+
+    #[test]
+    fn q2_mask_follows_modulus() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let model = NexmarkModel::load(&dir).unwrap();
+        let keys: Vec<i64> = vec![0, 1, 123, 245, 246];
+        let prices = vec![1.0f32; 5];
+        let out = model.run(&keys, &prices).unwrap();
+        // Slot folding is mod 256, so these keys are unchanged; mask is
+        // key % 123 == 0 → keys 0 and 123 and 246.
+        assert_eq!(out.q2_mask, vec![1.0, 0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn shared_model_from_threads() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let shared = SharedModel::load(&dir).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let m = shared.clone();
+                std::thread::spawn(move || {
+                    let keys = vec![t as i64; 32];
+                    let prices = vec![1.0f32; 32];
+                    let out = m.run(&keys, &prices).unwrap();
+                    assert_eq!(out.agg[2 * t as usize], 32.0);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! The DS2 auto-scaler (Kalavri et al., OSDI'18) — the baseline Justin
+//! extends. CPU-only: computes, from observed *true* processing rates (rate
+//! per second of busy time), the parallelism each operator needs to sustain
+//! the current source rate, propagating demand through the dataflow with
+//! measured selectivities (the "cascade effect" of §4).
+
+use super::{GraphMeta, Policy, PolicyInput};
+use crate::config::ScalerConfig;
+use crate::graph::{OpKind, ScalingAssignment};
+use std::collections::BTreeMap;
+
+/// DS2 policy.
+pub struct Ds2 {
+    pub cfg: ScalerConfig,
+}
+
+impl Ds2 {
+    pub fn new(cfg: ScalerConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Core rate model, shared with Justin (Algorithm 1 line 1).
+    ///
+    /// For each operator in topological order:
+    /// * demand = Σ upstream target output rates,
+    /// * `p = ceil(demand / (true_rate_per_task × target_busy))`,
+    /// * target output = demand × measured selectivity.
+    ///
+    /// Sources keep their parallelism (§5 treats them as injectors); sinks
+    /// are pinned at their current parallelism (paper fixes them at 1).
+    pub fn plan(&self, input: &PolicyInput) -> ScalingAssignment {
+        let meta: &GraphMeta = input.meta;
+        let mut next = input.current.clone();
+        // Target *output* rate each operator must eventually sustain.
+        let mut out_rate: BTreeMap<&str, f64> = BTreeMap::new();
+        for op in meta.topo() {
+            let window = input.windows.get(&op.name);
+            let current = input.current.get(&op.name);
+            match op.kind {
+                OpKind::Source => {
+                    // The source's observed output is what the query absorbs
+                    // *now*; under backpressure the true demand is higher.
+                    // Like backlog-based estimators (Flink's autoscaler),
+                    // extrapolate by the blocked fraction — but at most 1.75×
+                    // per step, so convergence is a short ramp rather than
+                    // one wild overshoot (DS2's multi-step behaviour).
+                    let rate = window
+                        .map(|w| {
+                            let amp = if w.backpressure > 0.02 {
+                                (1.0 / (1.0 - w.backpressure.min(0.5))).min(1.75)
+                            } else {
+                                1.0
+                            };
+                            w.output_rate * amp
+                        })
+                        .unwrap_or(0.0);
+                    out_rate.insert(op.name.as_str(), rate);
+                }
+                OpKind::Sink => {
+                    // Pinned; still propagate (sinks terminate the cascade).
+                    out_rate.insert(op.name.as_str(), 0.0);
+                }
+                OpKind::Transform => {
+                    let demand: f64 = op
+                        .upstream
+                        .iter()
+                        .map(|u| out_rate.get(u.as_str()).copied().unwrap_or(0.0))
+                        .sum();
+                    let (p, selectivity) = match window {
+                        Some(w) if w.true_rate > 1.0 => {
+                            let per_task = w.true_rate; // records / busy-sec / task
+                            let needed =
+                                demand / (per_task * self.cfg.target_busy.max(0.05));
+                            let p = needed.ceil().max(1.0) as u32;
+                            (p.min(self.cfg.max_parallelism), w.selectivity())
+                        }
+                        // No signal: keep as is.
+                        _ => (current.parallelism, 1.0),
+                    };
+                    next.set(
+                        &op.name,
+                        crate::graph::OpScaling::new(p, current.memory_level),
+                    );
+                    out_rate.insert(op.name.as_str(), demand * selectivity);
+                }
+            }
+        }
+        next
+    }
+}
+
+impl Policy for Ds2 {
+    fn name(&self) -> &'static str {
+        "ds2"
+    }
+
+    fn decide(&mut self, input: &PolicyInput) -> ScalingAssignment {
+        self.plan(input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaler::testutil::{linear_meta, window};
+    use crate::graph::OpScaling;
+
+    fn input_ctx<'a>(
+        meta: &'a GraphMeta,
+        windows: &'a BTreeMap<String, crate::metrics::window::OperatorWindow>,
+        current: &'a ScalingAssignment,
+    ) -> PolicyInput<'a> {
+        PolicyInput {
+            meta,
+            windows,
+            current,
+        }
+    }
+
+    #[test]
+    fn scales_to_meet_demand() {
+        let meta = linear_meta(&[("map", false)]);
+        let mut windows = BTreeMap::new();
+        // Source pushes 10k/s; map can do 1.5k/s per task.
+        windows.insert("source".into(), window(0.9, 10_000.0, 20_000.0, 10_000.0));
+        windows.insert("map".into(), window(0.95, 3000.0, 1500.0, 3000.0));
+        windows.insert("sink".into(), window(0.1, 3000.0, 50_000.0, 0.0));
+        let mut current = ScalingAssignment::default();
+        current.set("map", OpScaling::new(2, Some(0)));
+        current.set("sink", OpScaling::new(1, Some(0)));
+        let mut ds2 = Ds2::new(ScalerConfig::default());
+        let next = ds2.decide(&input_ctx(&meta, &windows, &current));
+        // 10_000 / (1500 × 0.7) = 9.52 → 10 tasks.
+        assert_eq!(next.parallelism("map"), 10);
+        // Sinks/sources untouched.
+        assert_eq!(next.parallelism("sink"), 1);
+    }
+
+    #[test]
+    fn cascade_uses_selectivity() {
+        let meta = linear_meta(&[("flatmap", false), ("agg", true)]);
+        let mut windows = BTreeMap::new();
+        windows.insert("source".into(), window(0.9, 1000.0, 5000.0, 1000.0));
+        // flatmap: 2× selectivity (1000 in → 2000 out), 800/s per task.
+        windows.insert("flatmap".into(), window(0.9, 1000.0, 800.0, 2000.0));
+        // agg absorbs 2000/s demand at 500/s per task.
+        windows.insert("agg".into(), window(0.9, 2000.0, 500.0, 100.0));
+        windows.insert("sink".into(), window(0.0, 100.0, 10_000.0, 0.0));
+        let current = ScalingAssignment::default();
+        let mut ds2 = Ds2::new(ScalerConfig::default());
+        let next = ds2.decide(&input_ctx(&meta, &windows, &current));
+        // flatmap: 1000/(800×0.7)=1.79 → 2; agg: 2000/(500×0.7)=5.7 → 6.
+        assert_eq!(next.parallelism("flatmap"), 2);
+        assert_eq!(next.parallelism("agg"), 6);
+    }
+
+    #[test]
+    fn scale_down_when_overprovisioned() {
+        let meta = linear_meta(&[("map", false)]);
+        let mut windows = BTreeMap::new();
+        windows.insert("source".into(), window(0.2, 1000.0, 10_000.0, 1000.0));
+        // 8 tasks but demand needs ~1: true_rate 2000/s per task.
+        windows.insert("map".into(), window(0.06, 1000.0, 2000.0, 1000.0));
+        windows.insert("sink".into(), window(0.0, 1000.0, 10_000.0, 0.0));
+        let mut current = ScalingAssignment::default();
+        current.set("map", OpScaling::new(8, Some(0)));
+        let mut ds2 = Ds2::new(ScalerConfig::default());
+        let next = ds2.decide(&input_ctx(&meta, &windows, &current));
+        assert_eq!(next.parallelism("map"), 1);
+    }
+
+    #[test]
+    fn memory_levels_untouched() {
+        let meta = linear_meta(&[("agg", true)]);
+        let mut windows = BTreeMap::new();
+        windows.insert("source".into(), window(0.9, 1000.0, 2000.0, 1000.0));
+        windows.insert("agg".into(), window(0.9, 1000.0, 400.0, 100.0));
+        windows.insert("sink".into(), window(0.0, 0.0, 1.0, 0.0));
+        let mut current = ScalingAssignment::default();
+        current.set("agg", OpScaling::new(1, Some(2)));
+        let mut ds2 = Ds2::new(ScalerConfig::default());
+        let next = ds2.decide(&input_ctx(&meta, &windows, &current));
+        assert!(next.parallelism("agg") > 1);
+        assert_eq!(next.get("agg").memory_level, Some(2), "DS2 never touches memory");
+    }
+
+    #[test]
+    fn respects_max_parallelism() {
+        let meta = linear_meta(&[("map", false)]);
+        let mut cfg = ScalerConfig::default();
+        cfg.max_parallelism = 4;
+        let mut windows = BTreeMap::new();
+        windows.insert("source".into(), window(0.9, 1e6, 2e6, 1e6));
+        windows.insert("map".into(), window(1.0, 1000.0, 10.0, 1000.0));
+        windows.insert("sink".into(), window(0.0, 0.0, 1.0, 0.0));
+        let current = ScalingAssignment::default();
+        let mut ds2 = Ds2::new(cfg);
+        let next = ds2.decide(&input_ctx(&meta, &windows, &current));
+        assert_eq!(next.parallelism("map"), 4);
+    }
+}

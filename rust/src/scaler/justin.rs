@@ -1,0 +1,388 @@
+//! Justin's hybrid elastic scaling policy — Algorithm 1 of the paper.
+//!
+//! Justin wraps the unmodified DS2 rate model and, per stateful operator,
+//! arbitrates between DS2's horizontal decision and a vertical (memory)
+//! step using two storage signals:
+//!
+//! * θ — block-cache hit rate (low ⇒ the cache is too small for the
+//!   working set, Takeaway 2),
+//! * τ — mean state access latency (high ⇒ a significant fraction of
+//!   accesses reach disk, §4).
+//!
+//! A decision history tracks whether the previous step was vertical
+//! (`o.v`) and whether it helped (θ↑ or τ↓), implementing lines 7–14;
+//! stateless operators are stripped of managed memory entirely (lines 3–4).
+
+use super::ds2::Ds2;
+use super::{Policy, PolicyInput};
+use crate::config::ScalerConfig;
+use crate::graph::{OpKind, ScalingAssignment};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+struct History {
+    /// C^{t-1}.
+    assignment: ScalingAssignment,
+    /// θ^{t-1} per operator.
+    theta: BTreeMap<String, Option<f64>>,
+    /// τ^{t-1} per operator (µs).
+    tau: BTreeMap<String, Option<f64>>,
+    /// o.v^{t-1}: was the last decision a scale-up?
+    vertical: BTreeMap<String, bool>,
+}
+
+/// The Justin policy.
+pub struct Justin {
+    pub cfg: ScalerConfig,
+    ds2: Ds2,
+    history: Option<History>,
+}
+
+impl Justin {
+    pub fn new(cfg: ScalerConfig) -> Self {
+        Self {
+            ds2: Ds2::new(cfg.clone()),
+            cfg,
+            history: None,
+        }
+    }
+
+    /// Lines 7–8: did the previous scale-up improve storage behaviour?
+    /// Uses relative hysteresis `improvement_epsilon` (footnote 3).
+    fn improved(
+        &self,
+        theta_now: Option<f64>,
+        theta_prev: Option<f64>,
+        tau_now: Option<f64>,
+        tau_prev: Option<f64>,
+    ) -> bool {
+        let eps = self.cfg.improvement_epsilon;
+        let theta_up = match (theta_now, theta_prev) {
+            (Some(now), Some(prev)) => now > prev * (1.0 + eps),
+            _ => false,
+        };
+        let tau_down = match (tau_now, tau_prev) {
+            (Some(now), Some(prev)) => now < prev * (1.0 - eps),
+            _ => false,
+        };
+        theta_up || tau_down
+    }
+
+    /// Line 16: is there memory pressure (cache too small or accesses
+    /// hitting disk)?
+    fn memory_pressure(&self, theta: Option<f64>, tau: Option<f64>) -> bool {
+        let theta_low = theta
+            .map(|h| h < self.cfg.cache_hit_threshold)
+            .unwrap_or(false);
+        let tau_high = tau
+            .map(|t| t > self.cfg.latency_threshold_us as f64)
+            .unwrap_or(false);
+        theta_low || tau_high
+    }
+}
+
+impl Policy for Justin {
+    fn name(&self) -> &'static str {
+        "justin"
+    }
+
+    fn decide(&mut self, input: &PolicyInput) -> ScalingAssignment {
+        // Line 1: C^t ← DS2().
+        let mut next = self.ds2.plan(input);
+        let prev = self.history.take().unwrap_or_else(|| History {
+            assignment: input.current.clone(),
+            ..Default::default()
+        });
+        let mut new_vertical: BTreeMap<String, bool> = BTreeMap::new();
+        let mut new_theta = BTreeMap::new();
+        let mut new_tau = BTreeMap::new();
+
+        // Line 2: iterate over all operators.
+        for op in input.meta.topo() {
+            if op.kind == OpKind::Source {
+                continue; // injectors are outside the resource model (§5)
+            }
+            let window = input.windows.get(&op.name);
+            let theta_now = window.and_then(|w| w.cache_hit_rate);
+            let tau_now = window.and_then(|w| w.access_latency_us);
+            new_theta.insert(op.name.clone(), theta_now);
+            new_tau.insert(op.name.clone(), tau_now);
+
+            let prev_scaling = prev.assignment.get(&op.name);
+            let mut scaling = next.get(&op.name);
+
+            // Line 3: stateless? (No recorded RocksDB access — judged from
+            // metrics, falling back to the graph's static notion.)
+            let stateless = window.map(|w| w.is_stateless()).unwrap_or(!op.stateful);
+            if stateless {
+                // Line 4: disable managed memory.
+                scaling.memory_level = None;
+                next.set(&op.name, scaling);
+                continue;
+            }
+
+            // Restore a level for operators that were ⊥ but now report state.
+            let prev_level = prev_scaling.memory_level.unwrap_or(0);
+            scaling.memory_level = Some(prev_level);
+
+            // Line 5: does DS2 think o_i's capacity is insufficient?
+            if scaling.parallelism != prev_scaling.parallelism {
+                let was_vertical = prev.vertical.get(&op.name).copied().unwrap_or(false);
+                if was_vertical {
+                    // Lines 7–14: we scaled up last time — did it help?
+                    let improved = self.improved(
+                        theta_now,
+                        prev.theta.get(&op.name).copied().flatten(),
+                        tau_now,
+                        prev.tau.get(&op.name).copied().flatten(),
+                    );
+                    if improved {
+                        // Lines 8–12: keep pushing vertically if possible.
+                        if prev_level + 1 < self.cfg.max_level {
+                            scaling.parallelism = prev_scaling.parallelism; // cancel scale-out
+                            scaling.memory_level = Some(prev_level + 1);
+                            new_vertical.insert(op.name.clone(), true);
+                        }
+                    } else {
+                        // Lines 13–14: scale-up didn't help — roll it back
+                        // (DS2's parallelism applies with the old memory).
+                        scaling.memory_level = Some(prev_level.saturating_sub(1));
+                    }
+                } else {
+                    // Lines 16–19: could vertical scaling be useful?
+                    if self.memory_pressure(theta_now, tau_now)
+                        && prev_level + 1 < self.cfg.max_level
+                    {
+                        scaling.parallelism = prev_scaling.parallelism; // cancel scale-out
+                        scaling.memory_level = Some(prev_level + 1);
+                        new_vertical.insert(op.name.clone(), true);
+                    }
+                }
+            }
+            next.set(&op.name, scaling);
+        }
+
+        self.history = Some(History {
+            assignment: next.clone(),
+            theta: new_theta,
+            tau: new_tau,
+            vertical: new_vertical,
+        });
+        next
+    }
+
+    fn reset(&mut self) {
+        self.history = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpScaling;
+    use crate::metrics::window::OperatorWindow;
+    use crate::scaler::testutil::{linear_meta, window};
+    use crate::scaler::GraphMeta;
+
+    fn stateful_window(
+        busyness: f64,
+        observed: f64,
+        true_rate: f64,
+        theta: f64,
+        tau_us: f64,
+    ) -> OperatorWindow {
+        let mut w = window(busyness, observed, true_rate, observed / 10.0);
+        w.cache_hit_rate = Some(theta);
+        w.access_latency_us = Some(tau_us);
+        w.state_size_bytes = 50 << 20;
+        w
+    }
+
+    struct Scenario {
+        meta: GraphMeta,
+        current: ScalingAssignment,
+        justin: Justin,
+    }
+
+    impl Scenario {
+        fn new() -> Self {
+            let meta = linear_meta(&[("agg", true)]);
+            let mut current = ScalingAssignment::default();
+            current.set("agg", OpScaling::new(1, Some(0)));
+            current.set("sink", OpScaling::new(1, Some(0)));
+            Self {
+                meta,
+                current,
+                justin: Justin::new(ScalerConfig::default()),
+            }
+        }
+
+        fn step(
+            &mut self,
+            source_rate: f64,
+            agg: OperatorWindow,
+        ) -> ScalingAssignment {
+            let mut windows = std::collections::BTreeMap::new();
+            windows.insert(
+                "source".to_string(),
+                window(0.9, source_rate, source_rate * 2.0, source_rate),
+            );
+            windows.insert("agg".to_string(), agg);
+            windows.insert("sink".to_string(), window(0.05, 100.0, 100_000.0, 0.0));
+            let next = self.justin.decide(&PolicyInput {
+                meta: &self.meta,
+                windows: &windows,
+                current: &self.current,
+            });
+            self.current = next.clone();
+            next
+        }
+    }
+
+    #[test]
+    fn stateless_operators_stripped() {
+        let meta = linear_meta(&[("map", false)]);
+        let mut current = ScalingAssignment::default();
+        current.set("map", OpScaling::new(1, Some(0)));
+        let mut windows = std::collections::BTreeMap::new();
+        windows.insert("source".into(), window(0.9, 1000.0, 2000.0, 1000.0));
+        windows.insert("map".into(), window(0.9, 1000.0, 700.0, 1000.0));
+        windows.insert("sink".into(), window(0.0, 0.0, 1.0, 0.0));
+        let mut justin = Justin::new(ScalerConfig::default());
+        let next = justin.decide(&PolicyInput {
+            meta: &meta,
+            windows: &windows,
+            current: &current,
+        });
+        assert_eq!(next.get("map").memory_level, None, "map gets ⊥");
+        assert_eq!(next.get("sink").memory_level, None, "sink gets ⊥ too");
+        assert!(next.parallelism("map") > 1, "DS2 scale-out still applies");
+    }
+
+    #[test]
+    fn memory_pressure_replaces_scale_out_with_scale_up() {
+        let mut s = Scenario::new();
+        // Hot stateful op: low θ (0.4 < 0.8) → Justin cancels DS2's
+        // scale-out and bumps memory instead.
+        let next = s.step(2000.0, stateful_window(0.95, 1000.0, 600.0, 0.4, 1500.0));
+        assert_eq!(next.parallelism("agg"), 1, "scale-out cancelled");
+        assert_eq!(next.get("agg").memory_level, Some(1), "memory bumped");
+    }
+
+    #[test]
+    fn successful_scale_up_repeats_then_caps() {
+        let mut s = Scenario::new();
+        let _ = s.step(2000.0, stateful_window(0.95, 1000.0, 600.0, 0.4, 1500.0));
+        // θ improved (0.4 → 0.6) but still insufficient → scale up again.
+        let next = s.step(2000.0, stateful_window(0.95, 1200.0, 700.0, 0.6, 900.0));
+        assert_eq!(next.parallelism("agg"), 1);
+        assert_eq!(next.get("agg").memory_level, Some(2));
+        // Improved again, but maxLevel=3 blocks (2+1 !< 3) → DS2 scale-out
+        // applies with memory kept.
+        let next = s.step(2000.0, stateful_window(0.95, 1400.0, 800.0, 0.8, 500.0));
+        assert!(next.parallelism("agg") > 1, "falls back to scale-out at cap");
+        assert_eq!(next.get("agg").memory_level, Some(2));
+    }
+
+    #[test]
+    fn failed_scale_up_rolls_back() {
+        let mut s = Scenario::new();
+        // Write-heavy-like: θ low triggers a vertical step…
+        let _ = s.step(2000.0, stateful_window(0.95, 1000.0, 600.0, 0.5, 800.0));
+        assert_eq!(s.current.get("agg").memory_level, Some(1));
+        // …but θ/τ did NOT improve → roll back to level 0 and accept DS2's
+        // parallelism.
+        let next = s.step(2000.0, stateful_window(0.95, 1000.0, 600.0, 0.5, 820.0));
+        assert_eq!(next.get("agg").memory_level, Some(0), "rolled back");
+        assert!(next.parallelism("agg") > 1, "DS2 scale-out applies");
+    }
+
+    #[test]
+    fn healthy_cache_keeps_ds2_decision() {
+        let mut s = Scenario::new();
+        // θ great (0.95) and τ low → no vertical intervention.
+        let next = s.step(2000.0, stateful_window(0.95, 1000.0, 600.0, 0.95, 200.0));
+        assert!(next.parallelism("agg") > 1);
+        assert_eq!(next.get("agg").memory_level, Some(0));
+    }
+
+    #[test]
+    fn no_rescale_means_no_vertical_action() {
+        let mut s = Scenario::new();
+        s.current.set("agg", OpScaling::new(2, Some(0)));
+        // Operator comfortable: DS2 keeps p=2 → line 5 false → untouched,
+        // even with a mediocre θ.
+        let agg = stateful_window(0.6, 1000.0, 750.0, 0.5, 500.0);
+        let next = s.step(1000.0, agg);
+        // demand 1000/(750*0.7)=1.9 → p=2 (unchanged).
+        assert_eq!(next.parallelism("agg"), 2);
+        assert_eq!(next.get("agg").memory_level, Some(0));
+    }
+
+    #[test]
+    fn q11_like_trace_converges_cheaper_than_ds2() {
+        // Reproduces the Fig. 5d shape in miniature: Justin's first step is
+        // vertical; capacity per task improves; final config needs fewer
+        // tasks than DS2's.
+        let cfg = ScalerConfig::default();
+        let mut justin = Justin::new(cfg.clone());
+        let mut ds2 = Ds2::new(cfg);
+        let meta = linear_meta(&[("sessions", true)]);
+        let mut cur_j = ScalingAssignment::default();
+        cur_j.set("sessions", OpScaling::new(1, Some(0)));
+        let mut cur_d = cur_j.clone();
+
+        // t=1: both see a hot operator, memory-pressured (θ=0.55).
+        let mut windows = std::collections::BTreeMap::new();
+        windows.insert("source".into(), window(0.9, 30_000.0, 60_000.0, 30_000.0));
+        windows.insert(
+            "sessions".into(),
+            stateful_window(0.97, 28_000.0, 30_000.0, 0.55, 1400.0),
+        );
+        windows.insert("sink".into(), window(0.02, 100.0, 1e6, 0.0));
+        let d1_j = justin.decide(&PolicyInput {
+            meta: &meta,
+            windows: &windows,
+            current: &cur_j,
+        });
+        let d1_d = ds2.decide(&PolicyInput {
+            meta: &meta,
+            windows: &windows,
+            current: &cur_d,
+        });
+        assert_eq!(d1_j.parallelism("sessions"), 1, "Justin scales up");
+        assert_eq!(d1_j.get("sessions").memory_level, Some(1));
+        assert!(d1_d.parallelism("sessions") > 1, "DS2 scales out");
+        cur_j = d1_j;
+        cur_d = d1_d;
+
+        // t=2: Justin's task now has a hot cache → per-task true rate much
+        // higher; DS2 world: per-task rate unchanged (cache still cold).
+        windows.insert(
+            "sessions".into(),
+            stateful_window(0.9, 48_000.0, 52_000.0, 0.92, 300.0),
+        );
+        let d2_j = justin.decide(&PolicyInput {
+            meta: &meta,
+            windows: &windows,
+            current: &cur_j,
+        });
+        let final_j = d2_j.parallelism("sessions");
+
+        let mut windows_d = windows.clone();
+        windows_d.insert(
+            "sessions".into(),
+            stateful_window(0.9, 48_000.0, 30_000.0, 0.55, 1400.0),
+        );
+        let d2_d = ds2.decide(&PolicyInput {
+            meta: &meta,
+            windows: &windows_d,
+            current: &cur_d,
+        });
+        let final_d = d2_d.parallelism("sessions");
+        assert!(
+            final_j < final_d,
+            "Justin ({final_j} tasks) should need fewer tasks than DS2 ({final_d})"
+        );
+    }
+}

@@ -1,0 +1,268 @@
+//! Auto-scaling policies: the DS2 baseline (CPU-only horizontal scaling) and
+//! Justin (hybrid CPU/memory scaling, Algorithm 1).
+//!
+//! Policies are pure functions over decision-window metrics — the same code
+//! drives the real engine ([`crate::engine::scrape`]) and the testbed
+//! simulator ([`crate::sim`]), so the experiments exercise exactly the
+//! policy that ships.
+
+pub mod ds2;
+pub mod justin;
+
+pub use ds2::Ds2;
+pub use justin::Justin;
+
+use crate::config::ScalerConfig;
+use crate::graph::{LogicalGraph, OpKind, ScalingAssignment};
+use crate::metrics::window::OperatorWindow;
+use std::collections::BTreeMap;
+
+/// Lightweight graph description the policies need (no operator factories —
+/// shared between the live engine and the simulator).
+#[derive(Debug, Clone)]
+pub struct GraphMeta {
+    pub name: String,
+    pub ops: Vec<OpMeta>,
+}
+
+/// One operator's policy-relevant shape.
+#[derive(Debug, Clone)]
+pub struct OpMeta {
+    pub name: String,
+    pub kind: OpKind,
+    pub stateful: bool,
+    /// Upstream operator names.
+    pub upstream: Vec<String>,
+}
+
+impl GraphMeta {
+    pub fn from_graph(graph: &LogicalGraph) -> Self {
+        Self {
+            name: graph.name.clone(),
+            ops: graph
+                .ops
+                .iter()
+                .map(|op| OpMeta {
+                    name: op.name.clone(),
+                    kind: op.kind,
+                    stateful: op.stateful,
+                    upstream: op
+                        .inputs
+                        .iter()
+                        .map(|(src, _)| graph.op(*src).name.clone())
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn op(&self, name: &str) -> Option<&OpMeta> {
+        self.ops.iter().find(|o| o.name == name)
+    }
+
+    /// Operators in topological order (construction order).
+    pub fn topo(&self) -> impl Iterator<Item = &OpMeta> {
+        self.ops.iter()
+    }
+}
+
+/// Everything a policy sees at decision time `t`.
+pub struct PolicyInput<'a> {
+    pub meta: &'a GraphMeta,
+    /// Decision-window metrics per operator.
+    pub windows: &'a BTreeMap<String, OperatorWindow>,
+    /// The configuration C^{t-1}.
+    pub current: &'a ScalingAssignment,
+}
+
+/// An auto-scaling policy.
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+    /// Compute the next configuration C^t.
+    fn decide(&mut self, input: &PolicyInput) -> ScalingAssignment;
+    /// Reset decision history (new experiment).
+    fn reset(&mut self) {}
+}
+
+/// The reconfiguration trigger (§4: "high busyness for one of its operators
+/// in addition to backpressure from its upstream operator(s)"), plus the
+/// §5 busyness band [low, high] for scale-down.
+pub fn should_trigger(
+    meta: &GraphMeta,
+    windows: &BTreeMap<String, OperatorWindow>,
+    current: &ScalingAssignment,
+    cfg: &ScalerConfig,
+) -> bool {
+    for op in &meta.ops {
+        if op.kind == OpKind::Source {
+            continue;
+        }
+        let Some(w) = windows.get(&op.name) else {
+            continue;
+        };
+        // Overload: operator hot and its upstream pushes back.
+        if w.busyness > cfg.busy_high {
+            let upstream_backpressure = op.upstream.iter().any(|u| {
+                windows
+                    .get(u)
+                    .map(|uw| uw.backpressure > 0.05)
+                    .unwrap_or(false)
+            });
+            if upstream_backpressure || w.backpressure > 0.05 {
+                return true;
+            }
+        }
+        // Underload: every scalable operator far below the band.
+        if op.kind == OpKind::Transform
+            && w.busyness < cfg.busy_low
+            && current.parallelism(&op.name) > 1
+            && w.observed_rate > 0.0
+        {
+            // Only trigger scale-down when nothing is overloaded.
+            let any_hot = meta.ops.iter().any(|o| {
+                windows
+                    .get(&o.name)
+                    .map(|x| x.busyness > cfg.busy_high)
+                    .unwrap_or(false)
+            });
+            if !any_hot {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Build a linear meta graph: source → ops… → sink.
+    pub fn linear_meta(names: &[(&str, bool)]) -> GraphMeta {
+        let mut ops = vec![OpMeta {
+            name: "source".into(),
+            kind: OpKind::Source,
+            stateful: false,
+            upstream: vec![],
+        }];
+        let mut prev = "source".to_string();
+        for (name, stateful) in names {
+            ops.push(OpMeta {
+                name: name.to_string(),
+                kind: OpKind::Transform,
+                stateful: *stateful,
+                upstream: vec![prev.clone()],
+            });
+            prev = name.to_string();
+        }
+        ops.push(OpMeta {
+            name: "sink".into(),
+            kind: OpKind::Sink,
+            stateful: false,
+            upstream: vec![prev],
+        });
+        GraphMeta {
+            name: "test".into(),
+            ops,
+        }
+    }
+
+    pub fn window(
+        busyness: f64,
+        observed: f64,
+        true_rate: f64,
+        out_rate: f64,
+    ) -> OperatorWindow {
+        OperatorWindow {
+            samples: 24,
+            busyness,
+            backpressure: 0.0,
+            observed_rate: observed,
+            true_rate,
+            output_rate: out_rate,
+            cache_hit_rate: None,
+            access_latency_us: None,
+            state_size_bytes: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+    use crate::graph::OpScaling;
+
+    #[test]
+    fn trigger_on_hot_operator_with_backpressure() {
+        let meta = linear_meta(&[("map", false)]);
+        let cfg = ScalerConfig::default();
+        let current = {
+            let mut a = ScalingAssignment::default();
+            a.set("map", OpScaling::new(1, Some(0)));
+            a
+        };
+        let mut windows = BTreeMap::new();
+        let mut src = window(0.5, 1000.0, 2000.0, 1000.0);
+        src.backpressure = 0.3;
+        windows.insert("source".to_string(), src);
+        windows.insert("map".to_string(), window(0.95, 1000.0, 1050.0, 1000.0));
+        windows.insert("sink".to_string(), window(0.1, 1000.0, 10_000.0, 0.0));
+        assert!(should_trigger(&meta, &windows, &current, &cfg));
+    }
+
+    #[test]
+    fn no_trigger_in_band() {
+        let meta = linear_meta(&[("map", false)]);
+        let cfg = ScalerConfig::default();
+        let current = {
+            let mut a = ScalingAssignment::default();
+            a.set("map", OpScaling::new(2, Some(0)));
+            a
+        };
+        let mut windows = BTreeMap::new();
+        windows.insert("source".to_string(), window(0.5, 1000.0, 2000.0, 1000.0));
+        windows.insert("map".to_string(), window(0.5, 1000.0, 2000.0, 1000.0));
+        windows.insert("sink".to_string(), window(0.3, 1000.0, 3000.0, 0.0));
+        assert!(!should_trigger(&meta, &windows, &current, &cfg));
+    }
+
+    #[test]
+    fn trigger_scale_down_when_idle() {
+        let meta = linear_meta(&[("map", false)]);
+        let cfg = ScalerConfig::default();
+        let current = {
+            let mut a = ScalingAssignment::default();
+            a.set("map", OpScaling::new(4, Some(0)));
+            a
+        };
+        let mut windows = BTreeMap::new();
+        windows.insert("source".to_string(), window(0.2, 100.0, 500.0, 100.0));
+        windows.insert("map".to_string(), window(0.05, 100.0, 2000.0, 100.0));
+        windows.insert("sink".to_string(), window(0.05, 100.0, 2000.0, 0.0));
+        assert!(should_trigger(&meta, &windows, &current, &cfg));
+        // …but not at p=1.
+        let mut a1 = ScalingAssignment::default();
+        a1.set("map", OpScaling::new(1, Some(0)));
+        assert!(!should_trigger(&meta, &windows, &a1, &cfg));
+    }
+
+    #[test]
+    fn meta_from_graph() {
+        use crate::graph::{LogicalGraph, Partitioning};
+        let mut g = LogicalGraph::new("x");
+        let s = g.add_op("source", OpKind::Source, false, vec![], 1);
+        let m = g.add_op(
+            "m",
+            OpKind::Transform,
+            true,
+            vec![(s, Partitioning::Rebalance)],
+            1,
+        );
+        g.add_op("sink", OpKind::Sink, false, vec![(m, Partitioning::Rebalance)], 1);
+        let meta = GraphMeta::from_graph(&g);
+        assert_eq!(meta.ops.len(), 3);
+        assert_eq!(meta.op("m").unwrap().upstream, vec!["source"]);
+        assert!(meta.op("m").unwrap().stateful);
+    }
+}

@@ -1,0 +1,26 @@
+//! Testbed simulator: replays the paper's 7-node cluster experiments in
+//! virtual time.
+//!
+//! Figure 4 and Figure 5 span 10–20 minutes of wall clock each (2-minute
+//! decision windows, 1-minute stabilisation); the simulator reproduces the
+//! same control loop — identical policy code, identical metric windows —
+//! against a fluid model of the engine whose constants are calibrated from
+//! the real engine and the real LSM (see [`model`] and
+//! `examples/lsm_explore.rs --calibrate`).
+//!
+//! The fluid model: per 5 s sample, each operator has a per-task service
+//! time `s = cpu + reads×(θ·t_hit + (1−θ)·t_miss) + writes×t_put`, where θ
+//! follows the LRU/working-set law `θ = min(1, C/W(p))` with the per-task
+//! working set `W(p) = W₁·p^(−α)` (α < 1 captures block-granularity false
+//! sharing: halving the keys per task does not halve the *blocks* it
+//! touches). Throughput, busyness and backpressure follow from the
+//! bottleneck analysis of the dataflow — exactly the quantities the paper's
+//! §3 microbenchmarks measure.
+
+pub mod model;
+pub mod profiles;
+pub mod runner;
+
+pub use model::{service_model, OpLoad, TickOutput};
+pub use profiles::{microbench_profile, query_profile, SimOpProfile, SimQuery};
+pub use runner::{run_autoscaling, AutoscaleTrace, ReconfigEvent, TracePoint};

@@ -1,0 +1,347 @@
+//! Simulation profiles for the §3 microbenchmark operator and the six
+//! Nexmark queries of §5.
+//!
+//! Calibration notes (see DESIGN.md §7): CPU costs are measured from the
+//! real engine (`engine_throughput` bench); storage costs from the real
+//! rockslite instance (`lsm_hotpath` bench). Working-set sizes follow each
+//! query's state semantics; α captures how much of the block working set a
+//! task sheds when keys are split p ways.
+
+use crate::engine::operators::AccessMode;
+use crate::graph::OpKind;
+
+/// One operator in the fluid model.
+#[derive(Debug, Clone)]
+pub struct SimOpProfile {
+    pub name: String,
+    pub kind: OpKind,
+    pub stateful: bool,
+    pub upstream: Vec<String>,
+    /// Pure compute per event, µs (no state access).
+    pub cpu_us: f64,
+    /// State reads per event.
+    pub reads_per_event: f64,
+    /// State writes per event.
+    pub writes_per_event: f64,
+    /// Per-task working set at p = 1, MB.
+    pub working_set_mb_p1: f64,
+    /// W(p) = W₁ · p^(−α).
+    pub ws_alpha: f64,
+    /// Reported state size (for the policy's state_size_bytes), MB.
+    pub state_mb: f64,
+    /// Output events per input event.
+    pub selectivity: f64,
+    /// Typical stored value size in KB — scales LSM write cost (flush +
+    /// compaction amplification ∝ bytes) and miss cost (block decode).
+    pub value_kb: f64,
+}
+
+impl SimOpProfile {
+    fn source(name: &str) -> Self {
+        Self {
+            name: name.into(),
+            kind: OpKind::Source,
+            stateful: false,
+            upstream: vec![],
+            cpu_us: 0.4,
+            reads_per_event: 0.0,
+            writes_per_event: 0.0,
+            working_set_mb_p1: 0.0,
+            ws_alpha: 1.0,
+            state_mb: 0.0,
+            selectivity: 1.0,
+            value_kb: 0.0,
+        }
+    }
+
+    fn stateless(name: &str, upstream: &str, cpu_us: f64, selectivity: f64) -> Self {
+        Self {
+            name: name.into(),
+            kind: OpKind::Transform,
+            stateful: false,
+            upstream: vec![upstream.into()],
+            cpu_us,
+            reads_per_event: 0.0,
+            writes_per_event: 0.0,
+            working_set_mb_p1: 0.0,
+            ws_alpha: 1.0,
+            state_mb: 0.0,
+            selectivity,
+            value_kb: 0.0,
+        }
+    }
+
+    fn sink(upstream: &[&str]) -> Self {
+        Self {
+            name: "sink".into(),
+            kind: OpKind::Sink,
+            stateful: false,
+            upstream: upstream.iter().map(|s| s.to_string()).collect(),
+            cpu_us: 0.25,
+            reads_per_event: 0.0,
+            writes_per_event: 0.0,
+            working_set_mb_p1: 0.0,
+            ws_alpha: 1.0,
+            state_mb: 0.0,
+            selectivity: 0.0,
+            value_kb: 0.0,
+        }
+    }
+}
+
+/// A simulated query: profiles + the experiment's target source rate.
+#[derive(Debug, Clone)]
+pub struct SimQuery {
+    pub name: String,
+    pub ops: Vec<SimOpProfile>,
+    /// Target source rate, events/s (the dashed blue line of Fig. 5).
+    pub target_rate: f64,
+}
+
+impl SimQuery {
+    pub fn op(&self, name: &str) -> Option<&SimOpProfile> {
+        self.ops.iter().find(|o| o.name == name)
+    }
+
+    pub fn meta(&self) -> crate::scaler::GraphMeta {
+        crate::scaler::GraphMeta {
+            name: self.name.clone(),
+            ops: self
+                .ops
+                .iter()
+                .map(|o| crate::scaler::OpMeta {
+                    name: o.name.clone(),
+                    kind: o.kind,
+                    stateful: o.stateful,
+                    upstream: o.upstream.clone(),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// §3 microbenchmark: single operator, 1 M keys × 1,000 B ≈ 1 GB of state,
+/// uniform access. Target rates per the paper: 50 k (Read/Write), 30 k
+/// (Update) events/s.
+///
+/// Calibration (matching Fig. 4's sustained/not-sustained frontier):
+/// * per-event CPU ≈ 40 µs (1,000 B deserialize + process in the JVM-like
+///   engine path; Update pays ~90 µs for read-modify-serialize),
+/// * α = 0: uniform random keys are scattered across *blocks*, so splitting
+///   keys p ways leaves each task touching nearly every block — the block
+///   working set stays ≈ the full 1 GB store at any parallelism.
+pub fn microbench_profile(mode: AccessMode) -> SimQuery {
+    let (cpu, reads, writes, target) = match mode {
+        AccessMode::Read => (40.0, 1.0, 0.0, 50_000.0),
+        AccessMode::Write => (40.0, 0.0, 1.0, 50_000.0),
+        AccessMode::Update => (90.0, 1.0, 1.0, 30_000.0),
+    };
+    SimQuery {
+        name: format!("microbench-{mode:?}"),
+        ops: vec![
+            SimOpProfile::source("source"),
+            SimOpProfile {
+                name: "kvstore".into(),
+                kind: OpKind::Transform,
+                stateful: true,
+                upstream: vec!["source".into()],
+                cpu_us: cpu,
+                reads_per_event: reads,
+                writes_per_event: writes,
+                working_set_mb_p1: 1000.0,
+                ws_alpha: 0.0,
+                state_mb: 1000.0,
+                selectivity: 1.0,
+                value_kb: 1.0,
+            },
+            SimOpProfile::sink(&["kvstore"]),
+        ],
+        target_rate: target,
+    }
+}
+
+/// Nexmark query profiles (§5). Targets and working sets are calibrated so
+/// the final configurations land in the parallelism range Figure 5 reports
+/// (q1 (7;158); q3 stateful (12;158); q5 (24;158); q8 DS2 (24;158) vs
+/// Justin (12;316); q11 DS2 (12;158) vs Justin (6;316)).
+///
+/// Stateful working sets use α = 0.35: splitting keys p ways shrinks the
+/// per-task *block* working set only ∝ p^0.35 (records of different tasks
+/// share SSTable blocks), while scaling *up* grows the cache linearly —
+/// the asymmetry Justin exploits. q3/q5 state (~8–10 MB) always fits the
+/// level-0 cache, so vertical scaling cannot help them (the paper's
+/// negative control).
+pub fn query_profile(query: &str) -> crate::Result<SimQuery> {
+    let q = match query {
+        // q1/q2: one stateless operator; paper target 2.25 M events/s,
+        // final parallelism 7 (≈ 350 k events/s/core at 70% target busy).
+        "q1" => SimQuery {
+            name: "q1".into(),
+            ops: vec![
+                SimOpProfile::source("source"),
+                SimOpProfile::stateless("currency_map", "source", 2.0, 1.0),
+                SimOpProfile::sink(&["currency_map"]),
+            ],
+            target_rate: 2_250_000.0,
+        },
+        "q2" => SimQuery {
+            name: "q2".into(),
+            ops: vec![
+                SimOpProfile::source("source"),
+                SimOpProfile::stateless("filter", "source", 2.0, 0.05),
+                SimOpProfile::sink(&["filter"]),
+            ],
+            target_rate: 2_250_000.0,
+        },
+        // q3: source (persons+auctions) → two stateless routers → an
+        // incremental join over the complete stream whose state converges
+        // to ~8 MB — always cache-resident ⇒ vertical scaling useless.
+        "q3" => SimQuery {
+            name: "q3".into(),
+            ops: vec![
+                SimOpProfile::source("source"),
+                SimOpProfile::stateless("filter_auctions", "source", 1.2, 0.7),
+                SimOpProfile::stateless("filter_persons", "source", 1.2, 0.2),
+                SimOpProfile {
+                    name: "join".into(),
+                    kind: OpKind::Transform,
+                    stateful: true,
+                    upstream: vec!["filter_auctions".into(), "filter_persons".into()],
+                    cpu_us: 3.0,
+                    reads_per_event: 1.0,
+                    writes_per_event: 1.0,
+                    working_set_mb_p1: 8.0,
+                    ws_alpha: 1.0,
+                    state_mb: 8.0,
+                    selectivity: 0.5,
+                    value_kb: 0.1,
+                },
+                SimOpProfile::sink(&["join"]),
+            ],
+            target_rate: 1_200_000.0,
+        },
+        // q5: sliding-window aggregate; state ~10 MB (fits cache), heavy
+        // read-modify-write fan-out (size/slide = 5 windows per event).
+        // Paper final: (24; 158).
+        "q5" => SimQuery {
+            name: "q5".into(),
+            ops: vec![
+                SimOpProfile::source("source"),
+                SimOpProfile {
+                    name: "hot_items".into(),
+                    kind: OpKind::Transform,
+                    stateful: true,
+                    upstream: vec!["source".into()],
+                    cpu_us: 4.0,
+                    reads_per_event: 5.0,
+                    writes_per_event: 5.0,
+                    working_set_mb_p1: 10.0,
+                    ws_alpha: 1.0,
+                    state_mb: 10.0,
+                    selectivity: 0.2,
+                    value_kb: 0.05,
+                },
+                SimOpProfile::sink(&["hot_items"]),
+            ],
+            target_rate: 1_000_000.0,
+        },
+        // q8: source (persons+auctions) → routers → tumbling-window join
+        // with a large per-window working set: memory-pressured at level 0,
+        // saturated at level 1 (W₁ = 250 MB < the 252 MB level-1 cache).
+        "q8" => SimQuery {
+            name: "q8".into(),
+            ops: vec![
+                SimOpProfile::source("source"),
+                SimOpProfile::stateless("persons", "source", 1.5, 0.25),
+                SimOpProfile::stateless("auctions", "source", 1.5, 0.75),
+                SimOpProfile {
+                    name: "window_join".into(),
+                    kind: OpKind::Transform,
+                    stateful: true,
+                    upstream: vec!["persons".into(), "auctions".into()],
+                    cpu_us: 3.5,
+                    reads_per_event: 1.0,
+                    writes_per_event: 1.0,
+                    working_set_mb_p1: 250.0,
+                    ws_alpha: 0.35,
+                    state_mb: 420.0,
+                    selectivity: 0.3,
+                    value_kb: 0.15,
+                },
+                SimOpProfile::sink(&["window_join"]),
+            ],
+            target_rate: 750_000.0,
+        },
+        // q11: bids → session-window aggregate; active sessions dominate
+        // the working set (W₁ = 240 MB), read-modify-write per bid.
+        "q11" => SimQuery {
+            name: "q11".into(),
+            ops: vec![
+                SimOpProfile::source("source"),
+                SimOpProfile {
+                    name: "sessions".into(),
+                    kind: OpKind::Transform,
+                    stateful: true,
+                    upstream: vec!["source".into()],
+                    cpu_us: 3.0,
+                    reads_per_event: 1.0,
+                    writes_per_event: 1.0,
+                    working_set_mb_p1: 240.0,
+                    ws_alpha: 0.35,
+                    state_mb: 380.0,
+                    selectivity: 0.1,
+                    value_kb: 0.1,
+                },
+                SimOpProfile::sink(&["sessions"]),
+            ],
+            target_rate: 320_000.0,
+        },
+        other => anyhow::bail!("no simulation profile for query {other:?}"),
+    };
+    Ok(q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_profiles_resolve() {
+        for q in ["q1", "q2", "q3", "q5", "q8", "q11"] {
+            let p = query_profile(q).unwrap();
+            assert!(!p.ops.is_empty());
+            assert!(p.target_rate > 0.0);
+            // Upstream references valid.
+            for op in &p.ops {
+                for u in &op.upstream {
+                    assert!(p.op(u).is_some(), "{q}:{} references {u}", op.name);
+                }
+            }
+            // Exactly one source, one sink.
+            assert_eq!(
+                p.ops.iter().filter(|o| o.kind == OpKind::Source).count(),
+                1
+            );
+            assert_eq!(p.ops.iter().filter(|o| o.kind == OpKind::Sink).count(), 1);
+        }
+        assert!(query_profile("q99").is_err());
+    }
+
+    #[test]
+    fn microbench_modes() {
+        let r = microbench_profile(AccessMode::Read);
+        assert_eq!(r.op("kvstore").unwrap().reads_per_event, 1.0);
+        assert_eq!(r.op("kvstore").unwrap().writes_per_event, 0.0);
+        let u = microbench_profile(AccessMode::Update);
+        assert_eq!(u.target_rate, 30_000.0);
+        assert_eq!(u.op("kvstore").unwrap().writes_per_event, 1.0);
+    }
+
+    #[test]
+    fn meta_conversion() {
+        let q = query_profile("q8").unwrap();
+        let meta = q.meta();
+        assert_eq!(meta.op("window_join").unwrap().upstream.len(), 2);
+        assert!(meta.op("window_join").unwrap().stateful);
+    }
+}

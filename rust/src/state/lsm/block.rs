@@ -1,0 +1,223 @@
+//! SSTable data blocks: the unit of disk I/O and of block-cache residency.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! entry*:  [klen: u16][vlen: u32][key][value]
+//! footer:  [entry_count: u32][crc32 of everything before: u32]
+//! ```
+//! Entries are sorted by key; blocks are immutable once built.
+
+/// A decoded, immutable data block.
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// (key, value) pairs, sorted.
+    entries: Vec<(Vec<u8>, Vec<u8>)>,
+    bytes: usize,
+}
+
+impl Block {
+    /// Binary-search lookup.
+    pub fn get(&self, key: &[u8]) -> Option<&[u8]> {
+        self.entries
+            .binary_search_by(|(k, _)| k.as_slice().cmp(key))
+            .ok()
+            .map(|i| self.entries[i].1.as_slice())
+    }
+
+    pub fn entries(&self) -> &[(Vec<u8>, Vec<u8>)] {
+        &self.entries
+    }
+
+    pub fn first_key(&self) -> Option<&[u8]> {
+        self.entries.first().map(|(k, _)| k.as_slice())
+    }
+
+    pub fn last_key(&self) -> Option<&[u8]> {
+        self.entries.last().map(|(k, _)| k.as_slice())
+    }
+
+    /// In-memory footprint (for cache accounting).
+    pub fn size_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Decode from the on-disk representation, verifying the CRC.
+    pub fn decode(data: &[u8]) -> anyhow::Result<Block> {
+        if data.len() < 8 {
+            anyhow::bail!("block too short: {} bytes", data.len());
+        }
+        let body_len = data.len() - 8;
+        let count =
+            u32::from_le_bytes(data[body_len..body_len + 4].try_into().unwrap()) as usize;
+        let stored_crc = u32::from_le_bytes(data[body_len + 4..].try_into().unwrap());
+        let actual_crc = crc32fast::hash(&data[..body_len + 4]);
+        if stored_crc != actual_crc {
+            anyhow::bail!("block CRC mismatch: stored={stored_crc:08x} actual={actual_crc:08x}");
+        }
+        let mut entries = Vec::with_capacity(count);
+        let mut pos = 0usize;
+        let mut bytes = 0usize;
+        for _ in 0..count {
+            if pos + 6 > body_len {
+                anyhow::bail!("block truncated at entry header");
+            }
+            let klen = u16::from_le_bytes(data[pos..pos + 2].try_into().unwrap()) as usize;
+            let vlen =
+                u32::from_le_bytes(data[pos + 2..pos + 6].try_into().unwrap()) as usize;
+            pos += 6;
+            if pos + klen + vlen > body_len {
+                anyhow::bail!("block truncated at entry body");
+            }
+            let key = data[pos..pos + klen].to_vec();
+            pos += klen;
+            let value = data[pos..pos + vlen].to_vec();
+            pos += vlen;
+            bytes += klen + vlen + 48;
+            entries.push((key, value));
+        }
+        Ok(Block { entries, bytes })
+    }
+}
+
+/// Accumulates sorted entries and emits encoded blocks at a target size.
+pub struct BlockBuilder {
+    buf: Vec<u8>,
+    count: u32,
+    first_key: Option<Vec<u8>>,
+    last_key: Option<Vec<u8>>,
+    target_size: usize,
+}
+
+impl BlockBuilder {
+    pub fn new(target_size: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(target_size.saturating_add(1024).min(1 << 20)),
+            count: 0,
+            first_key: None,
+            last_key: None,
+            target_size,
+        }
+    }
+
+    /// Append an entry (caller must feed keys in sorted order).
+    pub fn add(&mut self, key: &[u8], value: &[u8]) {
+        debug_assert!(
+            self.last_key.as_deref().map(|k| k < key).unwrap_or(true),
+            "keys must be added in strictly increasing order"
+        );
+        self.buf
+            .extend_from_slice(&(key.len() as u16).to_le_bytes());
+        self.buf
+            .extend_from_slice(&(value.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(key);
+        self.buf.extend_from_slice(value);
+        if self.first_key.is_none() {
+            self.first_key = Some(key.to_vec());
+        }
+        self.last_key = Some(key.to_vec());
+        self.count += 1;
+    }
+
+    /// Should the current block be cut?
+    pub fn is_full(&self) -> bool {
+        self.buf.len() >= self.target_size
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Encode and reset. Returns `(bytes, first_key, last_key)`.
+    pub fn finish(&mut self) -> (Vec<u8>, Vec<u8>, Vec<u8>) {
+        let mut out = std::mem::take(&mut self.buf);
+        out.extend_from_slice(&self.count.to_le_bytes());
+        let crc = crc32fast::hash(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        let first = self.first_key.take().unwrap_or_default();
+        let last = self.last_key.take().unwrap_or_default();
+        self.count = 0;
+        self.buf = Vec::with_capacity(self.target_size.saturating_add(1024).min(1 << 20));
+        (out, first, last)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn roundtrip() {
+        let mut b = BlockBuilder::new(4096);
+        for i in 0..100u32 {
+            b.add(&i.to_be_bytes(), format!("value-{i}").as_bytes());
+        }
+        let (bytes, first, last) = b.finish();
+        assert_eq!(first, 0u32.to_be_bytes());
+        assert_eq!(last, 99u32.to_be_bytes());
+        let block = Block::decode(&bytes).unwrap();
+        assert_eq!(block.len(), 100);
+        assert_eq!(block.get(&42u32.to_be_bytes()), Some(b"value-42".as_ref()));
+        assert_eq!(block.get(&200u32.to_be_bytes()), None);
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let mut b = BlockBuilder::new(4096);
+        b.add(b"k", b"v");
+        let (mut bytes, _, _) = b.finish();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(Block::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let mut b = BlockBuilder::new(4096);
+        b.add(b"key", b"value");
+        let (bytes, _, _) = b.finish();
+        assert!(Block::decode(&bytes[..bytes.len() - 3]).is_err());
+        assert!(Block::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn builder_reset_after_finish() {
+        let mut b = BlockBuilder::new(64);
+        b.add(b"a", b"1");
+        let _ = b.finish();
+        assert!(b.is_empty());
+        b.add(b"b", b"2");
+        let (bytes, first, _) = b.finish();
+        let block = Block::decode(&bytes).unwrap();
+        assert_eq!(block.len(), 1);
+        assert_eq!(first, b"b");
+    }
+
+    #[test]
+    fn random_roundtrip_preserves_entries() {
+        prop(30, |g| {
+            let n = g.usize(1..200);
+            let mut keys: Vec<Vec<u8>> = (0..n).map(|_| g.bytes(1, 12)).collect();
+            keys.sort();
+            keys.dedup();
+            let mut b = BlockBuilder::new(usize::MAX);
+            for (i, k) in keys.iter().enumerate() {
+                b.add(k, &i.to_le_bytes());
+            }
+            let (bytes, _, _) = b.finish();
+            let block = Block::decode(&bytes).unwrap();
+            assert_eq!(block.len(), keys.len());
+            for (i, k) in keys.iter().enumerate() {
+                assert_eq!(block.get(k), Some(i.to_le_bytes().as_ref()));
+            }
+        });
+    }
+}

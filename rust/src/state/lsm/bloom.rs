@@ -1,0 +1,122 @@
+//! Bloom filter for SSTables (double-hashing scheme, à la LevelDB).
+
+use crate::util::hash::fnv1a;
+
+/// Immutable bloom filter built over a key set.
+#[derive(Clone, Debug)]
+pub struct Bloom {
+    bits: Vec<u8>,
+    k: u32,
+}
+
+impl Bloom {
+    /// Build from key hashes with `bits_per_key` bits of budget per key.
+    pub fn build<'a, I: IntoIterator<Item = &'a [u8]>>(keys: I, bits_per_key: u32) -> Bloom {
+        let hashes: Vec<u64> = keys.into_iter().map(fnv1a).collect();
+        let n = hashes.len().max(1);
+        let nbits = (n * bits_per_key as usize).max(64);
+        let nbytes = (nbits + 7) / 8;
+        let nbits = nbytes * 8;
+        // Optimal k ≈ bits_per_key * ln2.
+        let k = ((bits_per_key as f64) * 0.69) as u32;
+        let k = k.clamp(1, 30);
+        let mut bits = vec![0u8; nbytes];
+        for &h in &hashes {
+            let mut h1 = h;
+            let h2 = h.rotate_right(17) | 1;
+            for _ in 0..k {
+                let bit = (h1 % nbits as u64) as usize;
+                bits[bit / 8] |= 1 << (bit % 8);
+                h1 = h1.wrapping_add(h2);
+            }
+        }
+        Bloom { bits, k }
+    }
+
+    /// May the key be present? False positives possible, false negatives not.
+    pub fn may_contain(&self, key: &[u8]) -> bool {
+        let nbits = self.bits.len() * 8;
+        let h = fnv1a(key);
+        let mut h1 = h;
+        let h2 = h.rotate_right(17) | 1;
+        for _ in 0..self.k {
+            let bit = (h1 % nbits as u64) as usize;
+            if self.bits[bit / 8] & (1 << (bit % 8)) == 0 {
+                return false;
+            }
+            h1 = h1.wrapping_add(h2);
+        }
+        true
+    }
+
+    /// Serialize: [k: u8][bits...].
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(1 + self.bits.len());
+        out.push(self.k as u8);
+        out.extend_from_slice(&self.bits);
+        out
+    }
+
+    /// Deserialize from [`encode`](Self::encode) output.
+    pub fn decode(data: &[u8]) -> Option<Bloom> {
+        if data.is_empty() {
+            return None;
+        }
+        Some(Bloom {
+            k: data[0] as u32,
+            bits: data[1..].to_vec(),
+        })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.bits.len() + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn no_false_negatives() {
+        let keys: Vec<Vec<u8>> = (0..1000u32).map(|i| i.to_be_bytes().to_vec()).collect();
+        let bloom = Bloom::build(keys.iter().map(|k| k.as_slice()), 10);
+        for k in &keys {
+            assert!(bloom.may_contain(k));
+        }
+    }
+
+    #[test]
+    fn false_positive_rate_reasonable() {
+        let keys: Vec<Vec<u8>> = (0..10_000u32).map(|i| i.to_be_bytes().to_vec()).collect();
+        let bloom = Bloom::build(keys.iter().map(|k| k.as_slice()), 10);
+        let fp = (10_000u32..20_000)
+            .filter(|i| bloom.may_contain(&i.to_be_bytes()))
+            .count();
+        // 10 bits/key should give ~1% FP; allow generous slack.
+        assert!(fp < 500, "fp={fp}");
+    }
+
+    #[test]
+    fn roundtrip_encode_decode() {
+        prop(20, |g| {
+            let keys: Vec<Vec<u8>> = (0..g.usize(1..100))
+                .map(|_| g.bytes(1, 16))
+                .collect();
+            let bloom = Bloom::build(keys.iter().map(|k| k.as_slice()), 10);
+            let decoded = Bloom::decode(&bloom.encode()).unwrap();
+            for k in &keys {
+                assert!(decoded.may_contain(k));
+            }
+        });
+    }
+
+    #[test]
+    fn empty_keyset() {
+        let bloom = Bloom::build(std::iter::empty(), 10);
+        // No false negatives possible; may_contain may return anything but
+        // must not panic.
+        let _ = bloom.may_contain(b"x");
+    }
+}

@@ -1,0 +1,153 @@
+//! K-way merge of sorted runs for compaction. Runs are ordered
+//! newest-to-oldest; the newest occurrence of a key wins. Tombstones are
+//! dropped only when merging into the bottommost populated level.
+
+/// One entry as stored internally: tag byte distinguishes puts from deletes.
+pub const TAG_VALUE: u8 = 0;
+pub const TAG_TOMBSTONE: u8 = 1;
+
+/// Encode a user value as a stored record.
+pub fn encode_value(value: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(value.len() + 1);
+    out.push(TAG_VALUE);
+    out.extend_from_slice(value);
+    out
+}
+
+/// The stored record for a deletion.
+pub fn encode_tombstone() -> Vec<u8> {
+    vec![TAG_TOMBSTONE]
+}
+
+/// Decode a stored record: `Some(user_value)` or `None` for a tombstone.
+pub fn decode_record(stored: &[u8]) -> Option<&[u8]> {
+    match stored.first() {
+        Some(&TAG_VALUE) => Some(&stored[1..]),
+        _ => None, // TAG_TOMBSTONE or malformed
+    }
+}
+
+/// Merge sorted runs (each `Vec<(key, stored_record)>`, sorted by key,
+/// `runs[0]` newest). Returns a single sorted run with one record per key.
+/// If `drop_tombstones`, deletion markers are elided from the output.
+pub fn merge_runs(
+    runs: Vec<Vec<(Vec<u8>, Vec<u8>)>>,
+    drop_tombstones: bool,
+) -> Vec<(Vec<u8>, Vec<u8>)> {
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    let mut out: Vec<(Vec<u8>, Vec<u8>)> = Vec::with_capacity(total);
+    // Cursor per run.
+    let mut cursors = vec![0usize; runs.len()];
+    loop {
+        // Find the smallest key among run heads; ties resolved by run
+        // priority (lower index = newer wins).
+        let mut best: Option<(usize, &[u8])> = None;
+        for (i, run) in runs.iter().enumerate() {
+            if cursors[i] >= run.len() {
+                continue;
+            }
+            let key = run[cursors[i]].0.as_slice();
+            match best {
+                None => best = Some((i, key)),
+                Some((_, bkey)) if key < bkey => best = Some((i, key)),
+                _ => {}
+            }
+        }
+        let Some((winner, key)) = best else { break };
+        let key = key.to_vec();
+        let record = runs[winner][cursors[winner]].1.clone();
+        // Advance every run past this key (older duplicates are shadowed).
+        for (i, run) in runs.iter().enumerate() {
+            while cursors[i] < run.len() && run[cursors[i]].0 == key {
+                cursors[i] += 1;
+            }
+        }
+        let is_tombstone = record.first() == Some(&TAG_TOMBSTONE);
+        if !(drop_tombstones && is_tombstone) {
+            out.push((key, record));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use std::collections::BTreeMap;
+
+    fn kv(k: &str, v: &str) -> (Vec<u8>, Vec<u8>) {
+        (k.as_bytes().to_vec(), encode_value(v.as_bytes()))
+    }
+
+    fn tomb(k: &str) -> (Vec<u8>, Vec<u8>) {
+        (k.as_bytes().to_vec(), encode_tombstone())
+    }
+
+    #[test]
+    fn newest_wins() {
+        let merged = merge_runs(
+            vec![
+                vec![kv("a", "new"), kv("c", "3")],
+                vec![kv("a", "old"), kv("b", "2")],
+            ],
+            false,
+        );
+        assert_eq!(merged.len(), 3);
+        assert_eq!(decode_record(&merged[0].1), Some(b"new".as_ref()));
+    }
+
+    #[test]
+    fn tombstones_shadow_and_drop() {
+        let runs = vec![vec![tomb("a")], vec![kv("a", "old"), kv("b", "2")]];
+        let kept = merge_runs(runs.clone(), false);
+        assert_eq!(kept.len(), 2);
+        assert_eq!(decode_record(&kept[0].1), None);
+        let dropped = merge_runs(runs, true);
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].0, b"b");
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        assert_eq!(decode_record(&encode_value(b"x")), Some(b"x".as_ref()));
+        assert_eq!(decode_record(&encode_value(b"")), Some(b"".as_ref()));
+        assert_eq!(decode_record(&encode_tombstone()), None);
+    }
+
+    #[test]
+    fn merge_matches_model() {
+        prop(40, |g| {
+            let nruns = g.usize(1..5);
+            // Build runs oldest-to-newest in a model, then feed newest-first.
+            let mut model: BTreeMap<Vec<u8>, Vec<u8>> = BTreeMap::new();
+            let mut runs_old_to_new = Vec::new();
+            for _ in 0..nruns {
+                let mut run: BTreeMap<Vec<u8>, Vec<u8>> = BTreeMap::new();
+                for _ in 0..g.usize(0..30) {
+                    let key = g.bytes(1, 3);
+                    let record = if g.chance(0.2) {
+                        encode_tombstone()
+                    } else {
+                        encode_value(&g.bytes(0, 4))
+                    };
+                    run.insert(key, record);
+                }
+                for (k, v) in &run {
+                    model.insert(k.clone(), v.clone());
+                }
+                runs_old_to_new.push(run.into_iter().collect::<Vec<_>>());
+            }
+            runs_old_to_new.reverse(); // now newest-first
+            let merged = merge_runs(runs_old_to_new, false);
+            let want: Vec<(Vec<u8>, Vec<u8>)> = model.into_iter().collect();
+            assert_eq!(merged, want);
+        });
+    }
+
+    #[test]
+    fn empty_runs() {
+        assert!(merge_runs(vec![], false).is_empty());
+        assert!(merge_runs(vec![vec![], vec![]], true).is_empty());
+    }
+}

@@ -1,0 +1,697 @@
+//! The rockslite database: MemTable + leveled SSTables + block cache.
+//!
+//! One instance per stateful task (mirroring Flink's per-slot RocksDB).
+//! Single-threaded: the owning task thread performs all reads, writes,
+//! flushes and compactions (compaction is inline and deterministic, which
+//! keeps experiments reproducible; RocksDB's background threads only shift
+//! *when* the work happens, not how much).
+
+use super::block::Block;
+use super::cache::BlockCache;
+use super::compaction::{decode_record, encode_tombstone, encode_value, merge_runs};
+use super::options::DbOptions;
+use super::skiplist::SkipList;
+use super::sstable::{SsTableReader, SsTableWriter};
+use crate::metrics::{Counter, Gauge, Histo};
+use crate::util::histogram::Histogram;
+use anyhow::Context;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Shared metric handles the engine wires into each task's Db so the scraper
+/// sees storage behaviour (θ, τ) without touching the task thread.
+#[derive(Clone, Default)]
+pub struct DbMetricHooks {
+    pub cache_hit: Option<Arc<Counter>>,
+    pub cache_miss: Option<Arc<Counter>>,
+    pub access_ns: Option<Arc<Histo>>,
+    pub state_bytes: Option<Arc<Gauge>>,
+}
+
+struct Table {
+    id: u64,
+    reader: SsTableReader,
+}
+
+/// Point-in-time storage statistics.
+#[derive(Debug, Clone, Default)]
+pub struct DbStats {
+    pub gets: u64,
+    pub puts: u64,
+    pub deletes: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub flushes: u64,
+    pub compactions: u64,
+    pub memtable_bytes: usize,
+    pub disk_bytes: u64,
+    pub levels: Vec<usize>,
+    pub mean_access_ns: f64,
+    pub p99_access_ns: u64,
+}
+
+/// LSM key/value store.
+pub struct Db {
+    opts: DbOptions,
+    memtable: SkipList,
+    /// `levels[0]` — L0, possibly-overlapping, newest last. `levels[i>0]` —
+    /// sorted, non-overlapping runs.
+    levels: Vec<Vec<Table>>,
+    cache: BlockCache,
+    next_table_id: u64,
+    hooks: DbMetricHooks,
+    // Internal counters (also mirrored to hooks when present).
+    gets: u64,
+    puts: u64,
+    deletes: u64,
+    flushes: u64,
+    compactions: u64,
+    access_hist: Histogram,
+}
+
+impl Db {
+    /// Open (create) a database in `opts.dir`. The directory is wiped —
+    /// rockslite instances are always rebuilt from savepoints, like
+    /// Flink task state on redeploy.
+    pub fn open(opts: DbOptions) -> anyhow::Result<Db> {
+        if opts.dir.exists() {
+            std::fs::remove_dir_all(&opts.dir)
+                .with_context(|| format!("wiping {}", opts.dir.display()))?;
+        }
+        std::fs::create_dir_all(&opts.dir)
+            .with_context(|| format!("creating {}", opts.dir.display()))?;
+        let max_levels = opts.max_levels.max(2);
+        Ok(Db {
+            memtable: SkipList::new(opts.seed),
+            levels: (0..max_levels).map(|_| Vec::new()).collect(),
+            cache: BlockCache::new(opts.cache_bytes),
+            next_table_id: 1,
+            hooks: DbMetricHooks::default(),
+            gets: 0,
+            puts: 0,
+            deletes: 0,
+            flushes: 0,
+            compactions: 0,
+            access_hist: Histogram::new(),
+            opts,
+        })
+    }
+
+    /// Attach shared metric handles (engine wiring).
+    pub fn set_hooks(&mut self, hooks: DbMetricHooks) {
+        self.hooks = hooks;
+    }
+
+    pub fn options(&self) -> &DbOptions {
+        &self.opts
+    }
+
+    /// Resize the block cache at runtime (vertical scaling).
+    pub fn resize_cache(&mut self, cache_bytes: usize) {
+        self.opts.cache_bytes = cache_bytes;
+        self.cache.resize(cache_bytes);
+    }
+
+    /// Insert or overwrite a key.
+    pub fn put(&mut self, key: &[u8], value: &[u8]) -> anyhow::Result<()> {
+        let start = Instant::now();
+        self.memtable.insert(key, &encode_value(value));
+        self.puts += 1;
+        if self.memtable.approx_bytes() >= self.opts.memtable_bytes {
+            self.flush()?;
+        }
+        self.finish_access(start);
+        Ok(())
+    }
+
+    /// Delete a key (tombstone).
+    pub fn delete(&mut self, key: &[u8]) -> anyhow::Result<()> {
+        let start = Instant::now();
+        self.memtable.insert(key, &encode_tombstone());
+        self.deletes += 1;
+        if self.memtable.approx_bytes() >= self.opts.memtable_bytes {
+            self.flush()?;
+        }
+        self.finish_access(start);
+        Ok(())
+    }
+
+    /// Point lookup.
+    pub fn get(&mut self, key: &[u8]) -> anyhow::Result<Option<Vec<u8>>> {
+        let start = Instant::now();
+        self.gets += 1;
+        // 1. MemTable.
+        if let Some(stored) = self.memtable.get(key) {
+            let result = decode_record(stored).map(|v| v.to_vec());
+            self.finish_access(start);
+            return Ok(result);
+        }
+        // 2. L0, newest first (may overlap); then L1+ via range search.
+        // Allocation-free candidate iteration (§Perf: this loop runs once
+        // per state access).
+        for li in 0..self.levels.len() {
+            let n = self.levels[li].len();
+            if n == 0 {
+                continue;
+            }
+            // For L0 probe all tables newest-first; deeper levels are
+            // non-overlapping — binary search gives the one candidate.
+            let (mut idx, last) = if li == 0 {
+                (n - 1, 0usize)
+            } else {
+                let tables = &self.levels[li];
+                let i = tables
+                    .partition_point(|t| t.reader.handle.last_key.as_slice() < key);
+                if i >= n {
+                    continue;
+                }
+                (i, i)
+            };
+            loop {
+                let table = &self.levels[li][idx];
+                if table.reader.handle.contains_key_range(key)
+                    && table.reader.may_contain(key)
+                {
+                    if let Some(bi) = table.reader.find_block(key) {
+                        let block = self.load_block(li, idx, bi)?;
+                        if let Some(stored) = block.get(key) {
+                            let result = decode_record(stored).map(|v| v.to_vec());
+                            self.finish_access(start);
+                            return Ok(result);
+                        }
+                    }
+                }
+                if idx == last {
+                    break;
+                }
+                idx -= 1;
+            }
+        }
+        self.finish_access(start);
+        Ok(None)
+    }
+
+    /// Read a block through the cache, counting hits/misses.
+    fn load_block(&mut self, li: usize, ti: usize, bi: usize) -> anyhow::Result<Arc<Block>> {
+        let table_id = self.levels[li][ti].id;
+        let key = (table_id, bi as u32);
+        if let Some(block) = self.cache.get(&key) {
+            if let Some(c) = &self.hooks.cache_hit {
+                c.inc();
+            }
+            return Ok(block);
+        }
+        if let Some(c) = &self.hooks.cache_miss {
+            c.inc();
+        }
+        let block = Arc::new(self.levels[li][ti].reader.read_block(bi)?);
+        self.cache.insert(key, block.clone());
+        Ok(block)
+    }
+
+    fn finish_access(&mut self, start: Instant) {
+        let ns = start.elapsed().as_nanos() as u64;
+        // One histogram record per access: route to the shared hook when the
+        // engine wired one (the scraper drains it), else keep it locally.
+        match &self.hooks.access_ns {
+            Some(h) => h.record(ns),
+            None => self.access_hist.record(ns),
+        }
+    }
+
+    /// Flush the MemTable to a new L0 table.
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        if self.memtable.is_empty() {
+            return Ok(());
+        }
+        let id = self.next_table_id;
+        self.next_table_id += 1;
+        let path = self.opts.dir.join(format!("{id:08}.sst"));
+        let mut w =
+            SsTableWriter::create(&path, self.opts.block_size, self.opts.bloom_bits_per_key)?;
+        for (k, v) in self.memtable.iter() {
+            w.add(k, v)?;
+        }
+        let handle = w.finish()?;
+        let reader = SsTableReader::open(handle)?;
+        self.levels[0].push(Table { id, reader });
+        self.memtable = SkipList::new(self.opts.seed.wrapping_add(id));
+        self.flushes += 1;
+        if self.levels[0].len() >= self.opts.l0_compaction_trigger {
+            self.compact_level(0)?;
+        }
+        self.maybe_cascade()?;
+        self.update_size_gauge();
+        Ok(())
+    }
+
+    fn level_target_bytes(&self, level: usize) -> u64 {
+        debug_assert!(level >= 1);
+        self.opts.l1_target_bytes * self.opts.level_multiplier.pow(level as u32 - 1)
+    }
+
+    fn level_bytes(&self, level: usize) -> u64 {
+        self.levels[level]
+            .iter()
+            .map(|t| t.reader.handle.file_size)
+            .sum()
+    }
+
+    /// Is `level` the bottommost level containing any data (so tombstones
+    /// can be dropped when compacting into the next level)?
+    fn is_bottom_input(&self, next_level: usize) -> bool {
+        self.levels[next_level + 1..]
+            .iter()
+            .all(|l| l.is_empty())
+    }
+
+    /// Compact `level` into `level + 1`.
+    fn compact_level(&mut self, level: usize) -> anyhow::Result<()> {
+        let next = level + 1;
+        if next >= self.levels.len() {
+            return Ok(()); // bottom level: nothing below
+        }
+        // Inputs from `level`: L0 takes all files; deeper levels take the
+        // oldest file only (round-robin by construction: front of the Vec).
+        let src: Vec<Table> = if level == 0 {
+            std::mem::take(&mut self.levels[0])
+        } else {
+            if self.levels[level].is_empty() {
+                return Ok(());
+            }
+            vec![self.levels[level].remove(0)]
+        };
+        // Key span of the inputs.
+        let lo = src
+            .iter()
+            .map(|t| t.reader.handle.first_key.clone())
+            .min()
+            .unwrap();
+        let hi = src
+            .iter()
+            .map(|t| t.reader.handle.last_key.clone())
+            .max()
+            .unwrap();
+        // Overlapping files in `next`.
+        let mut overlap = Vec::new();
+        let mut keep = Vec::new();
+        for t in std::mem::take(&mut self.levels[next]) {
+            if t.reader.handle.overlaps(&lo, &hi) {
+                overlap.push(t);
+            } else {
+                keep.push(t);
+            }
+        }
+        // Runs newest-first: src sorted by id desc (newer first), then the
+        // next-level files (older than anything in `level`).
+        let mut runs: Vec<Vec<(Vec<u8>, Vec<u8>)>> = Vec::new();
+        let mut src_sorted = src;
+        src_sorted.sort_by(|a, b| b.id.cmp(&a.id));
+        for t in &src_sorted {
+            runs.push(t.reader.scan()?);
+        }
+        for t in &overlap {
+            runs.push(t.reader.scan()?);
+        }
+        let drop_tombstones = self.is_bottom_input(next);
+        let merged = merge_runs(runs, drop_tombstones);
+
+        // Invalidate cache + delete consumed files.
+        for t in src_sorted.iter().chain(overlap.iter()) {
+            self.cache.invalidate_table(t.id);
+            std::fs::remove_file(&t.reader.handle.path).ok();
+        }
+
+        // Write merged output split at file_target_bytes.
+        let mut new_tables = Vec::new();
+        let mut iter = merged.into_iter().peekable();
+        while iter.peek().is_some() {
+            let id = self.next_table_id;
+            self.next_table_id += 1;
+            let path = self.opts.dir.join(format!("{id:08}.sst"));
+            let mut w = SsTableWriter::create(
+                &path,
+                self.opts.block_size,
+                self.opts.bloom_bits_per_key,
+            )?;
+            let mut written = 0u64;
+            while let Some((k, v)) = iter.peek() {
+                if written > 0 && written + (k.len() + v.len()) as u64
+                    > self.opts.file_target_bytes
+                {
+                    break;
+                }
+                let (k, v) = iter.next().unwrap();
+                written += (k.len() + v.len()) as u64;
+                w.add(&k, &v)?;
+            }
+            let handle = w.finish()?;
+            let reader = SsTableReader::open(handle)?;
+            new_tables.push(Table { id, reader });
+        }
+        // Rebuild `next` sorted by first key (non-overlapping by merge).
+        keep.extend(new_tables);
+        keep.sort_by(|a, b| a.reader.handle.first_key.cmp(&b.reader.handle.first_key));
+        self.levels[next] = keep;
+        self.compactions += 1;
+        Ok(())
+    }
+
+    /// Cascade: push levels above their size target down.
+    fn maybe_cascade(&mut self) -> anyhow::Result<()> {
+        for level in 1..self.levels.len() - 1 {
+            while self.level_bytes(level) > self.level_target_bytes(level)
+                && !self.levels[level].is_empty()
+            {
+                self.compact_level(level)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn update_size_gauge(&self) {
+        if let Some(g) = &self.hooks.state_bytes {
+            g.set(self.total_bytes() as f64);
+        }
+    }
+
+    /// Approximate total state footprint (memtable + disk).
+    pub fn total_bytes(&self) -> u64 {
+        self.memtable.approx_bytes() as u64
+            + (0..self.levels.len())
+                .map(|l| self.level_bytes(l))
+                .sum::<u64>()
+    }
+
+    /// Full scan: merged view of all live entries (tombstones elided),
+    /// sorted by key. Used for savepoints.
+    pub fn scan_all(&self) -> anyhow::Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        let mut runs: Vec<Vec<(Vec<u8>, Vec<u8>)>> = Vec::new();
+        runs.push(
+            self.memtable
+                .iter()
+                .map(|(k, v)| (k.to_vec(), v.to_vec()))
+                .collect(),
+        );
+        for li in 0..self.levels.len() {
+            let tables: Vec<&Table> = if li == 0 {
+                self.levels[0].iter().rev().collect()
+            } else {
+                self.levels[li].iter().collect()
+            };
+            if li == 0 {
+                for t in tables {
+                    runs.push(t.reader.scan()?);
+                }
+            } else {
+                // Non-overlapping: concatenate into one run.
+                let mut run = Vec::new();
+                for t in tables {
+                    run.extend(t.reader.scan()?);
+                }
+                runs.push(run);
+            }
+        }
+        let merged = merge_runs(runs, true);
+        Ok(merged
+            .into_iter()
+            .filter_map(|(k, stored)| decode_record(&stored).map(|v| (k.clone(), v.to_vec())))
+            .collect())
+    }
+
+    /// Scan live entries whose key starts with `prefix` (key-group export).
+    pub fn scan_prefix(&self, prefix: &[u8]) -> anyhow::Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        // Simple and correct: filter the full scan. Savepoints are off the
+        // hot path (reconfiguration only).
+        Ok(self
+            .scan_all()?
+            .into_iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .collect())
+    }
+
+    /// Statistics snapshot (cumulative).
+    pub fn stats(&self) -> DbStats {
+        DbStats {
+            gets: self.gets,
+            puts: self.puts,
+            deletes: self.deletes,
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            flushes: self.flushes,
+            compactions: self.compactions,
+            memtable_bytes: self.memtable.approx_bytes(),
+            disk_bytes: (0..self.levels.len())
+                .map(|l| self.level_bytes(l))
+                .sum(),
+            levels: self.levels.iter().map(|l| l.len()).collect(),
+            mean_access_ns: self.access_hist.mean(),
+            p99_access_ns: self.access_hist.p99(),
+        }
+    }
+
+    /// Cache hit rate since the last [`reset_window_stats`](Self::reset_window_stats).
+    pub fn cache_hit_rate(&self) -> Option<f64> {
+        self.cache.hit_rate()
+    }
+
+    /// Reset per-window statistics (cache hit/miss, latency histogram).
+    pub fn reset_window_stats(&mut self) {
+        self.cache.reset_stats();
+        self.access_hist.clear();
+    }
+}
+
+impl Drop for Db {
+    fn drop(&mut self) {
+        // Best-effort cleanup of the on-disk footprint.
+        std::fs::remove_dir_all(&self.opts.dir).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "justin-db-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    fn small_opts(tag: &str) -> DbOptions {
+        DbOptions {
+            dir: tmpdir(tag),
+            memtable_bytes: 4 * 1024, // tiny: force frequent flushes
+            cache_bytes: 64 * 1024,
+            block_size: 512,
+            bloom_bits_per_key: 10,
+            l0_compaction_trigger: 3,
+            level_multiplier: 4,
+            l1_target_bytes: 16 * 1024,
+            file_target_bytes: 8 * 1024,
+            max_levels: 5,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn put_get_roundtrip_through_flushes() {
+        let mut db = Db::open(small_opts("rt")).unwrap();
+        for i in 0..2000u32 {
+            db.put(&i.to_be_bytes(), format!("v{i}").as_bytes()).unwrap();
+        }
+        let stats = db.stats();
+        assert!(stats.flushes > 0, "expected flushes: {stats:?}");
+        assert!(stats.compactions > 0, "expected compactions: {stats:?}");
+        for i in (0..2000u32).step_by(97) {
+            assert_eq!(
+                db.get(&i.to_be_bytes()).unwrap(),
+                Some(format!("v{i}").into_bytes()),
+                "key {i}"
+            );
+        }
+        assert_eq!(db.get(b"absent").unwrap(), None);
+    }
+
+    #[test]
+    fn overwrite_returns_newest() {
+        let mut db = Db::open(small_opts("ow")).unwrap();
+        for round in 0..5u32 {
+            for i in 0..300u32 {
+                db.put(&i.to_be_bytes(), format!("r{round}-{i}").as_bytes())
+                    .unwrap();
+            }
+        }
+        for i in (0..300u32).step_by(13) {
+            assert_eq!(
+                db.get(&i.to_be_bytes()).unwrap(),
+                Some(format!("r4-{i}").into_bytes())
+            );
+        }
+    }
+
+    #[test]
+    fn delete_shadows_older_values() {
+        let mut db = Db::open(small_opts("del")).unwrap();
+        for i in 0..500u32 {
+            db.put(&i.to_be_bytes(), b"v").unwrap();
+        }
+        for i in (0..500u32).step_by(2) {
+            db.delete(&i.to_be_bytes()).unwrap();
+        }
+        db.flush().unwrap();
+        for i in 0..500u32 {
+            let got = db.get(&i.to_be_bytes()).unwrap();
+            if i % 2 == 0 {
+                assert_eq!(got, None, "key {i} should be deleted");
+            } else {
+                assert_eq!(got, Some(b"v".to_vec()), "key {i} should live");
+            }
+        }
+    }
+
+    #[test]
+    fn scan_all_merged_view() {
+        let mut db = Db::open(small_opts("scan")).unwrap();
+        for i in 0..400u32 {
+            db.put(&i.to_be_bytes(), &i.to_le_bytes()).unwrap();
+        }
+        for i in 100..200u32 {
+            db.delete(&i.to_be_bytes()).unwrap();
+        }
+        let all = db.scan_all().unwrap();
+        assert_eq!(all.len(), 300);
+        assert!(all.windows(2).all(|w| w[0].0 < w[1].0), "sorted");
+    }
+
+    #[test]
+    fn scan_prefix_selects_group() {
+        let mut db = Db::open(small_opts("prefix")).unwrap();
+        for group in 0..4u16 {
+            for i in 0..50u32 {
+                let mut key = group.to_be_bytes().to_vec();
+                key.extend_from_slice(&i.to_be_bytes());
+                db.put(&key, b"x").unwrap();
+            }
+        }
+        let g2 = db.scan_prefix(&2u16.to_be_bytes()).unwrap();
+        assert_eq!(g2.len(), 50);
+        assert!(g2.iter().all(|(k, _)| k.starts_with(&2u16.to_be_bytes())));
+    }
+
+    #[test]
+    fn cache_metrics_flow() {
+        let mut opts = small_opts("cachemetrics");
+        opts.cache_bytes = 1 << 20;
+        let mut db = Db::open(opts).unwrap();
+        for i in 0..1000u32 {
+            db.put(&i.to_be_bytes(), &[7u8; 64]).unwrap();
+        }
+        db.flush().unwrap();
+        // First read: misses; repeat: hits.
+        for _ in 0..3 {
+            for i in (0..1000u32).step_by(50) {
+                db.get(&i.to_be_bytes()).unwrap();
+            }
+        }
+        let stats = db.stats();
+        assert!(stats.cache_hits > 0, "{stats:?}");
+        assert!(stats.cache_misses > 0, "{stats:?}");
+        assert!(db.cache_hit_rate().unwrap() > 0.3);
+        db.reset_window_stats();
+        assert_eq!(db.cache_hit_rate(), None);
+    }
+
+    #[test]
+    fn tiny_cache_thrashes() {
+        // With a cache smaller than the working set, repeated uniform reads
+        // keep missing — the Takeaway-2 behaviour.
+        let mut opts = small_opts("thrash");
+        opts.cache_bytes = 2 * 1024; // ~2 blocks
+        let mut db = Db::open(opts).unwrap();
+        for i in 0..2000u32 {
+            db.put(&i.to_be_bytes(), &[1u8; 100]).unwrap();
+        }
+        db.flush().unwrap();
+        db.reset_window_stats();
+        let mut r = crate::util::rng::Rng::new(1);
+        for _ in 0..500 {
+            let i = r.gen_range(2000) as u32;
+            db.get(&i.to_be_bytes()).unwrap();
+        }
+        let rate = db.cache_hit_rate().unwrap();
+        assert!(rate < 0.5, "tiny cache should thrash, hit rate {rate}");
+    }
+
+    #[test]
+    fn big_cache_gets_hot() {
+        let mut opts = small_opts("hot");
+        opts.cache_bytes = 8 << 20;
+        let mut db = Db::open(opts).unwrap();
+        for i in 0..2000u32 {
+            db.put(&i.to_be_bytes(), &[1u8; 100]).unwrap();
+        }
+        db.flush().unwrap();
+        // Warm.
+        for i in 0..2000u32 {
+            db.get(&i.to_be_bytes()).unwrap();
+        }
+        db.reset_window_stats();
+        let mut r = crate::util::rng::Rng::new(2);
+        for _ in 0..2000 {
+            let i = r.gen_range(2000) as u32;
+            db.get(&i.to_be_bytes()).unwrap();
+        }
+        let rate = db.cache_hit_rate().unwrap();
+        assert!(rate > 0.95, "warm big cache should hit, rate {rate}");
+    }
+
+    #[test]
+    fn resize_cache_applies() {
+        let mut db = Db::open(small_opts("resize")).unwrap();
+        db.resize_cache(123_456);
+        assert_eq!(db.options().cache_bytes, 123_456);
+    }
+
+    #[test]
+    fn matches_btreemap_model_with_flushes() {
+        prop(10, |g| {
+            let tag = format!("prop{}", g.case_seed);
+            let mut opts = small_opts(&tag);
+            opts.memtable_bytes = 2048;
+            let mut db = Db::open(opts).unwrap();
+            let mut model: BTreeMap<Vec<u8>, Vec<u8>> = BTreeMap::new();
+            for _ in 0..g.usize(50..400) {
+                let key = g.bytes(1, 6);
+                match g.usize(0..10) {
+                    0..=5 => {
+                        let value = g.bytes(0, 32);
+                        db.put(&key, &value).unwrap();
+                        model.insert(key, value);
+                    }
+                    6..=7 => {
+                        db.delete(&key).unwrap();
+                        model.remove(&key);
+                    }
+                    _ => {
+                        assert_eq!(
+                            db.get(&key).unwrap(),
+                            model.get(&key).cloned(),
+                            "get mismatch"
+                        );
+                    }
+                }
+            }
+            let scanned = db.scan_all().unwrap();
+            let want: Vec<(Vec<u8>, Vec<u8>)> =
+                model.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+            assert_eq!(scanned, want, "scan mismatch");
+        });
+    }
+}

@@ -1,0 +1,21 @@
+//! "rockslite" — a from-scratch LSM-tree key/value store standing in for
+//! RocksDB as the stream engine's state backend (§3).
+//!
+//! Structure mirrors the paper's Figure 3: writes buffer in a skip-list
+//! MemTable and flush to sorted SSTables arranged in levels; reads consult
+//! the MemTable, then per-table bloom filters and indexes, fetching data
+//! blocks through an LRU block cache whose size is the lever Justin's
+//! vertical scaling pulls.
+
+pub mod block;
+pub mod bloom;
+pub mod cache;
+pub mod compaction;
+pub mod db;
+pub mod options;
+pub mod skiplist;
+pub mod sstable;
+
+pub use cache::BlockCache;
+pub use db::{Db, DbMetricHooks, DbStats};
+pub use options::{split_managed, DbOptions, MB};

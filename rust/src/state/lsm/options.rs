@@ -1,0 +1,119 @@
+//! LSM options and the Flink managed-memory split rule (§3).
+
+use std::path::PathBuf;
+
+pub const MB: u64 = 1024 * 1024;
+
+/// Tuning knobs for one rockslite instance (one per stateful task).
+#[derive(Clone, Debug)]
+pub struct DbOptions {
+    /// Directory for SSTables (one dir per task instance).
+    pub dir: PathBuf,
+    /// MemTable flush threshold, bytes.
+    pub memtable_bytes: usize,
+    /// Block cache capacity, bytes.
+    pub cache_bytes: usize,
+    /// Target data block size, bytes.
+    pub block_size: usize,
+    /// Bloom filter bits per key.
+    pub bloom_bits_per_key: u32,
+    /// Number of L0 files that triggers an L0→L1 compaction.
+    pub l0_compaction_trigger: usize,
+    /// Per-level size multiplier (level i+1 target = multiplier × level i).
+    pub level_multiplier: u64,
+    /// Level-1 target size, bytes.
+    pub l1_target_bytes: u64,
+    /// Target size of individual output files during compaction, bytes.
+    pub file_target_bytes: u64,
+    /// Maximum number of levels.
+    pub max_levels: usize,
+    /// PRNG seed (skiplist tower heights).
+    pub seed: u64,
+}
+
+impl DbOptions {
+    /// Options for a managed-memory budget, applying the Flink split rule.
+    pub fn for_managed_memory(dir: PathBuf, managed_mb: u64) -> Self {
+        let (memtable_mb, cache_mb) = split_managed(managed_mb);
+        Self {
+            dir,
+            memtable_bytes: (memtable_mb * MB) as usize,
+            cache_bytes: (cache_mb * MB) as usize,
+            block_size: 4 * 1024,
+            bloom_bits_per_key: 10,
+            l0_compaction_trigger: 4,
+            level_multiplier: 10,
+            l1_target_bytes: 64 * MB,
+            file_target_bytes: 8 * MB,
+            max_levels: 7,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Flink's managed-memory split (§3): the MemTable gets a power-of-2 size of
+/// at most 64 MB, and the cache must keep **more than half** of the budget.
+///
+/// * 128 MB → 32 MB MemTable + 96 MB cache
+/// * 256 MB → 64 MB MemTable + 192 MB cache
+/// * 512 MB → 64 MB MemTable + 448 MB cache
+///
+/// Returns `(memtable_mb, cache_mb)`.
+pub fn split_managed(managed_mb: u64) -> (u64, u64) {
+    if managed_mb == 0 {
+        return (0, 0);
+    }
+    // Largest power of two that is <= 64 and strictly less than half the
+    // budget; at least 1 MB.
+    let half = managed_mb / 2;
+    let mut memtable = 64u64.min(crate::util::prev_pow2(half));
+    if memtable >= half && memtable > 1 {
+        // e.g. 128 MB: prev_pow2(64) = 64 == half → halve to keep cache > ½.
+        memtable /= 2;
+    }
+    memtable = memtable.max(1).min(managed_mb.saturating_sub(1).max(1));
+    (memtable, managed_mb - memtable)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_split_examples() {
+        assert_eq!(split_managed(128), (32, 96));
+        assert_eq!(split_managed(256), (64, 192));
+        assert_eq!(split_managed(512), (64, 448));
+        assert_eq!(split_managed(1024), (64, 960));
+        assert_eq!(split_managed(2048), (64, 1984));
+    }
+
+    #[test]
+    fn default_slot_budget() {
+        // §5: default managed memory per TS is 158 MB.
+        let (mt, cache) = split_managed(158);
+        assert_eq!(mt, 64);
+        assert_eq!(cache, 94);
+        // 316 (level 1) and 632 (level 2):
+        assert_eq!(split_managed(316), (64, 252));
+        assert_eq!(split_managed(632), (64, 568));
+    }
+
+    #[test]
+    fn memtable_is_pow2_and_cache_majority() {
+        for mb in [2u64, 3, 5, 8, 13, 100, 500, 4096] {
+            let (mt, cache) = split_managed(mb);
+            assert!(mt.is_power_of_two(), "mb={mb} mt={mt}");
+            assert!(mt <= 64);
+            assert_eq!(mt + cache, mb);
+            if mb >= 4 {
+                assert!(cache > mb / 2, "mb={mb} cache={cache}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_budget() {
+        assert_eq!(split_managed(0), (0, 0));
+    }
+}

@@ -1,0 +1,281 @@
+//! Arena-backed skip list — the MemTable's core data structure (§3: "The
+//! MemTable, implemented as a skip list, is used to buffer writes").
+//!
+//! Single-writer, single-reader (each task owns its state backend), so no
+//! concurrency machinery: nodes live in a `Vec` arena addressed by `u32`
+//! indices, towers are per-node `Vec<u32>`.
+
+use crate::util::rng::Rng;
+
+const MAX_HEIGHT: usize = 12;
+const NIL: u32 = u32::MAX;
+
+struct Node {
+    key: Vec<u8>,
+    value: Vec<u8>,
+    /// next[level] — arena index of the successor at each level.
+    next: Vec<u32>,
+}
+
+/// Sorted byte-key → byte-value map with O(log n) insert/lookup and ordered
+/// iteration.
+pub struct SkipList {
+    arena: Vec<Node>,
+    /// head towers: next node at each level.
+    head: [u32; MAX_HEIGHT],
+    height: usize,
+    rng: Rng,
+    /// Approximate memory footprint of keys+values+towers, bytes.
+    bytes: usize,
+    len: usize,
+}
+
+impl SkipList {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            arena: Vec::new(),
+            head: [NIL; MAX_HEIGHT],
+            height: 1,
+            rng: Rng::new(seed),
+            bytes: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Approximate bytes used by entries (used for MemTable size accounting).
+    pub fn approx_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    fn random_height(&mut self) -> usize {
+        // p = 1/4 branching, like LevelDB.
+        let mut h = 1;
+        while h < MAX_HEIGHT && self.rng.gen_range(4) == 0 {
+            h += 1;
+        }
+        h
+    }
+
+    /// Find predecessors of `key` at every level. Returns `prev` where
+    /// `prev[l]` is the arena index (or NIL for head) of the last node at
+    /// level `l` with node.key < key.
+    fn find_prev(&self, key: &[u8]) -> [u32; MAX_HEIGHT] {
+        let mut prev = [NIL; MAX_HEIGHT];
+        let mut cur = NIL; // NIL means head
+        for level in (0..self.height).rev() {
+            loop {
+                let next = if cur == NIL {
+                    self.head[level]
+                } else {
+                    self.arena[cur as usize].next[level]
+                };
+                if next != NIL && self.arena[next as usize].key.as_slice() < key {
+                    cur = next;
+                } else {
+                    break;
+                }
+            }
+            prev[level] = cur;
+        }
+        prev
+    }
+
+    /// Insert or overwrite.
+    pub fn insert(&mut self, key: &[u8], value: &[u8]) {
+        let prev = self.find_prev(key);
+        // Check for exact match at level 0.
+        let at0 = if prev[0] == NIL {
+            self.head[0]
+        } else {
+            self.arena[prev[0] as usize].next[0]
+        };
+        if at0 != NIL && self.arena[at0 as usize].key == key {
+            let node = &mut self.arena[at0 as usize];
+            self.bytes = self.bytes - node.value.len() + value.len();
+            node.value = value.to_vec();
+            return;
+        }
+        let h = self.random_height();
+        if h > self.height {
+            self.height = h;
+        }
+        let idx = self.arena.len() as u32;
+        let mut next = vec![NIL; h];
+        #[allow(clippy::needless_range_loop)]
+        for level in 0..h {
+            let p = prev[level];
+            if p == NIL {
+                next[level] = self.head[level];
+                self.head[level] = idx;
+            } else {
+                let pn = &mut self.arena[p as usize].next;
+                next[level] = pn[level];
+                pn[level] = idx;
+            }
+        }
+        self.bytes += key.len() + value.len() + h * 4 + 48;
+        self.len += 1;
+        self.arena.push(Node {
+            key: key.to_vec(),
+            value: value.to_vec(),
+            next,
+        });
+    }
+
+    /// Point lookup.
+    pub fn get(&self, key: &[u8]) -> Option<&[u8]> {
+        let prev = self.find_prev(key);
+        let at0 = if prev[0] == NIL {
+            self.head[0]
+        } else {
+            self.arena[prev[0] as usize].next[0]
+        };
+        if at0 != NIL && self.arena[at0 as usize].key == key {
+            Some(&self.arena[at0 as usize].value)
+        } else {
+            None
+        }
+    }
+
+    /// Ordered iteration over all entries.
+    pub fn iter(&self) -> SkipIter<'_> {
+        SkipIter {
+            list: self,
+            cur: self.head[0],
+        }
+    }
+
+    /// Ordered iteration starting from the first key `>= from`.
+    pub fn iter_from(&self, from: &[u8]) -> SkipIter<'_> {
+        let prev = self.find_prev(from);
+        let start = if prev[0] == NIL {
+            self.head[0]
+        } else {
+            self.arena[prev[0] as usize].next[0]
+        };
+        SkipIter {
+            list: self,
+            cur: start,
+        }
+    }
+}
+
+/// Ordered entry iterator.
+pub struct SkipIter<'a> {
+    list: &'a SkipList,
+    cur: u32,
+}
+
+impl<'a> Iterator for SkipIter<'a> {
+    type Item = (&'a [u8], &'a [u8]);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.cur == NIL {
+            return None;
+        }
+        let node = &self.list.arena[self.cur as usize];
+        self.cur = node.next[0];
+        Some((&node.key, &node.value))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn insert_get_overwrite() {
+        let mut s = SkipList::new(1);
+        s.insert(b"b", b"2");
+        s.insert(b"a", b"1");
+        s.insert(b"c", b"3");
+        assert_eq!(s.get(b"a"), Some(b"1".as_ref()));
+        assert_eq!(s.get(b"b"), Some(b"2".as_ref()));
+        assert_eq!(s.get(b"zz"), None);
+        s.insert(b"b", b"22");
+        assert_eq!(s.get(b"b"), Some(b"22".as_ref()));
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn iteration_sorted() {
+        let mut s = SkipList::new(2);
+        for k in [5u8, 3, 9, 1, 7, 2, 8, 4, 6, 0] {
+            s.insert(&[k], &[k]);
+        }
+        let keys: Vec<u8> = s.iter().map(|(k, _)| k[0]).collect();
+        assert_eq!(keys, (0..10).collect::<Vec<u8>>());
+    }
+
+    #[test]
+    fn iter_from_seeks() {
+        let mut s = SkipList::new(3);
+        for k in 0..20u8 {
+            s.insert(&[k * 2], &[k]);
+        }
+        // Seek to a key between entries.
+        let first = s.iter_from(&[7]).next().unwrap();
+        assert_eq!(first.0, &[8]);
+        // Seek to an exact key.
+        let first = s.iter_from(&[10]).next().unwrap();
+        assert_eq!(first.0, &[10]);
+        // Seek past the end.
+        assert!(s.iter_from(&[200]).next().is_none());
+    }
+
+    #[test]
+    fn bytes_accounting_monotonic_under_inserts() {
+        let mut s = SkipList::new(4);
+        let mut last = 0;
+        for k in 0..100u32 {
+            s.insert(&k.to_be_bytes(), &[0u8; 100]);
+            assert!(s.approx_bytes() > last);
+            last = s.approx_bytes();
+        }
+        // Overwrite with smaller value shrinks accounting.
+        s.insert(&5u32.to_be_bytes(), &[0u8; 10]);
+        assert!(s.approx_bytes() < last);
+    }
+
+    #[test]
+    fn matches_btreemap_model() {
+        prop(50, |g| {
+            let mut s = SkipList::new(g.case_seed);
+            let mut model: BTreeMap<Vec<u8>, Vec<u8>> = BTreeMap::new();
+            let ops = g.usize(1..200);
+            for _ in 0..ops {
+                let key = g.bytes(1, 8);
+                if g.chance(0.7) {
+                    let value = g.bytes(0, 16);
+                    s.insert(&key, &value);
+                    model.insert(key, value);
+                } else {
+                    assert_eq!(
+                        s.get(&key),
+                        model.get(&key).map(|v| v.as_slice()),
+                        "get mismatch"
+                    );
+                }
+            }
+            // Full iteration matches the model.
+            let got: Vec<(Vec<u8>, Vec<u8>)> = s
+                .iter()
+                .map(|(k, v)| (k.to_vec(), v.to_vec()))
+                .collect();
+            let want: Vec<(Vec<u8>, Vec<u8>)> =
+                model.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+            assert_eq!(got, want, "iteration mismatch");
+            assert_eq!(s.len(), model.len());
+        });
+    }
+}

@@ -1,0 +1,380 @@
+//! Sorted String Tables: immutable on-disk files of sorted key/value pairs.
+//!
+//! File layout:
+//! ```text
+//! [data block]*            — see `block.rs`
+//! [index block]            — entry per data block: key = last key in the
+//!                            block, value = [offset: u64][len: u64]
+//! [bloom filter]           — over all keys in the table
+//! [footer: 40 bytes]       — index_off, index_len, bloom_off, bloom_len,
+//!                            magic (all u64 LE)
+//! ```
+
+use super::block::{Block, BlockBuilder};
+use super::bloom::Bloom;
+use anyhow::{bail, Context};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: u64 = 0x4A55_5354_494E_5353; // "JUSTINSS"
+
+/// Metadata for one data block, decoded from the index block.
+#[derive(Clone, Debug)]
+pub struct BlockMeta {
+    pub last_key: Vec<u8>,
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// Streaming SSTable writer. Feed sorted entries, then `finish()`.
+pub struct SsTableWriter {
+    file: File,
+    path: PathBuf,
+    builder: BlockBuilder,
+    metas: Vec<BlockMeta>,
+    keys: Vec<Vec<u8>>,
+    offset: u64,
+    bloom_bits_per_key: u32,
+    first_key: Option<Vec<u8>>,
+    last_key: Option<Vec<u8>>,
+    entry_count: u64,
+}
+
+impl SsTableWriter {
+    pub fn create(
+        path: &Path,
+        block_size: usize,
+        bloom_bits_per_key: u32,
+    ) -> anyhow::Result<Self> {
+        let file = File::create(path)
+            .with_context(|| format!("creating sstable {}", path.display()))?;
+        Ok(Self {
+            file,
+            path: path.to_path_buf(),
+            builder: BlockBuilder::new(block_size),
+            metas: Vec::new(),
+            keys: Vec::new(),
+            offset: 0,
+            bloom_bits_per_key,
+            first_key: None,
+            last_key: None,
+            entry_count: 0,
+        })
+    }
+
+    /// Append an entry; keys must arrive in strictly increasing order.
+    pub fn add(&mut self, key: &[u8], value: &[u8]) -> anyhow::Result<()> {
+        if let Some(last) = &self.last_key {
+            if key <= last.as_slice() {
+                bail!("sstable keys must be strictly increasing");
+            }
+        }
+        if self.first_key.is_none() {
+            self.first_key = Some(key.to_vec());
+        }
+        self.last_key = Some(key.to_vec());
+        self.keys.push(key.to_vec());
+        self.entry_count += 1;
+        self.builder.add(key, value);
+        if self.builder.is_full() {
+            self.flush_block()?;
+        }
+        Ok(())
+    }
+
+    fn flush_block(&mut self) -> anyhow::Result<()> {
+        if self.builder.is_empty() {
+            return Ok(());
+        }
+        let (bytes, _first, last) = self.builder.finish();
+        self.file.write_all(&bytes)?;
+        self.metas.push(BlockMeta {
+            last_key: last,
+            offset: self.offset,
+            len: bytes.len() as u64,
+        });
+        self.offset += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Finalize the table; returns the footprint on disk in bytes.
+    pub fn finish(mut self) -> anyhow::Result<TableHandle> {
+        self.flush_block()?;
+        if self.metas.is_empty() {
+            bail!("refusing to write an empty sstable");
+        }
+        // Index block: key = last key of the data block, value = offset/len.
+        let mut index = BlockBuilder::new(usize::MAX);
+        for meta in &self.metas {
+            let mut v = Vec::with_capacity(16);
+            v.extend_from_slice(&meta.offset.to_le_bytes());
+            v.extend_from_slice(&meta.len.to_le_bytes());
+            index.add(&meta.last_key, &v);
+        }
+        let (index_bytes, _, _) = index.finish();
+        let index_off = self.offset;
+        self.file.write_all(&index_bytes)?;
+
+        let bloom = Bloom::build(
+            self.keys.iter().map(|k| k.as_slice()),
+            self.bloom_bits_per_key,
+        );
+        let bloom_bytes = bloom.encode();
+        let bloom_off = index_off + index_bytes.len() as u64;
+        self.file.write_all(&bloom_bytes)?;
+
+        let mut footer = Vec::with_capacity(40);
+        footer.extend_from_slice(&index_off.to_le_bytes());
+        footer.extend_from_slice(&(index_bytes.len() as u64).to_le_bytes());
+        footer.extend_from_slice(&bloom_off.to_le_bytes());
+        footer.extend_from_slice(&(bloom_bytes.len() as u64).to_le_bytes());
+        footer.extend_from_slice(&MAGIC.to_le_bytes());
+        self.file.write_all(&footer)?;
+        self.file.sync_data().ok(); // best-effort durability
+        let file_size = bloom_off + bloom_bytes.len() as u64 + 40;
+
+        Ok(TableHandle {
+            path: self.path,
+            first_key: self.first_key.unwrap_or_default(),
+            last_key: self.last_key.unwrap_or_default(),
+            entry_count: self.entry_count,
+            file_size,
+        })
+    }
+}
+
+/// Lightweight descriptor of a finished table (kept in the level manifest).
+#[derive(Clone, Debug)]
+pub struct TableHandle {
+    pub path: PathBuf,
+    pub first_key: Vec<u8>,
+    pub last_key: Vec<u8>,
+    pub entry_count: u64,
+    pub file_size: u64,
+}
+
+impl TableHandle {
+    /// Does this table's key range overlap `[lo, hi]`?
+    pub fn overlaps(&self, lo: &[u8], hi: &[u8]) -> bool {
+        self.first_key.as_slice() <= hi && lo <= self.last_key.as_slice()
+    }
+
+    pub fn contains_key_range(&self, key: &[u8]) -> bool {
+        self.first_key.as_slice() <= key && key <= self.last_key.as_slice()
+    }
+}
+
+/// SSTable reader: loads footer, index, and bloom eagerly (these live in
+/// memory in RocksDB too); data blocks are read on demand (through the block
+/// cache at the `Db` layer).
+pub struct SsTableReader {
+    file: File,
+    pub metas: Vec<BlockMeta>,
+    bloom: Bloom,
+    pub handle: TableHandle,
+}
+
+impl SsTableReader {
+    pub fn open(handle: TableHandle) -> anyhow::Result<Self> {
+        let mut file = File::open(&handle.path)
+            .with_context(|| format!("opening sstable {}", handle.path.display()))?;
+        let file_len = file.metadata()?.len();
+        if file_len < 40 {
+            bail!("sstable {} too short", handle.path.display());
+        }
+        let mut footer = [0u8; 40];
+        file.seek(SeekFrom::End(-40))?;
+        file.read_exact(&mut footer)?;
+        let index_off = u64::from_le_bytes(footer[0..8].try_into().unwrap());
+        let index_len = u64::from_le_bytes(footer[8..16].try_into().unwrap());
+        let bloom_off = u64::from_le_bytes(footer[16..24].try_into().unwrap());
+        let bloom_len = u64::from_le_bytes(footer[24..32].try_into().unwrap());
+        let magic = u64::from_le_bytes(footer[32..40].try_into().unwrap());
+        if magic != MAGIC {
+            bail!("sstable {} bad magic", handle.path.display());
+        }
+        let mut index_bytes = vec![0u8; index_len as usize];
+        file.seek(SeekFrom::Start(index_off))?;
+        file.read_exact(&mut index_bytes)?;
+        let index_block = Block::decode(&index_bytes)?;
+        let metas = index_block
+            .entries()
+            .iter()
+            .map(|(k, v)| {
+                if v.len() != 16 {
+                    bail!("bad index entry");
+                }
+                Ok(BlockMeta {
+                    last_key: k.clone(),
+                    offset: u64::from_le_bytes(v[0..8].try_into().unwrap()),
+                    len: u64::from_le_bytes(v[8..16].try_into().unwrap()),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        let mut bloom_bytes = vec![0u8; bloom_len as usize];
+        file.seek(SeekFrom::Start(bloom_off))?;
+        file.read_exact(&mut bloom_bytes)?;
+        let bloom = Bloom::decode(&bloom_bytes).context("bad bloom filter")?;
+
+        Ok(Self {
+            file,
+            metas,
+            bloom,
+            handle,
+        })
+    }
+
+    /// Bloom check — false means definitely absent.
+    pub fn may_contain(&self, key: &[u8]) -> bool {
+        self.bloom.may_contain(key)
+    }
+
+    /// Index lookup: which data block could hold `key`?
+    pub fn find_block(&self, key: &[u8]) -> Option<usize> {
+        // First block whose last_key >= key.
+        let idx = self
+            .metas
+            .partition_point(|m| m.last_key.as_slice() < key);
+        (idx < self.metas.len()).then_some(idx)
+    }
+
+    /// Read + decode one data block from disk (no caching here).
+    pub fn read_block(&self, block_idx: usize) -> anyhow::Result<Block> {
+        let meta = &self.metas[block_idx];
+        let mut buf = vec![0u8; meta.len as usize];
+        // Positional read keeps `&self` (no seek state mutation visible).
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.read_exact_at(&mut buf, meta.offset)?;
+        }
+        #[cfg(not(unix))]
+        {
+            let mut f = self.file.try_clone()?;
+            f.seek(SeekFrom::Start(meta.offset))?;
+            f.read_exact(&mut buf)?;
+        }
+        Block::decode(&buf)
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.metas.len()
+    }
+
+    /// Sequential scan over all entries (used by compaction; bypasses cache).
+    pub fn scan(&self) -> anyhow::Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        let mut out = Vec::with_capacity(self.handle.entry_count as usize);
+        for i in 0..self.metas.len() {
+            let block = self.read_block(i)?;
+            out.extend(block.entries().iter().cloned());
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "justin-sst-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_table(path: &Path, n: u32) -> TableHandle {
+        let mut w = SsTableWriter::create(path, 512, 10).unwrap();
+        for i in 0..n {
+            w.add(&i.to_be_bytes(), format!("val-{i}").as_bytes())
+                .unwrap();
+        }
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let dir = tmpdir("rt");
+        let handle = write_table(&dir.join("t1.sst"), 1000);
+        assert_eq!(handle.entry_count, 1000);
+        let r = SsTableReader::open(handle).unwrap();
+        assert!(r.num_blocks() > 1, "expected multiple blocks");
+        for i in [0u32, 1, 499, 999] {
+            let bi = r.find_block(&i.to_be_bytes()).unwrap();
+            let block = r.read_block(bi).unwrap();
+            assert_eq!(
+                block.get(&i.to_be_bytes()),
+                Some(format!("val-{i}").as_bytes()),
+                "key {i}"
+            );
+        }
+        // Absent key beyond the last: no block.
+        assert!(r.find_block(&2000u32.to_be_bytes()).is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bloom_filters_absent_keys() {
+        let dir = tmpdir("bloom");
+        let handle = write_table(&dir.join("t2.sst"), 1000);
+        let r = SsTableReader::open(handle).unwrap();
+        for i in 0..1000u32 {
+            assert!(r.may_contain(&i.to_be_bytes()));
+        }
+        let fp = (10_000u32..11_000)
+            .filter(|i| r.may_contain(&i.to_be_bytes()))
+            .count();
+        assert!(fp < 100, "fp={fp}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn scan_returns_all_sorted() {
+        let dir = tmpdir("scan");
+        let handle = write_table(&dir.join("t3.sst"), 500);
+        let r = SsTableReader::open(handle).unwrap();
+        let all = r.scan().unwrap();
+        assert_eq!(all.len(), 500);
+        assert!(all.windows(2).all(|w| w[0].0 < w[1].0));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_unsorted_input() {
+        let dir = tmpdir("unsorted");
+        let mut w = SsTableWriter::create(&dir.join("t4.sst"), 512, 10).unwrap();
+        w.add(b"b", b"1").unwrap();
+        assert!(w.add(b"a", b"2").is_err());
+        assert!(w.add(b"b", b"dup").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn overlap_checks() {
+        let h = TableHandle {
+            path: PathBuf::new(),
+            first_key: b"d".to_vec(),
+            last_key: b"m".to_vec(),
+            entry_count: 0,
+            file_size: 0,
+        };
+        assert!(h.overlaps(b"a", b"e"));
+        assert!(h.overlaps(b"e", b"f"));
+        assert!(h.overlaps(b"m", b"z"));
+        assert!(!h.overlaps(b"a", b"c"));
+        assert!(!h.overlaps(b"n", b"z"));
+    }
+
+    #[test]
+    fn empty_table_rejected() {
+        let dir = tmpdir("empty");
+        let w = SsTableWriter::create(&dir.join("t5.sst"), 512, 10).unwrap();
+        assert!(w.finish().is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,180 @@
+//! State backends for stateful operators.
+//!
+//! Two implementations, mirroring Flink:
+//! * [`HeapBackend`] — in-memory hash map ("for testing", as the paper
+//!   notes); no storage metrics, so operators on it look stateless to the
+//!   auto-scaler only if they truly record nothing.
+//! * [`lsm::Db`] via [`LsmBackend`] — the production path ("rockslite"),
+//!   whose cache hit rate θ and access latency τ drive Justin's decisions.
+//!
+//! Keys are namespaced by key group (`u16` big-endian prefix) so savepoints
+//! can export/import state per key group during rescaling, like Flink.
+
+pub mod lsm;
+
+use anyhow::Result;
+
+/// Key/value state interface used by stateful operators.
+pub trait StateBackend: Send {
+    fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>>;
+    fn put(&mut self, key: &[u8], value: &[u8]) -> Result<()>;
+    fn delete(&mut self, key: &[u8]) -> Result<()>;
+    /// All live entries with the given prefix, sorted by key.
+    fn scan_prefix(&mut self, prefix: &[u8]) -> Result<Vec<(Vec<u8>, Vec<u8>)>>;
+    /// Approximate state footprint in bytes.
+    fn size_bytes(&self) -> u64;
+    /// Does this backend report storage metrics (θ/τ)? Heap does not.
+    fn has_storage_metrics(&self) -> bool {
+        false
+    }
+    /// Flush any buffered writes (pre-savepoint barrier).
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// In-memory state backend (Flink's hashmap backend).
+#[derive(Default)]
+pub struct HeapBackend {
+    map: std::collections::BTreeMap<Vec<u8>, Vec<u8>>,
+    bytes: u64,
+}
+
+impl HeapBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl StateBackend for HeapBackend {
+    fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        Ok(self.map.get(key).cloned())
+    }
+
+    fn put(&mut self, key: &[u8], value: &[u8]) -> Result<()> {
+        if let Some(old) = self.map.insert(key.to_vec(), value.to_vec()) {
+            self.bytes = self.bytes - old.len() as u64 + value.len() as u64;
+        } else {
+            self.bytes += (key.len() + value.len() + 32) as u64;
+        }
+        Ok(())
+    }
+
+    fn delete(&mut self, key: &[u8]) -> Result<()> {
+        if let Some(old) = self.map.remove(key) {
+            self.bytes = self
+                .bytes
+                .saturating_sub((key.len() + old.len() + 32) as u64);
+        }
+        Ok(())
+    }
+
+    fn scan_prefix(&mut self, prefix: &[u8]) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        Ok(self
+            .map
+            .range(prefix.to_vec()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect())
+    }
+
+    fn size_bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+/// LSM-backed state (the RocksDB-equivalent production path).
+pub struct LsmBackend {
+    pub db: lsm::Db,
+}
+
+impl LsmBackend {
+    pub fn new(db: lsm::Db) -> Self {
+        Self { db }
+    }
+}
+
+impl StateBackend for LsmBackend {
+    fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        self.db.get(key)
+    }
+
+    fn put(&mut self, key: &[u8], value: &[u8]) -> Result<()> {
+        self.db.put(key, value)
+    }
+
+    fn delete(&mut self, key: &[u8]) -> Result<()> {
+        self.db.delete(key)
+    }
+
+    fn scan_prefix(&mut self, prefix: &[u8]) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        self.db.scan_prefix(prefix)
+    }
+
+    fn size_bytes(&self) -> u64 {
+        self.db.total_bytes()
+    }
+
+    fn has_storage_metrics(&self) -> bool {
+        true
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.db.flush()
+    }
+}
+
+/// Compose a state key: `[key_group: u16 BE][user key]`.
+pub fn state_key(key_group: u16, user_key: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(2 + user_key.len());
+    out.extend_from_slice(&key_group.to_be_bytes());
+    out.extend_from_slice(user_key);
+    out
+}
+
+/// Split a state key into `(key_group, user_key)`.
+pub fn split_state_key(state_key: &[u8]) -> Option<(u16, &[u8])> {
+    if state_key.len() < 2 {
+        return None;
+    }
+    let group = u16::from_be_bytes([state_key[0], state_key[1]]);
+    Some((group, &state_key[2..]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_backend_basics() {
+        let mut b = HeapBackend::new();
+        b.put(b"k", b"v1").unwrap();
+        b.put(b"k", b"v2").unwrap();
+        assert_eq!(b.get(b"k").unwrap(), Some(b"v2".to_vec()));
+        assert!(b.size_bytes() > 0);
+        b.delete(b"k").unwrap();
+        assert_eq!(b.get(b"k").unwrap(), None);
+        assert!(!b.has_storage_metrics());
+    }
+
+    #[test]
+    fn heap_scan_prefix() {
+        let mut b = HeapBackend::new();
+        for g in 0..3u16 {
+            for i in 0..10u8 {
+                b.put(&state_key(g, &[i]), &[g as u8]).unwrap();
+            }
+        }
+        let g1 = b.scan_prefix(&1u16.to_be_bytes()).unwrap();
+        assert_eq!(g1.len(), 10);
+    }
+
+    #[test]
+    fn state_key_roundtrip() {
+        let sk = state_key(300, b"user");
+        let (g, k) = split_state_key(&sk).unwrap();
+        assert_eq!(g, 300);
+        assert_eq!(k, b"user");
+        assert!(split_state_key(&[1]).is_none());
+    }
+}

@@ -1,0 +1,122 @@
+//! Minimal CLI argument parser (no `clap` in the offline cache).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// `--key value` / `--key=value` pairs (last occurrence wins).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (used by tests).
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option lookup with default; panics with a clear message on a
+    /// malformed value (CLI misuse should fail loudly).
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|_| panic!("invalid value for --{name}: {s:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--rate", "1000", "--query=q8"]);
+        assert_eq!(a.get("rate"), Some("1000"));
+        assert_eq!(a.get("query"), Some("q8"));
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        // NOTE: space-separated values bind greedily (`--verbose q5` would
+        // parse as verbose=q5), so bare flags go last or use `=` for values.
+        let a = parse(&["run", "q5", "--verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run", "q5"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b"]);
+        assert!(a.flag("a") && a.flag("b"));
+    }
+
+    #[test]
+    fn typed_parse_and_default() {
+        let a = parse(&["--n", "42"]);
+        assert_eq!(a.get_parse("n", 0u64), 42);
+        assert_eq!(a.get_parse("missing", 7u64), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value")]
+    fn typed_parse_bad_value_panics() {
+        let a = parse(&["--n", "xyz"]);
+        let _: u64 = a.get_parse("n", 0u64);
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let a = parse(&["--n=1", "--n=2"]);
+        assert_eq!(a.get("n"), Some("2"));
+    }
+}

@@ -1,0 +1,154 @@
+//! Exponentially-weighted moving averages and simple windowed means, used by
+//! the metric aggregation pipeline (§5: 5 s samples averaged over 2-minute
+//! decision windows).
+
+/// Classic EWMA with smoothing factor `alpha` (weight of the newest sample).
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self { alpha, value: None }
+    }
+
+    /// EWMA whose weight halves every `half_life` samples.
+    pub fn with_half_life(half_life: f64) -> Self {
+        Self::new(1.0 - 0.5f64.powf(1.0 / half_life.max(1e-9)))
+    }
+
+    pub fn update(&mut self, sample: f64) -> f64 {
+        let v = match self.value {
+            None => sample,
+            Some(prev) => prev + self.alpha * (sample - prev),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+
+    pub fn is_initialized(&self) -> bool {
+        self.value.is_some()
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// Fixed-capacity sliding-window mean over the most recent `cap` samples.
+#[derive(Clone, Debug)]
+pub struct WindowMean {
+    buf: Vec<f64>,
+    cap: usize,
+    next: usize,
+    filled: bool,
+}
+
+impl WindowMean {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            buf: Vec::with_capacity(cap),
+            cap,
+            next: 0,
+            filled: false,
+        }
+    }
+
+    pub fn push(&mut self, sample: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(sample);
+            if self.buf.len() == self.cap {
+                self.filled = true;
+            }
+        } else {
+            self.buf[self.next] = sample;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            0.0
+        } else {
+            self.buf.iter().sum::<f64>() / self.buf.len() as f64
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.filled
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.next = 0;
+        self.filled = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_first_sample_is_value() {
+        let mut e = Ewma::new(0.2);
+        assert_eq!(e.update(10.0), 10.0);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        e.update(0.0);
+        for _ in 0..30 {
+            e.update(100.0);
+        }
+        assert!((e.get() - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ewma_half_life() {
+        let mut e = Ewma::with_half_life(1.0);
+        e.update(0.0);
+        e.update(100.0);
+        assert!((e.get() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_mean_basic() {
+        let mut w = WindowMean::new(3);
+        w.push(1.0);
+        w.push(2.0);
+        assert_eq!(w.mean(), 1.5);
+        assert!(!w.is_full());
+        w.push(3.0);
+        assert!(w.is_full());
+        assert_eq!(w.mean(), 2.0);
+        w.push(10.0); // evicts 1.0
+        assert_eq!(w.mean(), 5.0);
+    }
+
+    #[test]
+    fn window_mean_wraps_in_order() {
+        let mut w = WindowMean::new(2);
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            w.push(v);
+        }
+        assert_eq!(w.mean(), 4.5); // last two: 4, 5
+    }
+}

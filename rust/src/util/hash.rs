@@ -1,0 +1,128 @@
+//! Hashing: FxHash (rustc's multiply-xor hash) for hot-path hash maps and
+//! key-group assignment, plus a 64-bit FNV-1a for stable on-disk hashing.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// FxHash — the rustc hash. Extremely fast for small keys.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, i: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ i).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add_to_hash(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add_to_hash(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+/// `HashMap` build-hasher alias using FxHash.
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+/// Fast `HashMap` for hot paths.
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+/// Fast `HashSet` for hot paths.
+pub type FxHashSet<K> = std::collections::HashSet<K, FxBuildHasher>;
+
+/// Hash a single u64 key (for key-group assignment).
+#[inline]
+pub fn hash_u64(key: u64) -> u64 {
+    let mut h = FxHasher::default();
+    h.write_u64(key);
+    h.finish()
+}
+
+/// Hash a byte slice with FNV-1a (stable across platforms/versions; used for
+/// on-disk formats where FxHash's rustc-version freedom would be a liability).
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut hash: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x100000001b3);
+    }
+    hash
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fx_map_works() {
+        let mut m: FxHashMap<u64, u64> = FxHashMap::default();
+        for i in 0..1000 {
+            m.insert(i, i * 2);
+        }
+        assert_eq!(m.get(&500), Some(&1000));
+        assert_eq!(m.len(), 1000);
+    }
+
+    #[test]
+    fn hash_u64_spreads() {
+        // All 1024 consecutive keys should not collide in the low 10 bits
+        // more than a loose bound (sanity, not a strict avalanche test).
+        let mut buckets = [0u32; 16];
+        for i in 0..1024u64 {
+            buckets[(hash_u64(i) % 16) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!(b > 16, "bucket too empty: {buckets:?}");
+        }
+    }
+
+    #[test]
+    fn fnv_stable_vector() {
+        // Known FNV-1a test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fx_bytes_tail_handling() {
+        // Differing only in the tail chunk must differ.
+        let mut h1 = FxHasher::default();
+        h1.write(b"0123456789");
+        let mut h2 = FxHasher::default();
+        h2.write(b"0123456788");
+        assert_ne!(h1.finish(), h2.finish());
+    }
+}

@@ -1,0 +1,273 @@
+//! Log-bucketed latency histogram (HdrHistogram-flavoured, hand-rolled).
+//!
+//! Values are recorded in nanoseconds-scale `u64`s into buckets with
+//! 2^-5 relative precision (32 sub-buckets per octave), giving ~3%
+//! quantile error over the full `u64` range with a fixed 2 KiB footprint.
+
+const SUB_BITS: u32 = 5;
+const SUB: usize = 1 << SUB_BITS; // 32 sub-buckets per power of two
+const OCTAVES: usize = 64;
+
+/// Fixed-footprint log-bucketed histogram.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>, // OCTAVES * SUB
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; OCTAVES * SUB],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn index(value: u64) -> usize {
+        if value < SUB as u64 {
+            return value as usize;
+        }
+        let octave = 63 - value.leading_zeros() as usize;
+        let shift = octave as u32 - SUB_BITS;
+        let sub = ((value >> shift) as usize) & (SUB - 1);
+        (octave - SUB_BITS as usize + 1) * SUB + sub
+    }
+
+    /// Representative (lower-bound) value for a bucket index.
+    fn bucket_low(idx: usize) -> u64 {
+        let octave = idx / SUB;
+        let sub = (idx % SUB) as u64;
+        if octave == 0 {
+            return sub;
+        }
+        let shift = octave as u32 + SUB_BITS - 1;
+        (1u64 << shift) | (sub << (shift - SUB_BITS))
+    }
+
+    #[inline]
+    pub fn record(&mut self, value: u64) {
+        self.counts[Self::index(value)] += 1;
+        self.total += 1;
+        self.sum += value as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    #[inline]
+    pub fn record_n(&mut self, value: u64, n: u64) {
+        self.counts[Self::index(value)] += n;
+        self.total += n;
+        self.sum += value as u128 * n as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile in `[0,1]`; returns a bucket lower-bound (≤3% relative error).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0)) * self.total as f64).ceil() as u64;
+        let rank = rank.max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_low(i).max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Reset all counts.
+    pub fn clear(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
+        self.sum = 0;
+        self.min = u64::MAX;
+        self.max = 0;
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Histogram{{n={} mean={:.1} p50={} p99={} max={}}}",
+            self.total,
+            self.mean(),
+            self.p50(),
+            self.p99(),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn single_value() {
+        let mut h = Histogram::new();
+        h.record(1000);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min(), 1000);
+        assert_eq!(h.max(), 1000);
+        let p = h.p50() as f64;
+        assert!((p - 1000.0).abs() / 1000.0 < 0.05, "p50={p}");
+    }
+
+    #[test]
+    fn small_values_exact() {
+        let mut h = Histogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(1.0), 31);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn quantiles_within_relative_error() {
+        let mut h = Histogram::new();
+        let mut r = Rng::new(1);
+        let mut vals: Vec<u64> = (0..100_000).map(|_| r.range(100, 10_000_000)).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        for q in [0.5, 0.9, 0.99] {
+            let exact = vals[((q * vals.len() as f64) as usize).min(vals.len() - 1)] as f64;
+            let est = h.quantile(q) as f64;
+            assert!(
+                (est - exact).abs() / exact < 0.05,
+                "q={q} est={est} exact={exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.mean(), 20.0);
+    }
+
+    #[test]
+    fn merge_matches_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        let mut r = Rng::new(2);
+        for _ in 0..1000 {
+            let v = r.range(1, 1_000_000);
+            a.record(v);
+            c.record(v);
+        }
+        for _ in 0..1000 {
+            let v = r.range(1, 1_000_000);
+            b.record(v);
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.p50(), c.p50());
+        assert_eq!(a.max(), c.max());
+    }
+
+    #[test]
+    fn record_n_equals_loop() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record_n(500, 10);
+        for _ in 0..10 {
+            b.record(500);
+        }
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.mean(), b.mean());
+        assert_eq!(a.p99(), b.p99());
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut h = Histogram::new();
+        h.record(42);
+        h.clear();
+        assert!(h.is_empty());
+        assert_eq!(h.max(), 0);
+    }
+}

@@ -1,0 +1,63 @@
+//! Small self-contained substrates: PRNG, hashing, histograms, EWMA, CLI
+//! parsing, JSON. The offline crate cache only carries the `xla` closure, so
+//! these are hand-rolled instead of pulling `rand`/`serde`/`clap`.
+
+pub mod cli;
+pub mod ewma;
+pub mod hash;
+pub mod histogram;
+pub mod json;
+pub mod rng;
+
+/// Round `x` up to the next power of two (saturating at `u64::MAX/2 + 1`).
+pub fn next_pow2(x: u64) -> u64 {
+    x.checked_next_power_of_two().unwrap_or(1 << 63)
+}
+
+/// Largest power of two `<= x` (0 maps to 0).
+pub fn prev_pow2(x: u64) -> u64 {
+    if x == 0 {
+        0
+    } else {
+        1 << (63 - x.leading_zeros())
+    }
+}
+
+/// Integer ceiling division.
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Format a byte count as a human string (MiB granularity used in the paper).
+pub fn fmt_mb(bytes: u64) -> String {
+    format!("{:.0} MB", bytes as f64 / (1024.0 * 1024.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_helpers() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(64), 64);
+        assert_eq!(prev_pow2(0), 0);
+        assert_eq!(prev_pow2(1), 1);
+        assert_eq!(prev_pow2(100), 64);
+        assert_eq!(prev_pow2(64), 64);
+    }
+
+    #[test]
+    fn div_ceil_exact_and_rounding() {
+        assert_eq!(div_ceil(10, 5), 2);
+        assert_eq!(div_ceil(11, 5), 3);
+        assert_eq!(div_ceil(0, 5), 0);
+    }
+
+    #[test]
+    fn fmt_mb_rounds() {
+        assert_eq!(fmt_mb(64 * 1024 * 1024), "64 MB");
+    }
+}

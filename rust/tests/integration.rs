@@ -1,0 +1,234 @@
+//! Integration tests over the public API: whole-system behaviours that
+//! cross module boundaries (engine ↔ state ↔ metrics ↔ policy ↔ placement).
+
+use justin::config::{Config, ScalerConfig};
+use justin::engine::{JobManager, Savepoint};
+use justin::graph::{OpScaling, ScalingAssignment};
+use justin::metrics::{names, Registry, Sample};
+use justin::nexmark::queries::{build, QuerySpec};
+use justin::placement::{Cluster, PodSpec};
+use justin::scaler::{Ds2, Justin, Policy};
+use justin::sim::profiles::query_profile;
+use justin::sim::runner::{resources, run_autoscaling};
+
+fn counter(reg: &Registry, op: &str, name: &str) -> u64 {
+    reg.snapshot()
+        .iter()
+        .filter_map(|(id, s)| {
+            (id.name == name && id.label("op") == Some(op)).then(|| match s {
+                Sample::Counter(v) => *v,
+                _ => 0,
+            })
+        })
+        .sum()
+}
+
+fn engine_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.engine.batch_size = 64;
+    cfg.engine.flush_interval_ms = 5;
+    cfg
+}
+
+/// Event conservation through a rescale: run q5 bounded, savepoint
+/// mid-stream, restore at a different parallelism and memory level, and
+/// check the window counts that fire downstream account for every bid.
+#[test]
+fn q5_rescale_conserves_window_counts() {
+    let spec = QuerySpec {
+        rate: 100_000.0,
+        bounded: Some(30_000),
+        seed: 11,
+        source_parallelism: 2,
+        window_ms: 20,
+    };
+    // Phase 1: run to completion at p=1 (windows near the stream tail stay
+    // open and land in the savepoint).
+    let job = build("q5", spec).unwrap();
+    let mut jm = JobManager::new(engine_cfg());
+    let reg1 = Registry::new();
+    let a1 = ScalingAssignment::initial(&job.graph);
+    let r1 = jm.deploy(&job, &a1, &reg1, None).unwrap();
+    let sp: Savepoint = r1.wait_drained().unwrap();
+    let bids_total = 30_000 * 46 / 50; // Nexmark mix: 46 bids per 50 events
+    let fired1: u64 = counter(&reg1, "hot_items", names::RECORDS_OUT);
+    assert!(fired1 > 0);
+
+    // Phase 2: restore at p=3, level 1. The source regenerates from seq 0,
+    // so run it long enough that the event-time watermark passes the open
+    // windows restored from phase 1 (~300 ms of event time).
+    let spec2 = QuerySpec {
+        bounded: Some(60_000),
+        ..spec
+    };
+    let job2 = build("q5", spec2).unwrap();
+    let mut a2 = ScalingAssignment::initial(&job2.graph);
+    a2.set("hot_items", OpScaling::new(3, Some(1)));
+    let reg2 = Registry::new();
+    let r2 = jm.deploy(&job2, &a2, &reg2, Some(&sp)).unwrap();
+    let _ = r2.wait_drained().unwrap();
+    let fired2: u64 = counter(&reg2, "hot_items", names::RECORDS_OUT);
+    assert!(fired2 > 0, "restored windows must fire after rescale");
+
+    // Conservation: every fired Pair's value sums to ≤ total bids ×
+    // window-multiplicity (sliding size/slide = 5); and with the final
+    // watermark at u64-ish max from the drain run, everything fired.
+    // We can't see Pair values at the sink, but records_out of hot_items
+    // counts (key, window) firings; sanity-bound it.
+    let max_windows = (bids_total + 60_000 * 46 / 50) * 5;
+    assert!(
+        fired1 + fired2 <= max_windows as u64,
+        "fired {fired1}+{fired2} vs bound {max_windows}"
+    );
+}
+
+/// The policy layer and the placement layer agree end-to-end in the sim:
+/// every final assignment both policies produce is actually placeable on
+/// the paper's cluster.
+#[test]
+fn sim_final_configs_are_placeable() {
+    let cfg = Config::default();
+    let cluster = Cluster::new(PodSpec::paper_default(), 40);
+    for q in ["q1", "q3", "q5", "q8", "q11"] {
+        let profile = query_profile(q).unwrap();
+        for policy_is_justin in [false, true] {
+            let mut policy: Box<dyn Policy> = if policy_is_justin {
+                Box::new(Justin::new(cfg.scaler.clone()))
+            } else {
+                Box::new(Ds2::new(cfg.scaler.clone()))
+            };
+            let mut c = cfg.clone();
+            c.sim.duration_s = 1800;
+            let trace = run_autoscaling(&profile, policy.as_mut(), &c);
+            // Convert the final assignment into slot requests and pack.
+            let reqs: Vec<justin::placement::SlotRequest> = profile
+                .ops
+                .iter()
+                .filter(|o| o.kind != justin::graph::OpKind::Source)
+                .flat_map(|o| {
+                    let s = trace.final_assignment.get(&o.name);
+                    let managed = match s.memory_level {
+                        None => 0,
+                        Some(l) => 158u64 << l,
+                    };
+                    (0..s.parallelism).map(move |i| justin::placement::SlotRequest {
+                        op_name: o.name.clone(),
+                        subtask: i,
+                        cores: 1,
+                        managed_mb: managed,
+                    })
+                })
+                .collect();
+            let placement = cluster
+                .place(&reqs)
+                .unwrap_or_else(|e| panic!("{q} ({policy_is_justin}): {e}"));
+            let (cores, _) = resources(&profile, &trace.final_assignment);
+            assert_eq!(placement.total_cores(), cores);
+        }
+    }
+}
+
+/// Determinism: identical seeds give bit-identical autoscaling traces.
+#[test]
+fn sim_traces_deterministic() {
+    let mut cfg = Config::default();
+    cfg.sim.duration_s = 900;
+    cfg.sim.seed = 42;
+    let profile = query_profile("q11").unwrap();
+    let run = |cfg: &Config| {
+        let mut p = Justin::new(cfg.scaler.clone());
+        run_autoscaling(&profile, &mut p, cfg)
+    };
+    let a = run(&cfg);
+    let b = run(&cfg);
+    assert_eq!(a.final_assignment, b.final_assignment);
+    assert_eq!(a.reconfigs.len(), b.reconfigs.len());
+    let ra: Vec<f64> = a.points.iter().map(|p| p.rate).collect();
+    let rb: Vec<f64> = b.points.iter().map(|p| p.rate).collect();
+    assert_eq!(ra, rb);
+    // Different seed → different noise, same qualitative outcome.
+    let mut cfg2 = cfg.clone();
+    cfg2.sim.seed = 43;
+    let c = run(&cfg2);
+    assert_eq!(
+        a.final_assignment.parallelism("sessions"),
+        c.final_assignment.parallelism("sessions"),
+        "outcome robust to noise seed"
+    );
+}
+
+/// Justin with storage metrics disabled degenerates to DS2 + stateless
+/// stripping (ablation guard: θ/τ are what create the hybrid behaviour).
+#[test]
+fn justin_without_storage_signals_matches_ds2_parallelism() {
+    let cfg = ScalerConfig::default();
+    let profile = query_profile("q11").unwrap();
+    let meta = profile.meta();
+    // Build a window set where the stateful op reports no storage metrics.
+    let mut windows = std::collections::BTreeMap::new();
+    use justin::metrics::window::OperatorWindow;
+    let mk = |busy: f64, rate: f64, tr: f64| OperatorWindow {
+        samples: 24,
+        busyness: busy,
+        backpressure: 0.2,
+        observed_rate: rate,
+        true_rate: tr,
+        output_rate: rate,
+        cache_hit_rate: None,
+        access_latency_us: None,
+        state_size_bytes: 0,
+    };
+    windows.insert("source".into(), mk(0.5, 100_000.0, 200_000.0));
+    windows.insert("sessions".into(), mk(0.95, 100_000.0, 50_000.0));
+    windows.insert("sink".into(), mk(0.01, 10_000.0, 1e7));
+    let current = {
+        let mut a = ScalingAssignment::default();
+        for op in &profile.ops {
+            a.set(&op.name, OpScaling::new(1, Some(0)));
+        }
+        a
+    };
+    let input = justin::scaler::PolicyInput {
+        meta: &meta,
+        windows: &windows,
+        current: &current,
+    };
+    let mut ds2 = Ds2::new(cfg.clone());
+    let mut justin = Justin::new(cfg);
+    let d = ds2.decide(&input);
+    let j = justin.decide(&input);
+    assert_eq!(
+        d.parallelism("sessions"),
+        j.parallelism("sessions"),
+        "no θ/τ ⇒ Justin falls back to DS2's horizontal plan"
+    );
+    // …but the metrics-silent operator is treated as stateless and stripped.
+    assert_eq!(j.get("sessions").memory_level, None);
+}
+
+/// Config round-trip: an experiment config file drives the sim.
+#[test]
+fn config_file_drives_simulation() {
+    let toml = r#"
+        [scaler]
+        policy = "ds2"
+        max_parallelism = 8
+
+        [sim]
+        duration_s = 600
+        seed = 7
+    "#;
+    let cfg = justin::config::from_str(toml).unwrap();
+    assert_eq!(cfg.scaler.max_parallelism, 8);
+    let profile = query_profile("q1").unwrap();
+    let mut p = Ds2::new(cfg.scaler.clone());
+    let trace = run_autoscaling(&profile, &mut p, &cfg);
+    assert!(trace.points.len() >= 100);
+    assert!(
+        trace
+            .final_assignment
+            .parallelism("currency_map")
+            <= 8,
+        "max_parallelism respected"
+    );
+}
