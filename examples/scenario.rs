@@ -1,0 +1,103 @@
+//! Time-varying workload scenarios: drive a Nexmark query through a spike
+//! and a diurnal cycle under DS2 and Justin, and write the traces (offered
+//! vs achieved rate, cores, memory over virtual time) to
+//! `results/scenario.json` for plotting.
+//!
+//! ```sh
+//! cargo run --release --example scenario [-- q11] [--seed N]
+//! ```
+
+use justin::config::Config;
+use justin::scaler::{Ds2, Justin, Policy};
+use justin::sim::profiles::{query_profile, RatePattern};
+use justin::sim::runner::{run_autoscaling, AutoscaleTrace};
+use justin::util::cli::Args;
+use justin::util::json::Json;
+
+fn trace_json(t: &AutoscaleTrace) -> Json {
+    Json::obj(vec![
+        ("policy", Json::str(&t.policy)),
+        ("steps", Json::num(t.steps() as f64)),
+        (
+            "converged_s",
+            t.converged_at_s.map(Json::num).unwrap_or(Json::Null),
+        ),
+        ("core_s", Json::num(t.core_seconds())),
+        ("memory_mb_s", Json::num(t.memory_mb_seconds())),
+        (
+            "points",
+            Json::arr(t.points.iter().step_by(6).map(|p| {
+                Json::arr([
+                    Json::num(p.t_s),
+                    Json::num(p.offered),
+                    Json::num(p.rate),
+                    Json::num(p.cores as f64),
+                    Json::num(p.memory_mb as f64),
+                ])
+            })),
+        ),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let mut cfg = Config::default();
+    cfg.sim.seed = args.get_parse("seed", cfg.sim.seed);
+    cfg.sim.duration_s = 2700;
+    let query = args.positional.first().map(|s| s.as_str()).unwrap_or("q11");
+
+    let patterns = [
+        (
+            "spike",
+            RatePattern::Spike {
+                start_s: 900.0,
+                end_s: 1800.0,
+                base: 0.2,
+                peak: 1.0,
+            },
+        ),
+        (
+            "diurnal",
+            RatePattern::Diurnal {
+                period_s: 1800.0,
+                amplitude: 0.5,
+            },
+        ),
+    ];
+
+    let mut out = Vec::new();
+    for (name, pattern) in patterns {
+        println!("\n=== {query} × {name} ===");
+        let mut runs = Vec::new();
+        for is_justin in [false, true] {
+            let profile = query_profile(query)?.with_pattern(pattern.clone());
+            let mut policy: Box<dyn Policy> = if is_justin {
+                Box::new(Justin::new(cfg.scaler.clone()))
+            } else {
+                Box::new(Ds2::new(cfg.scaler.clone()))
+            };
+            let trace = run_autoscaling(&profile, policy.as_mut(), &cfg);
+            println!(
+                "{:<7} steps={} converged={} cpu={:.0} core·s mem={:.0} MB·s",
+                trace.policy,
+                trace.steps(),
+                trace
+                    .converged_at_s
+                    .map(|t| format!("{t:.0}s"))
+                    .unwrap_or_else(|| "never".into()),
+                trace.core_seconds(),
+                trace.memory_mb_seconds(),
+            );
+            runs.push(trace_json(&trace));
+        }
+        out.push(Json::obj(vec![
+            ("query", Json::str(query)),
+            ("scenario", Json::str(name)),
+            ("runs", Json::arr(runs)),
+        ]));
+    }
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/scenario.json", Json::arr(out).to_pretty())?;
+    println!("\nwrote results/scenario.json");
+    Ok(())
+}

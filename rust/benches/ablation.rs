@@ -21,7 +21,11 @@ fn run_with(query: &str, tweak: impl FnOnce(&mut Config)) -> (usize, u32, u64, b
     let profile = query_profile(query).unwrap();
     let mut policy = Justin::new(cfg.scaler.clone());
     let trace = run_autoscaling(&profile, &mut policy, &cfg);
-    let (cores, mem) = resources(&profile, &trace.final_assignment);
+    let (cores, mem) = resources(
+        &profile,
+        &trace.final_assignment,
+        cfg.cluster.managed_mb_per_slot,
+    );
     (
         trace.steps(),
         cores,

@@ -163,6 +163,8 @@ pub struct Fig5Summary {
     pub justin_resources: (u32, u64),
     pub cpu_saving: f64,
     pub mem_saving: f64,
+    /// Level-0 managed memory per slot used for the accounting, MB.
+    pub managed_mb_per_slot: u64,
 }
 
 /// Run both policies on `query` and summarize (the Fig. 5 experiment).
@@ -177,8 +179,9 @@ pub fn fig5_compare(query: &str, cfg: &Config) -> crate::Result<Fig5Summary> {
     let mut justin = Justin::new(cfg.scaler.clone());
     let t_ds2 = run_autoscaling(&profile, &mut ds2, cfg);
     let t_justin = run_autoscaling(&profile, &mut justin, cfg);
-    let r_d = resources(&profile, &t_ds2.final_assignment);
-    let r_j = resources(&profile, &t_justin.final_assignment);
+    let base = cfg.cluster.managed_mb_per_slot;
+    let r_d = resources(&profile, &t_ds2.final_assignment, base);
+    let r_j = resources(&profile, &t_justin.final_assignment, base);
     Ok(Fig5Summary {
         query: query.to_string(),
         target_rate: profile.target_rate,
@@ -188,6 +191,7 @@ pub fn fig5_compare(query: &str, cfg: &Config) -> crate::Result<Fig5Summary> {
         justin: t_justin,
         ds2_resources: r_d,
         justin_resources: r_j,
+        managed_mb_per_slot: base,
     })
 }
 
@@ -219,7 +223,7 @@ impl Fig5Summary {
                 final_rate,
                 res.0,
                 res.1,
-                describe_assignment(trace),
+                describe_assignment(trace, self.managed_mb_per_slot),
             );
             if verbose {
                 for p in trace.points.iter().step_by(6) {
@@ -275,7 +279,7 @@ impl Fig5Summary {
     }
 }
 
-fn describe_assignment(trace: &AutoscaleTrace) -> String {
+fn describe_assignment(trace: &AutoscaleTrace, managed_mb_per_slot: u64) -> String {
     trace
         .final_assignment
         .ops
@@ -284,7 +288,7 @@ fn describe_assignment(trace: &AutoscaleTrace) -> String {
         .map(|(name, s)| {
             let mem = match s.memory_level {
                 None => "⊥".to_string(),
-                Some(l) => format!("{}", 158u64 << l.min(16)),
+                Some(l) => format!("{}", managed_mb_per_slot << l.min(16)),
             };
             format!("{}=({};{})", name, s.parallelism, mem)
         })

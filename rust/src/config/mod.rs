@@ -35,7 +35,7 @@ mod tests {
         let c = from_str("").unwrap();
         assert_eq!(c.cluster.tm_cores, 4);
         assert_eq!(c.cluster.tm_slots, 4);
-        assert_eq!(c.scaler.max_level, 3);
+        assert_eq!(c.scaler.max_level, 2);
     }
 
     #[test]

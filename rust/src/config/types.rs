@@ -89,8 +89,16 @@ pub struct ScalerConfig {
     pub cache_hit_threshold: f64,
     /// Δτ — average state access latency threshold in µs (§5: 1 ms).
     pub latency_threshold_us: u64,
-    /// maxLevel — maximum memory level (Algorithm 1: 3).
+    /// maxLevel — highest *reachable* memory level. Algorithm 1 uses 3,
+    /// but a level-3 slot (158 × 2³ = 1,264 MB) exceeds one TM's managed
+    /// budget (2,048 − 1,416 = 632 MB) under the §5 calibration, so the
+    /// default caps at 2 — the largest level a pod can actually host
+    /// (`validate` enforces this invariant for custom configs).
     pub max_level: u32,
+    /// θ above which the cache is considered comfortably oversized and
+    /// Justin may step an operator's memory level back down (the
+    /// reclamation mirror of Δθ; must exceed `cache_hit_threshold`).
+    pub reclaim_hit_threshold: f64,
     /// Hysteresis: minimum relative improvement for "did it improve?".
     pub improvement_epsilon: f64,
     /// Decision window (§5: 2 minutes), seconds.
@@ -112,7 +120,8 @@ impl Default for ScalerConfig {
             target_busy: 0.7,
             cache_hit_threshold: 0.8,
             latency_threshold_us: 1000,
-            max_level: 3,
+            max_level: 2,
+            reclaim_hit_threshold: 0.98,
             improvement_epsilon: 0.02,
             decision_window_s: 120,
             stabilization_s: 60,
@@ -213,6 +222,84 @@ impl Default for SimConfig {
     }
 }
 
+/// A time-varying workload scenario (`justin scenario …`): which query to
+/// drive and how the offered rate moves over virtual time, as fractions of
+/// the query's target rate. Which parameters apply depends on `pattern`:
+///
+/// * `constant` — none.
+/// * `step` — `at_s`, `base` (before) → `peak` (after).
+/// * `ramp` — linear `base` → `peak` over `[start_s, end_s]`.
+/// * `diurnal` — sinusoid `1 ± amplitude` with period `period_s`.
+/// * `spike` — `peak` during `[start_s, end_s)`, `base` outside.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// Nexmark query profile to run (q1, q2, q3, q5, q8, q11).
+    pub query: String,
+    /// Pattern kind: constant | step | ramp | diurnal | spike.
+    pub pattern: String,
+    /// Baseline rate factor (step/ramp start, spike off-peak).
+    pub base: f64,
+    /// Peak rate factor (step/ramp end, spike plateau).
+    pub peak: f64,
+    /// Step time / ramp-or-spike start, virtual seconds.
+    pub start_s: f64,
+    /// Ramp-or-spike end, virtual seconds.
+    pub end_s: f64,
+    /// Diurnal period, virtual seconds.
+    pub period_s: f64,
+    /// Diurnal amplitude (fraction of target).
+    pub amplitude: f64,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        Self {
+            query: "q11".into(),
+            pattern: "constant".into(),
+            base: 0.2,
+            peak: 1.0,
+            start_s: 900.0,
+            end_s: 1800.0,
+            period_s: 1800.0,
+            amplitude: 0.5,
+        }
+    }
+}
+
+impl ScenarioConfig {
+    /// Build the simulator's [`crate::sim::RatePattern`] from this section.
+    pub fn rate_pattern(&self) -> crate::Result<crate::sim::profiles::RatePattern> {
+        use crate::sim::profiles::RatePattern;
+        Ok(match self.pattern.as_str() {
+            "constant" => RatePattern::Constant,
+            "step" => RatePattern::Step {
+                at_s: self.start_s,
+                from: self.base,
+                to: self.peak,
+            },
+            "ramp" => RatePattern::Ramp {
+                start_s: self.start_s,
+                end_s: self.end_s,
+                from: self.base,
+                to: self.peak,
+            },
+            "diurnal" => RatePattern::Diurnal {
+                period_s: self.period_s,
+                amplitude: self.amplitude,
+            },
+            "spike" => RatePattern::Spike {
+                start_s: self.start_s,
+                end_s: self.end_s,
+                base: self.base,
+                peak: self.peak,
+            },
+            other => bail!(
+                "unknown scenario pattern {other:?} (constant|step|ramp|diurnal|spike)"
+            ),
+        })
+    }
+}
+
 /// Root configuration.
 #[derive(Debug, Clone, Default)]
 pub struct Config {
@@ -221,6 +308,7 @@ pub struct Config {
     pub engine: EngineConfig,
     pub lsm: LsmConfig,
     pub sim: SimConfig,
+    pub scenario: ScenarioConfig,
 }
 
 macro_rules! get_num {
@@ -265,6 +353,7 @@ impl Config {
             "scaler.cache_hit_threshold",
             "scaler.latency_threshold_us",
             "scaler.max_level",
+            "scaler.reclaim_hit_threshold",
             "scaler.improvement_epsilon",
             "scaler.decision_window_s",
             "scaler.stabilization_s",
@@ -288,6 +377,14 @@ impl Config {
             "sim.get_miss_us",
             "sim.put_us",
             "sim.reconfig_downtime_s",
+            "scenario.query",
+            "scenario.pattern",
+            "scenario.base",
+            "scenario.peak",
+            "scenario.start_s",
+            "scenario.end_s",
+            "scenario.period_s",
+            "scenario.amplitude",
         ];
         for key in doc.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -330,6 +427,11 @@ impl Config {
             u64
         );
         get_num!(doc, "scaler.max_level", c.scaler.max_level, u32);
+        get_f64!(
+            doc,
+            "scaler.reclaim_hit_threshold",
+            c.scaler.reclaim_hit_threshold
+        );
         get_f64!(
             doc,
             "scaler.improvement_epsilon",
@@ -392,6 +494,25 @@ impl Config {
             c.sim.reconfig_downtime_s
         );
 
+        if let Some(v) = doc.get("scenario.query") {
+            c.scenario.query = v
+                .as_str()
+                .context("scenario.query must be a string")?
+                .to_string();
+        }
+        if let Some(v) = doc.get("scenario.pattern") {
+            c.scenario.pattern = v
+                .as_str()
+                .context("scenario.pattern must be a string")?
+                .to_string();
+        }
+        get_f64!(doc, "scenario.base", c.scenario.base);
+        get_f64!(doc, "scenario.peak", c.scenario.peak);
+        get_f64!(doc, "scenario.start_s", c.scenario.start_s);
+        get_f64!(doc, "scenario.end_s", c.scenario.end_s);
+        get_f64!(doc, "scenario.period_s", c.scenario.period_s);
+        get_f64!(doc, "scenario.amplitude", c.scenario.amplitude);
+
         c.validate()?;
         Ok(c)
     }
@@ -406,6 +527,46 @@ impl Config {
         }
         if !(0.0..=1.0).contains(&self.scaler.cache_hit_threshold) {
             bail!("cache_hit_threshold must be in [0,1]");
+        }
+        if !(0.0..=1.0).contains(&self.scaler.reclaim_hit_threshold)
+            || self.scaler.reclaim_hit_threshold <= self.scaler.cache_hit_threshold
+        {
+            bail!(
+                "reclaim_hit_threshold must be in (cache_hit_threshold, 1] \
+                 or reclamation and pressure would fight"
+            );
+        }
+        // A top-level slot must fit inside one TM's managed budget, or the
+        // policy could emit configurations the placement layer can never
+        // host (RequestTooLarge).
+        let tm_managed_budget = self
+            .cluster
+            .tm_memory_mb
+            .saturating_sub(self.cluster.tm_overhead_mb);
+        if self.managed_mb_for_level(self.scaler.max_level) > tm_managed_budget {
+            bail!(
+                "scaler.max_level {} needs {} MB per slot but a TM has only \
+                 {} MB of managed memory ({} - {} overhead)",
+                self.scaler.max_level,
+                self.managed_mb_for_level(self.scaler.max_level),
+                tm_managed_budget,
+                self.cluster.tm_memory_mb,
+                self.cluster.tm_overhead_mb
+            );
+        }
+        // Scenario shape checks (pattern names validate at use time).
+        if self.scenario.base <= 0.0 || self.scenario.peak <= 0.0 {
+            bail!("scenario.base and scenario.peak must be positive");
+        }
+        if matches!(self.scenario.pattern.as_str(), "ramp" | "spike")
+            && self.scenario.end_s <= self.scenario.start_s
+        {
+            bail!(
+                "scenario.end_s ({}) must exceed scenario.start_s ({}) for \
+                 ramp/spike patterns",
+                self.scenario.end_s,
+                self.scenario.start_s
+            );
         }
         if self.cluster.tm_slots == 0 || self.cluster.tm_cores == 0 {
             bail!("task managers need at least one slot and one core");
@@ -440,7 +601,9 @@ mod tests {
         assert!((c.scaler.busy_high - 0.8).abs() < 1e-9);
         assert!((c.scaler.cache_hit_threshold - 0.8).abs() < 1e-9);
         assert_eq!(c.scaler.latency_threshold_us, 1000);
-        assert_eq!(c.scaler.max_level, 3);
+        // Algorithm 1's maxLevel is 3; our default is the largest level a
+        // §5 TM can host (see ScalerConfig::max_level).
+        assert_eq!(c.scaler.max_level, 2);
         assert_eq!(c.scaler.decision_window_s, 120);
         assert_eq!(c.scaler.stabilization_s, 60);
         assert_eq!(c.scaler.metric_granularity_s, 5);
@@ -465,5 +628,77 @@ mod tests {
         let doc =
             super::super::parse_toml("[scaler]\nbusy_low = 0.9\nbusy_high = 0.5").unwrap();
         assert!(Config::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn scenario_section_parses_to_pattern() {
+        use crate::sim::profiles::RatePattern;
+        let doc = super::super::parse_toml(
+            "[scenario]\nquery = \"q8\"\npattern = \"spike\"\nbase = 0.25\n\
+             peak = 1.0\nstart_s = 600\nend_s = 1500",
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert_eq!(c.scenario.query, "q8");
+        assert_eq!(
+            c.scenario.rate_pattern().unwrap(),
+            RatePattern::Spike {
+                start_s: 600.0,
+                end_s: 1500.0,
+                base: 0.25,
+                peak: 1.0
+            }
+        );
+        // Default section is a constant pattern.
+        assert_eq!(
+            Config::default().scenario.rate_pattern().unwrap(),
+            RatePattern::Constant
+        );
+        // Unknown pattern names fail at use time.
+        let mut bad = Config::default();
+        bad.scenario.pattern = "sawtooth".into();
+        assert!(bad.scenario.rate_pattern().is_err());
+    }
+
+    #[test]
+    fn max_level_must_fit_one_tm() {
+        // Default: level 2 = 632 MB exactly fills a TM's managed budget
+        // (2048 − 1416).
+        assert!(Config::default().validate().is_ok());
+        // Algorithm 1's level 3 (1,264 MB) cannot be hosted by a §5 pod.
+        let doc = super::super::parse_toml("[scaler]\nmax_level = 3").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+        // …unless the TM is sized for it.
+        let doc = super::super::parse_toml(
+            "[scaler]\nmax_level = 3\n[cluster]\ntm_memory_mb = 4096",
+        )
+        .unwrap();
+        assert!(Config::from_toml(&doc).is_ok());
+    }
+
+    #[test]
+    fn scenario_interval_must_be_ordered() {
+        let doc = super::super::parse_toml(
+            "[scenario]\npattern = \"spike\"\nstart_s = 1800\nend_s = 900",
+        )
+        .unwrap();
+        assert!(Config::from_toml(&doc).is_err(), "swapped interval rejected");
+        // Irrelevant for patterns that ignore the interval.
+        let doc = super::super::parse_toml(
+            "[scenario]\npattern = \"diurnal\"\nstart_s = 1800\nend_s = 900",
+        )
+        .unwrap();
+        assert!(Config::from_toml(&doc).is_ok());
+    }
+
+    #[test]
+    fn reclaim_threshold_must_exceed_pressure_threshold() {
+        let doc =
+            super::super::parse_toml("[scaler]\nreclaim_hit_threshold = 0.7").unwrap();
+        assert!(Config::from_toml(&doc).is_err(), "0.7 <= Δθ 0.8 rejected");
+        let doc = super::super::parse_toml("[scaler]\nreclaim_hit_threshold = 0.95").unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert!((c.scaler.reclaim_hit_threshold - 0.95).abs() < 1e-9);
+        assert!((ScalerConfig::default().reclaim_hit_threshold - 0.98).abs() < 1e-9);
     }
 }

@@ -4,6 +4,9 @@
 //! justin fig4                         # regenerate Figure 4 (microbench)
 //! justin fig5 [q1|q3|q5|q11|q8|all]   # regenerate Figure 5 (DS2 vs Justin)
 //! justin sim --query q11 --policy justin [--duration 1500] [--verbose]
+//! justin scenario --query q11 --pattern spike [--policy both]
+//!                 [--base 0.2] [--peak 1.0] [--start 900] [--end 1800]
+//!                 [--period 1800] [--amplitude 0.5]   # dynamic workloads
 //! justin run --query q5 --rate 200000 --events 2000000  # real engine
 //! justin config --file path.toml      # validate a config file
 //! ```
@@ -42,7 +45,7 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
 
 fn real_main() -> anyhow::Result<()> {
     let args = Args::parse();
-    let command = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let command = args.subcommand().unwrap_or("help");
     match command {
         "fig4" => {
             let cfg = load_config(&args)?;
@@ -88,6 +91,63 @@ fn real_main() -> anyhow::Result<()> {
             }
             for r in &trace.reconfigs {
                 println!("reconfig at t={:.0}s → {:?}", r.t_s, r.assignment.ops);
+            }
+        }
+        "scenario" => {
+            let cfg = load_config(&args)?;
+            let mut scen = cfg.scenario.clone();
+            args.override_str("query", &mut scen.query);
+            args.override_str("pattern", &mut scen.pattern);
+            args.override_parse("base", &mut scen.base);
+            args.override_parse("peak", &mut scen.peak);
+            args.override_parse("start", &mut scen.start_s);
+            args.override_parse("end", &mut scen.end_s);
+            args.override_parse("period", &mut scen.period_s);
+            args.override_parse("amplitude", &mut scen.amplitude);
+            let pattern = scen.rate_pattern()?;
+            let profile = query_profile(&scen.query)?.with_pattern(pattern.clone());
+            let policies: Vec<ScalerKind> = match args.get_or("policy", "both") {
+                "both" => vec![ScalerKind::Ds2, ScalerKind::Justin],
+                one => vec![one.parse()?],
+            };
+            println!(
+                "scenario {} × {pattern:?} for {} virtual seconds",
+                scen.query, cfg.sim.duration_s
+            );
+            let mut costs = Vec::new();
+            for kind in policies {
+                let mut policy: Box<dyn Policy> = match kind {
+                    ScalerKind::Ds2 => Box::new(Ds2::new(cfg.scaler.clone())),
+                    _ => Box::new(Justin::new(cfg.scaler.clone())),
+                };
+                let trace = run_autoscaling(&profile, policy.as_mut(), &cfg);
+                println!(
+                    "\n{kind}: steps={} converged={} cpu={:.0} core·s mem={:.0} MB·s",
+                    trace.steps(),
+                    trace
+                        .converged_at_s
+                        .map(|t| format!("{t:.0}s"))
+                        .unwrap_or_else(|| "never".into()),
+                    trace.core_seconds(),
+                    trace.memory_mb_seconds(),
+                );
+                for p in trace.points.iter().step_by(12) {
+                    println!(
+                        "t={:>5.0}s offered={:>10.0} rate={:>10.0} cores={:>3} mem={:>6} MB",
+                        p.t_s, p.offered, p.rate, p.cores, p.memory_mb
+                    );
+                }
+                for r in &trace.reconfigs {
+                    println!("reconfig at t={:.0}s → {:?}", r.t_s, r.assignment.ops);
+                }
+                costs.push((kind, trace.memory_mb_seconds()));
+            }
+            if let [(_, ds2_mbs), (_, justin_mbs)] = costs.as_slice() {
+                println!(
+                    "\nmemory cost: Justin {justin_mbs:.0} MB·s vs DS2 {ds2_mbs:.0} MB·s \
+                     ({:+.1}%)",
+                    (justin_mbs / ds2_mbs.max(1.0) - 1.0) * 100.0
+                );
             }
         }
         "run" => {
@@ -141,9 +201,11 @@ fn real_main() -> anyhow::Result<()> {
         }
         _ => {
             println!(
-                "usage: justin <fig4|fig5 [query]|sim|run|config> [--query q] \
-                 [--policy ds2|justin] [--rate N] [--events N] [--duration S] \
-                 [--seed N] [--config file.toml] [--verbose]"
+                "usage: justin <fig4|fig5 [query]|sim|scenario|run|config> [--query q] \
+                 [--policy ds2|justin|both] [--rate N] [--events N] [--duration S] \
+                 [--seed N] [--config file.toml] [--verbose]\n\
+                 scenario options: --pattern constant|step|ramp|diurnal|spike \
+                 --base F --peak F --start S --end S --period S --amplitude F"
             );
         }
     }

@@ -12,6 +12,16 @@
 //! A decision history tracks whether the previous step was vertical
 //! (`o.v`) and whether it helped (θ↑ or τ↓), implementing lines 7–14;
 //! stateless operators are stripped of managed memory entirely (lines 3–4).
+//!
+//! Beyond Algorithm 1, this implementation scales memory in *both*
+//! directions: when an operator's cache is comfortably oversized (θ ≥
+//! `reclaim_hit_threshold` with τ below Δτ) and the operator sits below the
+//! busyness band's upper edge, its memory level steps back down — the
+//! vertical mirror of the horizontal scale-down that the `should_trigger`
+//! busyness band already performs. A reclamation that turns out to have
+//! been premature (θ/τ pressure appears in the next window) is reverted and
+//! the restored level becomes that operator's floor, so the policy cannot
+//! oscillate between releasing and re-acquiring the same level.
 
 use super::ds2::Ds2;
 use super::{Policy, PolicyInput};
@@ -29,6 +39,11 @@ struct History {
     tau: BTreeMap<String, Option<f64>>,
     /// o.v^{t-1}: was the last decision a scale-up?
     vertical: BTreeMap<String, bool>,
+    /// Was the last decision a memory reclamation (level step-down)?
+    reclaimed: BTreeMap<String, bool>,
+    /// Lowest level reclamation may reach per operator: raised to the
+    /// restored level after a reverted reclamation (anti-oscillation).
+    floor: BTreeMap<String, u32>,
 }
 
 /// The Justin policy.
@@ -79,6 +94,19 @@ impl Justin {
             .unwrap_or(false);
         theta_low || tau_high
     }
+
+    /// Reclamation signal: the cache comfortably over-covers the working
+    /// set (θ ≈ 1, so misses — and with them evictions that matter — are
+    /// negligible) and accesses stay well clear of the Δτ disk threshold.
+    fn cache_oversized(&self, theta: Option<f64>, tau: Option<f64>) -> bool {
+        let theta_high = theta
+            .map(|h| h >= self.cfg.reclaim_hit_threshold)
+            .unwrap_or(false);
+        let tau_ok = tau
+            .map(|t| t <= self.cfg.latency_threshold_us as f64)
+            .unwrap_or(true);
+        theta_high && tau_ok
+    }
 }
 
 impl Policy for Justin {
@@ -94,6 +122,8 @@ impl Policy for Justin {
             ..Default::default()
         });
         let mut new_vertical: BTreeMap<String, bool> = BTreeMap::new();
+        let mut new_reclaimed: BTreeMap<String, bool> = BTreeMap::new();
+        let mut new_floor = prev.floor.clone();
         let mut new_theta = BTreeMap::new();
         let mut new_tau = BTreeMap::new();
 
@@ -125,8 +155,21 @@ impl Policy for Justin {
             let prev_level = prev_scaling.memory_level.unwrap_or(0);
             scaling.memory_level = Some(prev_level);
 
+            // A reclamation that overshot — θ/τ pressure surfaced in the
+            // very next window — is reverted before anything else, and the
+            // restored level becomes this operator's reclamation floor so
+            // the next quiet window does not release it again.
+            let was_reclaim = prev.reclaimed.get(&op.name).copied().unwrap_or(false);
+            if was_reclaim && self.memory_pressure(theta_now, tau_now) {
+                scaling.parallelism = prev_scaling.parallelism; // cancel scale-out
+                scaling.memory_level = Some(prev_level + 1);
+                new_floor.insert(op.name.clone(), prev_level + 1);
+                next.set(&op.name, scaling);
+                continue;
+            }
+
             // Line 5: does DS2 think o_i's capacity is insufficient?
-            if scaling.parallelism != prev_scaling.parallelism {
+            if scaling.parallelism > prev_scaling.parallelism {
                 let was_vertical = prev.vertical.get(&op.name).copied().unwrap_or(false);
                 if was_vertical {
                     // Lines 7–14: we scaled up last time — did it help?
@@ -137,12 +180,18 @@ impl Policy for Justin {
                         prev.tau.get(&op.name).copied().flatten(),
                     );
                     if improved {
-                        // Lines 8–12: keep pushing vertically if possible.
-                        if prev_level + 1 < self.cfg.max_level {
+                        // Lines 8–12: keep pushing vertically while the
+                        // storage signals still show pressure and a level
+                        // remains (maxLevel itself is reachable).
+                        if self.memory_pressure(theta_now, tau_now)
+                            && prev_level + 1 <= self.cfg.max_level
+                        {
                             scaling.parallelism = prev_scaling.parallelism; // cancel scale-out
                             scaling.memory_level = Some(prev_level + 1);
                             new_vertical.insert(op.name.clone(), true);
                         }
+                        // Pressure resolved (or cap reached): keep the level
+                        // and let DS2's horizontal decision stand.
                     } else {
                         // Lines 13–14: scale-up didn't help — roll it back
                         // (DS2's parallelism applies with the old memory).
@@ -151,12 +200,50 @@ impl Policy for Justin {
                 } else {
                     // Lines 16–19: could vertical scaling be useful?
                     if self.memory_pressure(theta_now, tau_now)
-                        && prev_level + 1 < self.cfg.max_level
+                        && prev_level + 1 <= self.cfg.max_level
                     {
                         scaling.parallelism = prev_scaling.parallelism; // cancel scale-out
                         scaling.memory_level = Some(prev_level + 1);
                         new_vertical.insert(op.name.clone(), true);
+                        // The working set demonstrably outgrew the cache:
+                        // any old reclamation floor is stale evidence.
+                        new_floor.remove(&op.name);
                     }
+                }
+            } else {
+                // DS2 kept (or reduced) the parallelism: the operator has
+                // CPU headroom.
+                let was_vertical =
+                    prev.vertical.get(&op.name).copied().unwrap_or(false);
+                if was_vertical
+                    && !self.improved(
+                        theta_now,
+                        prev.theta.get(&op.name).copied().flatten(),
+                        tau_now,
+                        prev.tau.get(&op.name).copied().flatten(),
+                    )
+                {
+                    // Lines 13–14 still apply when the load has receded in
+                    // the meantime: an unhelpful scale-up is rolled back
+                    // with DS2's (lower) parallelism standing.
+                    scaling.memory_level = Some(prev_level.saturating_sub(1));
+                    next.set(&op.name, scaling);
+                    continue;
+                }
+                // If the cache is comfortably oversized, give one memory
+                // level back — the bidirectional mirror of the scale-up
+                // path. Horizontal and vertical scale-down compose in a
+                // single reconfiguration.
+                let floor = new_floor.get(&op.name).copied().unwrap_or(0);
+                let relaxed = window
+                    .map(|w| w.busyness < self.cfg.busy_high)
+                    .unwrap_or(false);
+                if prev_level > floor
+                    && relaxed
+                    && self.cache_oversized(theta_now, tau_now)
+                {
+                    scaling.memory_level = Some(prev_level - 1);
+                    new_reclaimed.insert(op.name.clone(), true);
                 }
             }
             next.set(&op.name, scaling);
@@ -167,6 +254,8 @@ impl Policy for Justin {
             theta: new_theta,
             tau: new_tau,
             vertical: new_vertical,
+            reclaimed: new_reclaimed,
+            floor: new_floor,
         });
         next
     }
@@ -273,15 +362,94 @@ mod tests {
     fn successful_scale_up_repeats_then_caps() {
         let mut s = Scenario::new();
         let _ = s.step(2000.0, stateful_window(0.95, 1000.0, 600.0, 0.4, 1500.0));
-        // θ improved (0.4 → 0.6) but still insufficient → scale up again.
+        // θ improved (0.4 → 0.6) but still below Δθ → scale up again: the
+        // configured maxLevel (default 2) itself is reachable.
         let next = s.step(2000.0, stateful_window(0.95, 1200.0, 700.0, 0.6, 900.0));
         assert_eq!(next.parallelism("agg"), 1);
-        assert_eq!(next.get("agg").memory_level, Some(2));
-        // Improved again, but maxLevel=3 blocks (2+1 !< 3) → DS2 scale-out
-        // applies with memory kept.
-        let next = s.step(2000.0, stateful_window(0.95, 1400.0, 800.0, 0.8, 500.0));
+        assert_eq!(next.get("agg").memory_level, Some(2), "maxLevel reachable");
+        // Improved and pressured once more, but no level remains above
+        // maxLevel → DS2 scale-out applies with memory kept.
+        let next = s.step(2000.0, stateful_window(0.95, 1300.0, 750.0, 0.7, 600.0));
         assert!(next.parallelism("agg") > 1, "falls back to scale-out at cap");
         assert_eq!(next.get("agg").memory_level, Some(2));
+    }
+
+    #[test]
+    fn failed_scale_up_rolls_back_even_when_load_recedes() {
+        let mut s = Scenario::new();
+        // Pressured → vertical step to level 1.
+        let _ = s.step(2000.0, stateful_window(0.95, 1000.0, 600.0, 0.5, 800.0));
+        assert_eq!(s.current.get("agg").memory_level, Some(1));
+        // The spike passes before the next window: DS2 now keeps p=1, and
+        // θ/τ did not improve — the useless level is still rolled back.
+        let next = s.step(1000.0, stateful_window(0.4, 1000.0, 10_000.0, 0.5, 820.0));
+        assert_eq!(next.parallelism("agg"), 1);
+        assert_eq!(
+            next.get("agg").memory_level,
+            Some(0),
+            "unhelpful scale-up rolled back despite receded load"
+        );
+    }
+
+    #[test]
+    fn pressure_resolved_stops_vertical_push() {
+        let mut s = Scenario::new();
+        let _ = s.step(2000.0, stateful_window(0.95, 1000.0, 600.0, 0.4, 1500.0));
+        assert_eq!(s.current.get("agg").memory_level, Some(1));
+        // The step-up fixed the cache (θ 0.4 → 0.95): no further vertical
+        // step even though levels remain — DS2's horizontal decision stands.
+        let next = s.step(2000.0, stateful_window(0.95, 1200.0, 700.0, 0.95, 200.0));
+        assert!(next.parallelism("agg") > 1, "CPU demand met horizontally");
+        assert_eq!(next.get("agg").memory_level, Some(1), "level retained");
+    }
+
+    #[test]
+    fn oversized_cache_reclaims_one_level_per_window() {
+        let mut s = Scenario::new();
+        s.current.set("agg", OpScaling::new(1, Some(2)));
+        // Quiet operator with a saturated cache: DS2 keeps p=1, Justin
+        // steps the memory level down — one level per decision window.
+        let idle = || stateful_window(0.3, 1000.0, 10_000.0, 0.995, 50.0);
+        let next = s.step(1000.0, idle());
+        assert_eq!(next.parallelism("agg"), 1);
+        assert_eq!(next.get("agg").memory_level, Some(1), "one level released");
+        let next = s.step(1000.0, idle());
+        assert_eq!(next.get("agg").memory_level, Some(0));
+        // At level 0 there is nothing left to release (⊥ is only for
+        // stateless operators), and the trace stays put — no oscillation.
+        let next = s.step(1000.0, idle());
+        assert_eq!(next.get("agg").memory_level, Some(0));
+        assert_eq!(next.parallelism("agg"), 1);
+    }
+
+    #[test]
+    fn premature_reclaim_reverts_and_floors() {
+        let mut s = Scenario::new();
+        s.current.set("agg", OpScaling::new(1, Some(1)));
+        // Quiet + θ ≈ 1 → release level 1 → 0.
+        let next = s.step(1000.0, stateful_window(0.3, 1000.0, 10_000.0, 1.0, 50.0));
+        assert_eq!(next.get("agg").memory_level, Some(0));
+        // The working set did not fit after all: θ collapses → the reclaim
+        // is reverted (cancelling DS2's knee-jerk scale-out)…
+        let next = s.step(2000.0, stateful_window(0.95, 1000.0, 600.0, 0.4, 1500.0));
+        assert_eq!(next.get("agg").memory_level, Some(1), "reclaim reverted");
+        assert_eq!(next.parallelism("agg"), 1, "scale-out cancelled on revert");
+        // …and the restored level is now a floor: the same quiet signals do
+        // not release it a second time.
+        let next = s.step(1000.0, stateful_window(0.3, 1000.0, 10_000.0, 1.0, 50.0));
+        assert_eq!(next.get("agg").memory_level, Some(1), "floor holds");
+    }
+
+    #[test]
+    fn horizontal_and_vertical_scale_down_compose() {
+        let mut s = Scenario::new();
+        s.current.set("agg", OpScaling::new(4, Some(1)));
+        // Idle operator with an oversized cache after a spike: DS2 shrinks
+        // the parallelism and Justin releases a memory level in the same
+        // reconfiguration.
+        let next = s.step(500.0, stateful_window(0.05, 500.0, 10_000.0, 1.0, 30.0));
+        assert!(next.parallelism("agg") < 4, "horizontal scale-down");
+        assert_eq!(next.get("agg").memory_level, Some(0), "vertical scale-down");
     }
 
     #[test]

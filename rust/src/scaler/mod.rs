@@ -112,10 +112,17 @@ pub fn should_trigger(
                 return true;
             }
         }
-        // Underload: every scalable operator far below the band.
+        // Underload: a scalable operator far below the band with something
+        // to give back — extra tasks, or managed memory above level 0 (the
+        // vertical dimension Justin can reclaim).
+        let reclaimable = current.parallelism(&op.name) > 1
+            || current
+                .get(&op.name)
+                .memory_level
+                .is_some_and(|level| level > 0);
         if op.kind == OpKind::Transform
             && w.busyness < cfg.busy_low
-            && current.parallelism(&op.name) > 1
+            && reclaimable
             && w.observed_rate > 0.0
         {
             // Only trigger scale-down when nothing is overloaded.
@@ -241,10 +248,39 @@ mod tests {
         windows.insert("map".to_string(), window(0.05, 100.0, 2000.0, 100.0));
         windows.insert("sink".to_string(), window(0.05, 100.0, 2000.0, 0.0));
         assert!(should_trigger(&meta, &windows, &current, &cfg));
-        // …but not at p=1.
+        // …but not at p=1 with level-0 memory (nothing left to release).
         let mut a1 = ScalingAssignment::default();
         a1.set("map", OpScaling::new(1, Some(0)));
         assert!(!should_trigger(&meta, &windows, &a1, &cfg));
+        // A held memory level alone is reclaimable → triggers.
+        let mut a_mem = ScalingAssignment::default();
+        a_mem.set("map", OpScaling::new(1, Some(2)));
+        assert!(
+            should_trigger(&meta, &windows, &a_mem, &cfg),
+            "idle op holding managed memory above level 0 must trigger"
+        );
+    }
+
+    #[test]
+    fn missing_operator_window_is_skipped() {
+        let meta = linear_meta(&[("map", false), ("agg", true)]);
+        let cfg = ScalerConfig::default();
+        let mut current = ScalingAssignment::default();
+        current.set("map", OpScaling::new(2, Some(0)));
+        current.set("agg", OpScaling::new(2, Some(1)));
+        // Only the source reported this window (e.g. tasks mid-restart):
+        // operators without a window must be skipped, not treated as idle.
+        let mut windows = BTreeMap::new();
+        let mut src = window(0.5, 1000.0, 2000.0, 1000.0);
+        src.backpressure = 0.3;
+        windows.insert("source".to_string(), src);
+        assert!(
+            !should_trigger(&meta, &windows, &current, &cfg),
+            "no operator windows → no decision"
+        );
+        // A hot op present alongside a missing one still triggers.
+        windows.insert("map".to_string(), window(0.95, 1000.0, 1050.0, 1000.0));
+        assert!(should_trigger(&meta, &windows, &current, &cfg));
     }
 
     #[test]

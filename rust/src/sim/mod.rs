@@ -16,11 +16,19 @@
 //! touches). Throughput, busyness and backpressure follow from the
 //! bottleneck analysis of the dataflow — exactly the quantities the paper's
 //! §3 microbenchmarks measure.
+//!
+//! Beyond the paper's steady targets, a [`profiles::RatePattern`] can shape
+//! the offered rate over virtual time (steps, ramps, diurnal cycles,
+//! spikes). Operators whose state tracks the offered load (`ws_rate_exp >
+//! 0`) see their working set inflate and deflate with it, which is what
+//! exercises Justin's bidirectional memory scaling end to end.
 
 pub mod model;
 pub mod profiles;
 pub mod runner;
 
-pub use model::{service_model, OpLoad, TickOutput};
-pub use profiles::{microbench_profile, query_profile, SimOpProfile, SimQuery};
+pub use model::{service_model, service_model_at, OpLoad, TickOutput};
+pub use profiles::{
+    microbench_profile, query_profile, RatePattern, SimOpProfile, SimQuery,
+};
 pub use runner::{run_autoscaling, AutoscaleTrace, ReconfigEvent, TracePoint};

@@ -21,11 +21,29 @@ pub struct ServicePoint {
 }
 
 /// Service model for one operator at parallelism `p` with `managed_mb` of
-/// managed memory per task (see module docs of [`crate::sim`]).
+/// managed memory per task, at the calibration load (offered = target).
 pub fn service_model(
     op: &SimOpProfile,
     p: u32,
     managed_mb: u64,
+    cfg: &SimConfig,
+) -> ServicePoint {
+    service_model_at(op, p, managed_mb, 1.0, cfg)
+}
+
+/// [`service_model`] at a relative load `load = offered_rate / target_rate`.
+///
+/// Operators with `ws_rate_exp > 0` have a working set that tracks the
+/// offered load (active windows, live sessions): `W = W₁ · load^exp ·
+/// p^(−α)`. At `load = 1` this is exactly the calibrated model, so steady
+/// Fig. 4/5 runs are unaffected; under time-varying [`super::profiles::RatePattern`]s
+/// the cache demand rises and falls with the workload — the signal Justin's
+/// bidirectional memory scaling responds to.
+pub fn service_model_at(
+    op: &SimOpProfile,
+    p: u32,
+    managed_mb: u64,
+    load: f64,
     cfg: &SimConfig,
 ) -> ServicePoint {
     let p = p.max(1);
@@ -39,8 +57,10 @@ pub fn service_model(
         };
     }
     let (memtable_mb, cache_mb) = split_managed(managed_mb);
-    // Working set per task: W(p) = W₁ · p^(−α).
-    let w_task = op.working_set_mb_p1 * (p as f64).powf(-op.ws_alpha);
+    // Working set per task: W(p, load) = W₁ · load^exp · p^(−α).
+    let w_task = op.working_set_mb_p1
+        * load.max(super::profiles::MIN_RATE_FACTOR).powf(op.ws_rate_exp)
+        * (p as f64).powf(-op.ws_alpha);
     let theta = if op.reads_per_event > 0.0 {
         if w_task <= f64::EPSILON {
             Some(1.0)
@@ -131,7 +151,16 @@ pub fn evaluate(
         out_demand.insert(&op.name, d_out);
     }
 
-    // Service points under the assignment.
+    // Service points under the assignment. The relative load shapes the
+    // working set of rate-coupled operators (see [`service_model_at`]);
+    // it follows the *offered* rate — under backpressure the backlog keeps
+    // active windows full, so state does not shrink just because the
+    // bottleneck throttles throughput.
+    let load = if query.target_rate > 0.0 {
+        offered_rate / query.target_rate
+    } else {
+        1.0
+    };
     let mut service: BTreeMap<&str, ServicePoint> = BTreeMap::new();
     let mut parallelism: BTreeMap<&str, u32> = BTreeMap::new();
     for op in &query.ops {
@@ -141,7 +170,7 @@ pub fn evaluate(
             None => 0,
             Some(level) => managed_mb_base << level.min(16),
         };
-        service.insert(&op.name, service_model(op, p, managed, cfg));
+        service.insert(&op.name, service_model_at(op, p, managed, load, cfg));
         parallelism.insert(&op.name, p);
     }
 
@@ -350,6 +379,27 @@ mod tests {
             r_up > r_out * 0.9,
             "scale-up {r_up} should be competitive with scale-out {r_out}"
         );
+    }
+
+    #[test]
+    fn load_coupled_working_set_tracks_rate() {
+        let q = query_profile("q11").unwrap();
+        let op = q.op("sessions").unwrap();
+        let full = service_model_at(op, 1, 158, 1.0, &cfg());
+        let quarter = service_model_at(op, 1, 158, 0.25, &cfg());
+        // W = 240 × 0.25 = 60 MB fits the 94 MB level-0 cache → θ = 1.
+        assert_eq!(quarter.theta, Some(1.0));
+        assert!(quarter.theta.unwrap() > full.theta.unwrap());
+        assert!(quarter.per_task_capacity > full.per_task_capacity);
+        // At load 1 the coupled model is exactly the calibrated one.
+        let base = service_model(op, 1, 158, &cfg());
+        assert_eq!(full.service_us, base.service_us);
+        // Static-state operators (q3's converged join) are load-invariant.
+        let q3 = query_profile("q3").unwrap();
+        let join = q3.op("join").unwrap();
+        let a = service_model_at(join, 1, 158, 0.25, &cfg());
+        let b = service_model_at(join, 1, 158, 1.0, &cfg());
+        assert_eq!(a.service_us, b.service_us);
     }
 
     #[test]

@@ -10,6 +10,101 @@
 use crate::engine::operators::AccessMode;
 use crate::graph::OpKind;
 
+/// How the offered source rate varies over virtual time, as a multiplier of
+/// the query's base `target_rate`. `Constant` reproduces the paper's steady
+/// Fig. 5 setup; the other shapes are the dynamic-load scenarios (ramps,
+/// spikes, diurnal cycles) that exercise bidirectional scaling.
+///
+/// Factors are clamped to a small positive floor so a pattern can model an
+/// idle trough without ever producing a zero or negative offered rate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RatePattern {
+    /// Steady rate: factor 1.0 forever.
+    Constant,
+    /// Jump from `from`× to `to`× of the target at `at_s`.
+    Step { at_s: f64, from: f64, to: f64 },
+    /// Linear ramp from `from`× to `to`× between `start_s` and `end_s`;
+    /// flat outside the ramp interval.
+    Ramp {
+        start_s: f64,
+        end_s: f64,
+        from: f64,
+        to: f64,
+    },
+    /// Sinusoidal day/night cycle: `1.0 + amplitude·sin(2πt/period_s)`.
+    Diurnal { period_s: f64, amplitude: f64 },
+    /// Plateau at `peak`× during `[start_s, end_s)`, `base`× outside.
+    Spike {
+        start_s: f64,
+        end_s: f64,
+        base: f64,
+        peak: f64,
+    },
+}
+
+/// Lowest rate factor any pattern may produce (keeps the fluid model away
+/// from division-by-zero at idle troughs).
+pub const MIN_RATE_FACTOR: f64 = 0.01;
+
+impl RatePattern {
+    /// Multiplier of the base target rate at virtual time `t_s`.
+    pub fn factor_at(&self, t_s: f64) -> f64 {
+        let f = match *self {
+            RatePattern::Constant => 1.0,
+            RatePattern::Step { at_s, from, to } => {
+                if t_s < at_s {
+                    from
+                } else {
+                    to
+                }
+            }
+            RatePattern::Ramp {
+                start_s,
+                end_s,
+                from,
+                to,
+            } => {
+                if t_s <= start_s || end_s <= start_s {
+                    from
+                } else if t_s >= end_s {
+                    to
+                } else {
+                    from + (to - from) * (t_s - start_s) / (end_s - start_s)
+                }
+            }
+            RatePattern::Diurnal {
+                period_s,
+                amplitude,
+            } => 1.0 + amplitude * (std::f64::consts::TAU * t_s / period_s.max(1.0)).sin(),
+            RatePattern::Spike {
+                start_s,
+                end_s,
+                base,
+                peak,
+            } => {
+                if t_s >= start_s && t_s < end_s {
+                    peak
+                } else {
+                    base
+                }
+            }
+        };
+        f.max(MIN_RATE_FACTOR)
+    }
+
+    /// Largest factor the pattern ever reaches (for capacity headroom math).
+    pub fn peak_factor(&self) -> f64 {
+        match *self {
+            RatePattern::Constant => 1.0,
+            RatePattern::Step { from, to, .. } => from.max(to),
+            RatePattern::Ramp { from, to, .. } => from.max(to),
+            RatePattern::Diurnal { amplitude, .. } => 1.0 + amplitude.abs(),
+            RatePattern::Spike { base, peak, .. } => base.max(peak),
+        }
+        .max(MIN_RATE_FACTOR)
+    }
+}
+
 /// One operator in the fluid model.
 #[derive(Debug, Clone)]
 pub struct SimOpProfile {
@@ -34,6 +129,13 @@ pub struct SimOpProfile {
     /// Typical stored value size in KB — scales LSM write cost (flush +
     /// compaction amplification ∝ bytes) and miss cost (block decode).
     pub value_kb: f64,
+    /// Load coupling of the working set: W scales with
+    /// `(offered_rate / target_rate)^ws_rate_exp`. 0 = static state (e.g. a
+    /// converged incremental join); 1 = state fully proportional to the
+    /// offered load (e.g. active windows or sessions). Only matters under
+    /// time-varying [`RatePattern`]s — at the steady target rate the factor
+    /// is exactly 1.
+    pub ws_rate_exp: f64,
 }
 
 impl SimOpProfile {
@@ -51,6 +153,7 @@ impl SimOpProfile {
             state_mb: 0.0,
             selectivity: 1.0,
             value_kb: 0.0,
+            ws_rate_exp: 0.0,
         }
     }
 
@@ -68,6 +171,7 @@ impl SimOpProfile {
             state_mb: 0.0,
             selectivity,
             value_kb: 0.0,
+            ws_rate_exp: 0.0,
         }
     }
 
@@ -85,22 +189,38 @@ impl SimOpProfile {
             state_mb: 0.0,
             selectivity: 0.0,
             value_kb: 0.0,
+            ws_rate_exp: 0.0,
         }
     }
 }
 
-/// A simulated query: profiles + the experiment's target source rate.
+/// A simulated query: profiles, the experiment's target source rate and the
+/// workload scenario shaping that rate over time.
 #[derive(Debug, Clone)]
 pub struct SimQuery {
     pub name: String,
     pub ops: Vec<SimOpProfile>,
-    /// Target source rate, events/s (the dashed blue line of Fig. 5).
+    /// Target source rate, events/s (the dashed blue line of Fig. 5). Under
+    /// a non-constant [`RatePattern`] this is the pattern's 1.0× reference.
     pub target_rate: f64,
+    /// Workload scenario: offered rate = `target_rate × pattern.factor_at(t)`.
+    pub pattern: RatePattern,
 }
 
 impl SimQuery {
     pub fn op(&self, name: &str) -> Option<&SimOpProfile> {
         self.ops.iter().find(|o| o.name == name)
+    }
+
+    /// Offered source rate at virtual time `t_s` under this query's pattern.
+    pub fn rate_at(&self, t_s: f64) -> f64 {
+        self.target_rate * self.pattern.factor_at(t_s)
+    }
+
+    /// Replace the rate pattern (builder-style, for scenario runs).
+    pub fn with_pattern(mut self, pattern: RatePattern) -> Self {
+        self.pattern = pattern;
+        self
     }
 
     pub fn meta(&self) -> crate::scaler::GraphMeta {
@@ -153,10 +273,12 @@ pub fn microbench_profile(mode: AccessMode) -> SimQuery {
                 state_mb: 1000.0,
                 selectivity: 1.0,
                 value_kb: 1.0,
+                ws_rate_exp: 0.0,
             },
             SimOpProfile::sink(&["kvstore"]),
         ],
         target_rate: target,
+        pattern: RatePattern::Constant,
     }
 }
 
@@ -183,6 +305,7 @@ pub fn query_profile(query: &str) -> crate::Result<SimQuery> {
                 SimOpProfile::sink(&["currency_map"]),
             ],
             target_rate: 2_250_000.0,
+            pattern: RatePattern::Constant,
         },
         "q2" => SimQuery {
             name: "q2".into(),
@@ -192,6 +315,7 @@ pub fn query_profile(query: &str) -> crate::Result<SimQuery> {
                 SimOpProfile::sink(&["filter"]),
             ],
             target_rate: 2_250_000.0,
+            pattern: RatePattern::Constant,
         },
         // q3: source (persons+auctions) → two stateless routers → an
         // incremental join over the complete stream whose state converges
@@ -215,10 +339,12 @@ pub fn query_profile(query: &str) -> crate::Result<SimQuery> {
                     state_mb: 8.0,
                     selectivity: 0.5,
                     value_kb: 0.1,
+                    ws_rate_exp: 0.0,
                 },
                 SimOpProfile::sink(&["join"]),
             ],
             target_rate: 1_200_000.0,
+            pattern: RatePattern::Constant,
         },
         // q5: sliding-window aggregate; state ~10 MB (fits cache), heavy
         // read-modify-write fan-out (size/slide = 5 windows per event).
@@ -240,10 +366,12 @@ pub fn query_profile(query: &str) -> crate::Result<SimQuery> {
                     state_mb: 10.0,
                     selectivity: 0.2,
                     value_kb: 0.05,
+                    ws_rate_exp: 0.5,
                 },
                 SimOpProfile::sink(&["hot_items"]),
             ],
             target_rate: 1_000_000.0,
+            pattern: RatePattern::Constant,
         },
         // q8: source (persons+auctions) → routers → tumbling-window join
         // with a large per-window working set: memory-pressured at level 0,
@@ -267,10 +395,12 @@ pub fn query_profile(query: &str) -> crate::Result<SimQuery> {
                     state_mb: 420.0,
                     selectivity: 0.3,
                     value_kb: 0.15,
+                    ws_rate_exp: 1.0,
                 },
                 SimOpProfile::sink(&["window_join"]),
             ],
             target_rate: 750_000.0,
+            pattern: RatePattern::Constant,
         },
         // q11: bids → session-window aggregate; active sessions dominate
         // the working set (W₁ = 240 MB), read-modify-write per bid.
@@ -291,10 +421,12 @@ pub fn query_profile(query: &str) -> crate::Result<SimQuery> {
                     state_mb: 380.0,
                     selectivity: 0.1,
                     value_kb: 0.1,
+                    ws_rate_exp: 1.0,
                 },
                 SimOpProfile::sink(&["sessions"]),
             ],
             target_rate: 320_000.0,
+            pattern: RatePattern::Constant,
         },
         other => anyhow::bail!("no simulation profile for query {other:?}"),
     };
@@ -343,5 +475,61 @@ mod tests {
         let meta = q.meta();
         assert_eq!(meta.op("window_join").unwrap().upstream.len(), 2);
         assert!(meta.op("window_join").unwrap().stateful);
+    }
+
+    #[test]
+    fn rate_patterns_shape() {
+        let step = RatePattern::Step {
+            at_s: 100.0,
+            from: 0.5,
+            to: 1.0,
+        };
+        assert!((step.factor_at(99.0) - 0.5).abs() < 1e-12);
+        assert!((step.factor_at(100.0) - 1.0).abs() < 1e-12);
+
+        let ramp = RatePattern::Ramp {
+            start_s: 0.0,
+            end_s: 100.0,
+            from: 0.0,
+            to: 1.0,
+        };
+        assert!((ramp.factor_at(50.0) - 0.5).abs() < 1e-12);
+        assert!((ramp.factor_at(200.0) - 1.0).abs() < 1e-12);
+        // from=0 is clamped to the positive floor.
+        assert!(ramp.factor_at(0.0) >= MIN_RATE_FACTOR);
+
+        let diurnal = RatePattern::Diurnal {
+            period_s: 400.0,
+            amplitude: 0.5,
+        };
+        assert!((diurnal.factor_at(100.0) - 1.5).abs() < 1e-9, "peak at T/4");
+        assert!((diurnal.factor_at(300.0) - 0.5).abs() < 1e-9, "trough at 3T/4");
+        assert!((diurnal.peak_factor() - 1.5).abs() < 1e-12);
+
+        let spike = RatePattern::Spike {
+            start_s: 10.0,
+            end_s: 20.0,
+            base: 0.2,
+            peak: 1.0,
+        };
+        assert!((spike.factor_at(0.0) - 0.2).abs() < 1e-12);
+        assert!((spike.factor_at(15.0) - 1.0).abs() < 1e-12);
+        assert!((spike.factor_at(20.0) - 0.2).abs() < 1e-12, "end exclusive");
+    }
+
+    #[test]
+    fn query_rate_follows_pattern() {
+        let q = query_profile("q11").unwrap().with_pattern(RatePattern::Spike {
+            start_s: 600.0,
+            end_s: 1200.0,
+            base: 0.25,
+            peak: 1.0,
+        });
+        assert!((q.rate_at(0.0) - 80_000.0).abs() < 1e-6);
+        assert!((q.rate_at(900.0) - 320_000.0).abs() < 1e-6);
+        // Default profiles stay constant.
+        let c = query_profile("q11").unwrap();
+        assert_eq!(c.pattern, RatePattern::Constant);
+        assert!((c.rate_at(1e6) - c.target_rate).abs() < 1e-9);
     }
 }

@@ -285,6 +285,51 @@ mod tests {
     }
 
     #[test]
+    fn resize_grows_then_shrinks_under_churn() {
+        // The vertical-scaling path: a level bump doubles the cache, a
+        // reclamation halves it — while lookups and inserts keep flowing.
+        let probe = make_block(0, 1000);
+        let size = probe.size_bytes();
+        let mut c = BlockCache::new(size * 2);
+        for i in 0..8u32 {
+            c.insert((0, i), make_block(i, 1000));
+            let _ = c.get(&(0, i));
+        }
+        assert!(c.len() <= 2);
+        let evictions_small = c.evictions();
+        assert!(evictions_small >= 6, "small cache churns: {evictions_small}");
+
+        // Grow (scale-up): the same churn now fits without evictions.
+        c.resize(size * 16);
+        assert_eq!(c.capacity_bytes(), size * 16);
+        c.reset_stats();
+        for i in 0..8u32 {
+            c.insert((1, i), make_block(i, 1000));
+            let _ = c.get(&(1, i));
+        }
+        assert_eq!(c.evictions(), 0, "oversized cache stops evicting");
+        assert_eq!(c.hits(), 8);
+        assert!(c.used_bytes() <= c.capacity_bytes());
+
+        // Shrink (reclamation): evicts down to the new capacity in LRU
+        // order, keeping the most recently touched blocks.
+        let _ = c.get(&(1, 6));
+        let _ = c.get(&(1, 7));
+        c.resize(size * 2);
+        assert!(c.used_bytes() <= c.capacity_bytes());
+        assert!(c.len() <= 2);
+        assert!(c.contains(&(1, 6)) && c.contains(&(1, 7)), "MRU survives");
+
+        // Churn continues correctly after the shrink.
+        c.reset_stats();
+        for i in 0..4u32 {
+            c.insert((2, i), make_block(i, 1000));
+        }
+        assert!(c.used_bytes() <= c.capacity_bytes());
+        assert!(c.get(&(2, 3)).is_some());
+    }
+
+    #[test]
     fn invalidate_table_drops_only_that_table() {
         let mut c = BlockCache::new(1 << 20);
         c.insert((1, 0), make_block(0, 10));

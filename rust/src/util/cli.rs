@@ -46,6 +46,29 @@ impl Args {
         Self::parse_from(std::env::args().skip(1))
     }
 
+    /// The subcommand: first positional argument, if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Copy an option into `target` when present (for layering CLI
+    /// overrides on top of a config file).
+    pub fn override_str(&self, name: &str, target: &mut String) {
+        if let Some(v) = self.get(name) {
+            *target = v.to_string();
+        }
+    }
+
+    /// Parse an option into `target` when present; panics loudly on a
+    /// malformed value, like [`Args::get_parse`].
+    pub fn override_parse<T: std::str::FromStr>(&self, name: &str, target: &mut T) {
+        if let Some(s) = self.get(name) {
+            *target = s
+                .parse()
+                .unwrap_or_else(|_| panic!("invalid value for --{name}: {s:?}"));
+        }
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -118,5 +141,21 @@ mod tests {
     fn last_occurrence_wins() {
         let a = parse(&["--n=1", "--n=2"]);
         assert_eq!(a.get("n"), Some("2"));
+    }
+
+    #[test]
+    fn subcommand_and_overrides() {
+        let a = parse(&["scenario", "--pattern=spike", "--peak", "1.5"]);
+        assert_eq!(a.subcommand(), Some("scenario"));
+        let mut pattern = "constant".to_string();
+        a.override_str("pattern", &mut pattern);
+        assert_eq!(pattern, "spike");
+        let mut peak = 1.0f64;
+        a.override_parse("peak", &mut peak);
+        assert!((peak - 1.5).abs() < 1e-12);
+        // Absent options leave the target untouched.
+        let mut base = 0.2f64;
+        a.override_parse("base", &mut base);
+        assert!((base - 0.2).abs() < 1e-12);
     }
 }

@@ -109,7 +109,7 @@ fn sim_final_configs_are_placeable() {
                     let s = trace.final_assignment.get(&o.name);
                     let managed = match s.memory_level {
                         None => 0,
-                        Some(l) => 158u64 << l,
+                        Some(l) => c.managed_mb_for_level(l),
                     };
                     (0..s.parallelism).map(move |i| justin::placement::SlotRequest {
                         op_name: o.name.clone(),
@@ -122,7 +122,11 @@ fn sim_final_configs_are_placeable() {
             let placement = cluster
                 .place(&reqs)
                 .unwrap_or_else(|e| panic!("{q} ({policy_is_justin}): {e}"));
-            let (cores, _) = resources(&profile, &trace.final_assignment);
+            let (cores, _) = resources(
+                &profile,
+                &trace.final_assignment,
+                c.cluster.managed_mb_per_slot,
+            );
             assert_eq!(placement.total_cores(), cores);
         }
     }
