@@ -72,8 +72,16 @@ fn main() {
     cfg.sim.duration_s = 2700;
     let mut ok = true;
     println!(
-        "{:<10} {:<5} {:<7} {:>6} {:>10} {:>14} {:>14}",
-        "scenario", "query", "policy", "steps", "converged", "core·s", "mem MB·s"
+        "{:<10} {:<5} {:<7} {:>6} {:>12} {:>10} {:>10} {:>14} {:>14}",
+        "scenario",
+        "query",
+        "policy",
+        "steps",
+        "tier i/p/f",
+        "downtime",
+        "converged",
+        "core·s",
+        "mem MB·s"
     );
     for (name, query, pattern) in scenarios() {
         let mut mbs = [0.0f64; 2];
@@ -82,12 +90,15 @@ fn main() {
             let (trace, stats) = bench_once(&format!("{name}/{query}/{label}"), || {
                 run(query, &pattern, is_justin, &cfg)
             });
+            let (t_in, t_part, t_full) = trace.tier_counts();
             println!(
-                "{:<10} {:<5} {:<7} {:>6} {:>10} {:>14.0} {:>14.0}   ({:.0} ms)",
+                "{:<10} {:<5} {:<7} {:>6} {:>12} {:>9.0}s {:>10} {:>14.0} {:>14.0}   ({:.0} ms)",
                 name,
                 query,
                 label,
                 trace.steps(),
+                format!("{t_in}/{t_part}/{t_full}"),
+                trace.total_downtime_s(),
                 trace
                     .converged_at_s
                     .map(|t| format!("{t:.0}s"))

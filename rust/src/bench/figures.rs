@@ -213,9 +213,12 @@ impl Fig5Summary {
                 .find(|p| p.rate > 0.0)
                 .map(|p| p.rate)
                 .unwrap_or(0.0);
+            let (t_in, t_part, t_full) = trace.tier_counts();
             println!(
-                "  {label}: steps={} converged={} final_rate={:.0} cores={} mem={} MB  finals: {}",
+                "  {label}: steps={} tiers(i/p/f)={t_in}/{t_part}/{t_full} \
+                 downtime={:.0}s converged={} final_rate={:.0} cores={} mem={} MB  finals: {}",
                 trace.steps(),
+                trace.total_downtime_s(),
                 trace
                     .converged_at_s
                     .map(|t| format!("{t:.0}s"))

@@ -204,8 +204,15 @@ pub struct SimConfig {
     pub get_miss_us: f64,
     /// LSM put (memtable insert amortised with flush/compaction), µs.
     pub put_us: f64,
-    /// Reconfiguration downtime (savepoint + redeploy), seconds.
+    /// Full-reconfiguration downtime (whole-job stop-with-savepoint +
+    /// redeploy), seconds.
     pub reconfig_downtime_s: f64,
+    /// Partial-reconfiguration downtime (single-operator stop + savepoint +
+    /// redeploy, rest of the job keeps running), seconds.
+    pub reconfig_downtime_partial_s: f64,
+    /// In-place reconfiguration downtime (live cache resize, zero task
+    /// restarts), seconds.
+    pub reconfig_downtime_inplace_s: f64,
 }
 
 impl Default for SimConfig {
@@ -218,6 +225,8 @@ impl Default for SimConfig {
             get_miss_us: 200.0,
             put_us: 44.0,
             reconfig_downtime_s: 10.0,
+            reconfig_downtime_partial_s: 6.0,
+            reconfig_downtime_inplace_s: 0.0,
         }
     }
 }
@@ -377,6 +386,8 @@ impl Config {
             "sim.get_miss_us",
             "sim.put_us",
             "sim.reconfig_downtime_s",
+            "sim.reconfig_downtime_partial_s",
+            "sim.reconfig_downtime_inplace_s",
             "scenario.query",
             "scenario.pattern",
             "scenario.base",
@@ -493,6 +504,16 @@ impl Config {
             "sim.reconfig_downtime_s",
             c.sim.reconfig_downtime_s
         );
+        get_f64!(
+            doc,
+            "sim.reconfig_downtime_partial_s",
+            c.sim.reconfig_downtime_partial_s
+        );
+        get_f64!(
+            doc,
+            "sim.reconfig_downtime_inplace_s",
+            c.sim.reconfig_downtime_inplace_s
+        );
 
         if let Some(v) = doc.get("scenario.query") {
             c.scenario.query = v
@@ -576,6 +597,17 @@ impl Config {
         }
         if self.engine.key_groups == 0 {
             bail!("key_groups must be positive");
+        }
+        if self.sim.reconfig_downtime_inplace_s < 0.0
+            || self.sim.reconfig_downtime_inplace_s > self.sim.reconfig_downtime_partial_s
+            || self.sim.reconfig_downtime_partial_s > self.sim.reconfig_downtime_s
+        {
+            bail!(
+                "reconfig downtimes must satisfy 0 <= in-place ({}) <= partial ({}) <= full ({})",
+                self.sim.reconfig_downtime_inplace_s,
+                self.sim.reconfig_downtime_partial_s,
+                self.sim.reconfig_downtime_s
+            );
         }
         Ok(())
     }
@@ -689,6 +721,24 @@ mod tests {
         )
         .unwrap();
         assert!(Config::from_toml(&doc).is_ok());
+    }
+
+    #[test]
+    fn reconfig_downtimes_parse_and_must_be_tier_ordered() {
+        let doc = super::super::parse_toml(
+            "[sim]\nreconfig_downtime_s = 12.0\nreconfig_downtime_partial_s = 4.0\n\
+             reconfig_downtime_inplace_s = 0.5",
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert!((c.sim.reconfig_downtime_s - 12.0).abs() < 1e-9);
+        assert!((c.sim.reconfig_downtime_partial_s - 4.0).abs() < 1e-9);
+        assert!((c.sim.reconfig_downtime_inplace_s - 0.5).abs() < 1e-9);
+        // A partial redeploy can never cost more than a full restart.
+        let doc = super::super::parse_toml("[sim]\nreconfig_downtime_partial_s = 60.0").unwrap();
+        assert!(Config::from_toml(&doc).is_err(), "partial > full rejected");
+        let doc = super::super::parse_toml("[sim]\nreconfig_downtime_inplace_s = 7.0").unwrap();
+        assert!(Config::from_toml(&doc).is_err(), "in-place > partial rejected");
     }
 
     #[test]

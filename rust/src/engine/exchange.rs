@@ -167,6 +167,20 @@ impl OutputPartition {
             let _ = self.senders[dest].send((my_channel_id, Envelope::Eos));
         }
     }
+
+    /// Swap to a new set of downstream channels (a partial redeploy rescaled
+    /// the downstream operator). Pending buffers are flushed to the *old*
+    /// channels first so no record is lost or reordered, then the old
+    /// senders drop — once every producer swaps, the old channels disconnect
+    /// and the decommissioned tasks drain out. Returns blocked nanoseconds.
+    pub fn swap_senders(&mut self, my_channel_id: u32, senders: Vec<SyncSender<Tagged>>) -> u64 {
+        let blocked = self.flush(my_channel_id);
+        let n = senders.len();
+        self.senders = senders;
+        self.buffers = (0..n).map(|_| Vec::with_capacity(self.batch_size)).collect();
+        self.rr = 0;
+        blocked
+    }
 }
 
 /// Build channels for one edge: `upstream_p` producers × `downstream_p`
@@ -192,6 +206,11 @@ pub struct InputTracker {
     watermarks: std::collections::BTreeMap<u32, u64>,
     expected_channels: usize,
     eos_seen: std::collections::BTreeSet<u32>,
+    /// Channels retired by a partial redeploy upstream. Sticky: late
+    /// watermarks/EOS still queued from an old task must never re-enter the
+    /// bookkeeping (they would hold the watermark back or complete EOS
+    /// counting early).
+    retired: std::collections::BTreeSet<u32>,
     emitted_watermark: u64,
 }
 
@@ -201,13 +220,29 @@ impl InputTracker {
             watermarks: Default::default(),
             expected_channels,
             eos_seen: Default::default(),
+            retired: Default::default(),
             emitted_watermark: 0,
         }
+    }
+
+    /// An upstream operator was rescaled in place: drop its old channels
+    /// from the bookkeeping (remembering them as retired) and expect
+    /// `expected_channels` live channels from now on.
+    pub fn rewire(&mut self, retire: &[u32], expected_channels: usize) {
+        for ch in retire {
+            self.retired.insert(*ch);
+            self.watermarks.remove(ch);
+            self.eos_seen.remove(ch);
+        }
+        self.expected_channels = expected_channels;
     }
 
     /// Update with a channel watermark; returns `Some(wm)` if the combined
     /// (minimum) watermark advanced.
     pub fn on_watermark(&mut self, channel: u32, ts: u64) -> Option<u64> {
+        if self.retired.contains(&channel) {
+            return None;
+        }
         let entry = self.watermarks.entry(channel).or_insert(0);
         *entry = (*entry).max(ts);
         // The combined watermark only advances once every channel reported.
@@ -226,6 +261,9 @@ impl InputTracker {
     /// Mark a channel as finished; EOS'd channels no longer hold the
     /// watermark back. Returns true when all channels are done.
     pub fn on_eos(&mut self, channel: u32) -> bool {
+        if self.retired.contains(&channel) {
+            return self.is_done();
+        }
         self.eos_seen.insert(channel);
         self.watermarks.insert(channel, u64::MAX);
         self.eos_seen.len() >= self.expected_channels
@@ -382,6 +420,55 @@ mod tests {
         assert_eq!(t.on_watermark(1, 80), Some(80)); // min(100,80)
         assert_eq!(t.on_watermark(1, 90), Some(90));
         assert_eq!(t.on_watermark(1, 200), Some(100)); // capped by ch0
+    }
+
+    #[test]
+    fn swap_senders_flushes_old_then_routes_to_new() {
+        let (old_tx, old_rx) = build_edge_channels(1, 16);
+        let mut out = OutputPartition::new(old_tx, Partitioning::Rebalance, 0, 128, 8);
+        out.emit(3, kv(1)); // buffered, below batch size
+        let (new_tx, new_rx) = build_edge_channels(2, 16);
+        out.swap_senders(3, new_tx);
+        // The buffered record went to the OLD channel (no loss, no reorder).
+        match old_rx[0].try_recv() {
+            Ok((3, Envelope::Batch { records, .. })) => assert_eq!(records.len(), 1),
+            other => panic!("{other:?}"),
+        }
+        // New emissions spread over the new channels.
+        for i in 0..4u64 {
+            out.emit(3, kv(i));
+        }
+        out.flush(3);
+        let n: usize = new_rx
+            .iter()
+            .map(|rx| {
+                let mut n = 0;
+                while let Ok((_, Envelope::Batch { records, .. })) = rx.try_recv() {
+                    n += records.len();
+                }
+                n
+            })
+            .sum();
+        assert_eq!(n, 4);
+    }
+
+    #[test]
+    fn rewire_retires_stale_channels_stickily() {
+        // D had one upstream channel (id 5); a partial redeploy replaces it
+        // with two new channels (ids 9, 10).
+        let mut t = InputTracker::new(1);
+        assert_eq!(t.on_watermark(5, 100), Some(100));
+        t.rewire(&[5], 2);
+        // Stale traffic from the old channel is ignored — even EOS.
+        assert_eq!(t.on_watermark(5, 500), None);
+        assert!(!t.on_eos(5), "stale EOS must not complete the input");
+        assert!(!t.is_done());
+        // The watermark resumes once both new channels report, and cannot
+        // go backwards.
+        assert_eq!(t.on_watermark(9, 150), None);
+        assert_eq!(t.on_watermark(10, 120), Some(120));
+        assert!(!t.on_eos(9));
+        assert!(t.on_eos(10), "both new channels done completes the input");
     }
 
     #[test]

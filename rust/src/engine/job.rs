@@ -3,21 +3,22 @@
 
 use super::exchange::{build_edge_channels, InputTracker, OutputPartition, Tagged};
 use super::operators::{Operator, Source};
-use super::savepoint::{Savepoint, TaskRestore};
-use super::task::{TaskExport, TaskHarness, TaskKind, TaskMetrics};
+use super::savepoint::{OperatorState, Savepoint, TaskRestore};
+use super::task::{ControlMsg, TaskExport, TaskHarness, TaskKind, TaskMetrics};
 use crate::config::Config;
-use crate::graph::{LogicalGraph, OpKind, PhysicalPlan, ScalingAssignment};
+use crate::graph::{LogicalGraph, LogicalOp, OpId, OpKind, PhysicalPlan, ScalingAssignment};
 use crate::metrics::{names, MetricId, Registry};
 use crate::placement::{Cluster, Placement};
 use crate::state::lsm::{Db, DbMetricHooks, DbOptions};
 use crate::state::{HeapBackend, LsmBackend, StateBackend};
 use anyhow::{Context, Result};
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::SyncSender;
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Creates operator instances for one logical operator. Receives
 /// `(subtask, parallelism)` so instances can shard their work.
@@ -67,16 +68,47 @@ impl StreamJob {
     }
 }
 
+/// One live task thread plus its control-plane handle.
+struct TaskSlot {
+    handle: JoinHandle<Result<TaskExport>>,
+    control: Sender<ControlMsg>,
+    /// Globally unique exchange channel id this task stamps on its output.
+    channel_id: u32,
+}
+
+/// Timing breakdown of a partial (single-operator) redeploy.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PartialRedeploy {
+    /// Keyed entries exported from the decommissioned tasks.
+    pub savepoint_entries: usize,
+    /// Time to drain and export the old tasks.
+    pub savepoint: Duration,
+    /// Additional time to spawn the new tasks with restored fragments.
+    pub restore: Duration,
+    /// Additional time to retire the old channels downstream.
+    pub rewire: Duration,
+}
+
+impl PartialRedeploy {
+    pub fn total(&self) -> Duration {
+        self.savepoint + self.restore + self.rewire
+    }
+}
+
 /// A deployed, running job.
 pub struct RunningJob {
     pub plan: PhysicalPlan,
     pub placement: Placement,
     pub registry: Registry,
-    handles: Vec<JoinHandle<Result<TaskExport>>>,
+    tasks: BTreeMap<String, Vec<TaskSlot>>,
     stop: Arc<AtomicBool>,
-    /// Senders kept alive so late-joining tasks never see a disconnect
-    /// before EOS (dropped on stop).
-    _senders: Vec<Vec<SyncSender<Tagged>>>,
+    /// Inbound senders per operator, kept alive so late-joining tasks never
+    /// see a disconnect before EOS (dropped on stop, swapped on partial
+    /// redeploy).
+    senders: BTreeMap<String, Vec<SyncSender<Tagged>>>,
+    /// Next unassigned exchange channel id — partial redeploys keep channel
+    /// ids globally unique across epochs.
+    next_channel_id: u32,
 }
 
 impl RunningJob {
@@ -91,10 +123,11 @@ impl RunningJob {
     /// the savepoint. Never returns for unbounded sources — use
     /// [`stop_with_savepoint`](Self::stop_with_savepoint) for those.
     pub fn wait_drained(self) -> Result<Savepoint> {
-        drop(self._senders);
+        drop(self.senders);
         let mut savepoint = Savepoint::default();
-        for handle in self.handles {
-            let export = handle
+        for slot in self.tasks.into_values().flatten() {
+            let export = slot
+                .handle
                 .join()
                 .map_err(|e| anyhow::anyhow!("task panicked: {e:?}"))??;
             savepoint.merge_task_export(&export.op_name.clone(), export.state);
@@ -104,7 +137,30 @@ impl RunningJob {
 
     /// Is any task thread still running?
     pub fn is_running(&self) -> bool {
-        self.handles.iter().any(|h| !h.is_finished())
+        self.tasks
+            .values()
+            .flatten()
+            .any(|s| !s.handle.is_finished())
+    }
+
+    /// Send a live managed-memory resize to every task of `op` — the
+    /// in-place reconfiguration tier: zero restarts, the LSM backends
+    /// re-split their budget at the next control poll. Returns how many
+    /// tasks accepted the message.
+    pub fn resize_memory(&self, op: &str, managed_mb: u64) -> usize {
+        self.tasks
+            .get(op)
+            .map(|slots| {
+                slots
+                    .iter()
+                    .filter(|s| {
+                        s.control
+                            .send(ControlMsg::ResizeMemory { managed_mb })
+                            .is_ok()
+                    })
+                    .count()
+            })
+            .unwrap_or(0)
     }
 
     /// Current value of a counter summed over an operator's tasks.
@@ -194,14 +250,14 @@ impl JobManager {
         }
 
         let stop = Arc::new(AtomicBool::new(false));
-        let mut handles = Vec::new();
+        let mut tasks: BTreeMap<String, Vec<TaskSlot>> = BTreeMap::new();
         let mut channel_id: u32 = 0;
         for op in &graph.ops {
             let p = plan.op_parallelism(op.id);
             let managed_mb = plan.managed_mb[op.id];
-            let mut receivers: Vec<_> =
-                std::mem::take(&mut op_receivers[op.id]).into_iter().collect();
+            let mut receivers = std::mem::take(&mut op_receivers[op.id]);
             receivers.reverse(); // pop() gives subtask 0 first
+            let mut slots = Vec::with_capacity(p as usize);
             for subtask in 0..p {
                 let my_channel = channel_id;
                 channel_id += 1;
@@ -219,36 +275,11 @@ impl JobManager {
                         )
                     })
                     .collect();
-                // State backend.
-                let state: Box<dyn StateBackend> = if op.stateful && managed_mb > 0 {
-                    let dir = self.state_root.join(format!(
-                        "epoch{}/{}/{}",
-                        self.epoch, op.name, subtask
-                    ));
-                    let opts = DbOptions::for_managed_memory(dir, managed_mb);
-                    let mut db = Db::open(opts)?;
-                    let id = |n: &str| {
-                        MetricId::new(n).with("op", &op.name).with("task", subtask)
-                    };
-                    db.set_hooks(DbMetricHooks {
-                        cache_hit: Some(registry.counter(id(names::STATE_CACHE_HIT))),
-                        cache_miss: Some(registry.counter(id(names::STATE_CACHE_MISS))),
-                        access_ns: Some(registry.histo(id(names::STATE_ACCESS_NS))),
-                        state_bytes: Some(registry.gauge(id(names::STATE_SIZE_BYTES))),
-                    });
-                    Box::new(LsmBackend::new(db))
-                } else {
-                    Box::new(HeapBackend::new())
-                };
                 // Restore fragment.
                 let restore = savepoint
                     .and_then(|sp| sp.operator(&op.name))
                     .map(|st| st.fragment_for(cfg.engine.key_groups, p, subtask))
                     .unwrap_or_default();
-                let kind = match &job.factories[op.id] {
-                    OpFactory::Source(f) => TaskKind::Source(f(subtask, p)),
-                    OpFactory::Transform(f) => TaskKind::Transform(f(subtask, p)),
-                };
                 let input = if op.kind == OpKind::Source {
                     None
                 } else {
@@ -257,39 +288,288 @@ impl JobManager {
                         InputTracker::new(in_channels[op.id]),
                     ))
                 };
-                let harness = TaskHarness {
-                    channel_id: my_channel,
-                    op_name: op.name.clone(),
+                slots.push(self.spawn_task(
+                    job,
+                    op,
                     subtask,
-                    kind,
+                    p,
+                    managed_mb,
+                    my_channel,
                     input,
                     outputs,
-                    state,
-                    key_groups: cfg.engine.key_groups,
-                    metrics: TaskMetrics::register(registry, &op.name, subtask),
-                    stop: stop.clone(),
-                    restore: TaskRestore {
-                        keyed: restore.keyed,
-                        aux: restore.aux,
-                    },
-                    flush_interval: Duration::from_millis(cfg.engine.flush_interval_ms),
-                };
-                let name = format!("{}-{}", op.name, subtask);
-                handles.push(
-                    std::thread::Builder::new()
-                        .name(name)
-                        .spawn(move || harness.run())
-                        .context("spawning task thread")?,
-                );
+                    registry,
+                    restore,
+                    stop.clone(),
+                )?);
             }
+            tasks.insert(op.name.clone(), slots);
         }
+        let senders = graph
+            .ops
+            .iter()
+            .map(|op| (op.name.clone(), std::mem::take(&mut op_senders[op.id])))
+            .collect();
         Ok(RunningJob {
             plan,
             placement,
             registry: registry.clone(),
-            handles,
+            tasks,
             stop,
-            _senders: op_senders,
+            senders,
+            next_channel_id: channel_id,
+        })
+    }
+
+    /// Build the state backend, operator instance, metrics, and control
+    /// channel for one task, then spawn its thread.
+    #[allow(clippy::too_many_arguments)]
+    fn spawn_task(
+        &self,
+        job: &StreamJob,
+        op: &LogicalOp,
+        subtask: u32,
+        parallelism: u32,
+        managed_mb: u64,
+        channel_id: u32,
+        input: Option<(Receiver<Tagged>, InputTracker)>,
+        outputs: Vec<OutputPartition>,
+        registry: &Registry,
+        restore: TaskRestore,
+        stop: Arc<AtomicBool>,
+    ) -> Result<TaskSlot> {
+        let cfg = &self.config;
+        let state: Box<dyn StateBackend> = if op.stateful && managed_mb > 0 {
+            let dir = self
+                .state_root
+                .join(format!("epoch{}/{}/{}", self.epoch, op.name, subtask));
+            let opts = DbOptions::for_managed_memory(dir, managed_mb);
+            let mut db = Db::open(opts)?;
+            let id = |n: &str| MetricId::new(n).with("op", &op.name).with("task", subtask);
+            db.set_hooks(DbMetricHooks {
+                cache_hit: Some(registry.counter(id(names::STATE_CACHE_HIT))),
+                cache_miss: Some(registry.counter(id(names::STATE_CACHE_MISS))),
+                access_ns: Some(registry.histo(id(names::STATE_ACCESS_NS))),
+                state_bytes: Some(registry.gauge(id(names::STATE_SIZE_BYTES))),
+            });
+            Box::new(LsmBackend::new(db))
+        } else {
+            Box::new(HeapBackend::new())
+        };
+        let kind = match &job.factories[op.id] {
+            OpFactory::Source(f) => TaskKind::Source(f(subtask, parallelism)),
+            OpFactory::Transform(f) => TaskKind::Transform(f(subtask, parallelism)),
+        };
+        let (control_tx, control_rx) = std::sync::mpsc::channel();
+        let harness = TaskHarness {
+            channel_id,
+            op_name: op.name.clone(),
+            subtask,
+            kind,
+            input,
+            outputs,
+            state,
+            key_groups: cfg.engine.key_groups,
+            metrics: TaskMetrics::register(registry, &op.name, subtask),
+            stop,
+            restore,
+            flush_interval: Duration::from_millis(cfg.engine.flush_interval_ms),
+            control: control_rx,
+        };
+        let name = format!("{}-{}", op.name, subtask);
+        let handle = std::thread::Builder::new()
+            .name(name)
+            .spawn(move || harness.run())
+            .context("spawning task thread")?;
+        Ok(TaskSlot {
+            handle,
+            control: control_tx,
+            channel_id,
+        })
+    }
+
+    /// Recompute the physical plan and placement for a new assignment without
+    /// touching running tasks — used by in-place resizes, and as the first
+    /// (fallible) step of a partial redeploy so a placement failure cannot
+    /// leave the job half-decommissioned.
+    pub fn refresh_plan(
+        &self,
+        running: &mut RunningJob,
+        job: &StreamJob,
+        assignment: &ScalingAssignment,
+    ) -> Result<()> {
+        let plan = PhysicalPlan::build(
+            &job.graph,
+            assignment,
+            self.config.cluster.managed_mb_per_slot,
+        );
+        let placement = self
+            .cluster
+            .place(&plan.slot_requests())
+            .context("placing tasks on task managers")?;
+        running.plan = plan;
+        running.placement = placement;
+        Ok(())
+    }
+
+    /// Partial redeploy: stop, savepoint, and restart *one* non-source
+    /// operator under a new parallelism/memory level, leaving the rest of
+    /// the job running.
+    ///
+    /// Sequencing: (1) decommission the old tasks (drain without emitting
+    /// EOS), (2) swap every upstream output onto fresh channels — dropping
+    /// the last senders on the old channels lets the old tasks drain out and
+    /// exit, (3) join them and merge their state exports, (4) spawn the new
+    /// task set with redistributed fragments into the same cumulative
+    /// registry, (5) retire the old channel ids in every downstream input
+    /// tracker.
+    pub fn redeploy_op(
+        &mut self,
+        running: &mut RunningJob,
+        job: &StreamJob,
+        op_name: &str,
+        assignment: &ScalingAssignment,
+    ) -> Result<PartialRedeploy> {
+        let graph = &job.graph;
+        let op = graph
+            .ops
+            .iter()
+            .find(|o| o.name == op_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown operator {op_name}"))?;
+        anyhow::ensure!(
+            op.kind != OpKind::Source,
+            "cannot partially redeploy source {op_name}"
+        );
+        self.refresh_plan(running, job, assignment)?;
+        self.epoch += 1;
+        let cfg = &self.config;
+        let new_p = running.plan.op_parallelism(op.id);
+        let managed_mb = running.plan.managed_mb[op.id];
+        let t0 = Instant::now();
+
+        // 1. Decommission: the old tasks keep draining their inputs but will
+        // neither emit EOS nor a final watermark.
+        let old_slots = running.tasks.remove(op_name).unwrap_or_default();
+        for slot in &old_slots {
+            let _ = slot.control.send(ControlMsg::Decommission);
+        }
+
+        // 2. Fresh inbound exchange, swapped into every upstream task.
+        let (new_senders, new_receivers) =
+            build_edge_channels(new_p as usize, cfg.engine.channel_capacity);
+        let upstream_ids: std::collections::BTreeSet<OpId> =
+            op.inputs.iter().map(|(src, _)| *src).collect();
+        for src_id in upstream_ids {
+            let src_name = &graph.op(src_id).name;
+            for (output, (dst, _, _)) in graph.downstream(src_id).iter().enumerate() {
+                if *dst != op.id {
+                    continue;
+                }
+                if let Some(slots) = running.tasks.get(src_name) {
+                    for slot in slots {
+                        let _ = slot.control.send(ControlMsg::SwapOutput {
+                            output,
+                            senders: new_senders.clone(),
+                        });
+                    }
+                }
+            }
+        }
+        running.senders.insert(op_name.to_string(), new_senders);
+
+        // 3. Join the old tasks; their exports form the operator savepoint.
+        let mut exported = OperatorState::default();
+        let mut retired = Vec::with_capacity(old_slots.len());
+        for slot in old_slots {
+            retired.push(slot.channel_id);
+            let export = slot
+                .handle
+                .join()
+                .map_err(|e| anyhow::anyhow!("task panicked: {e:?}"))??;
+            exported.merge(export.state);
+        }
+        let savepoint_entries = exported.entry_count();
+        let t_savepoint = t0.elapsed();
+
+        // 4. Spawn the new task set, restoring redistributed fragments into
+        // the same (cumulative) registry.
+        let in_channels: usize = op
+            .inputs
+            .iter()
+            .map(|(src, _)| running.plan.op_parallelism(*src) as usize)
+            .sum();
+        let mut new_slots = Vec::with_capacity(new_p as usize);
+        for (subtask, receiver) in new_receivers.into_iter().enumerate() {
+            let subtask = subtask as u32;
+            let my_channel = running.next_channel_id;
+            running.next_channel_id += 1;
+            let outputs: Vec<OutputPartition> = graph
+                .downstream(op.id)
+                .into_iter()
+                .map(|(dst, partitioning, port)| {
+                    OutputPartition::new(
+                        running.senders[&graph.op(dst).name].clone(),
+                        partitioning,
+                        port,
+                        cfg.engine.key_groups,
+                        cfg.engine.batch_size,
+                    )
+                })
+                .collect();
+            let restore = exported.fragment_for(cfg.engine.key_groups, new_p, subtask);
+            let input = Some((receiver, InputTracker::new(in_channels)));
+            new_slots.push(self.spawn_task(
+                job,
+                op,
+                subtask,
+                new_p,
+                managed_mb,
+                my_channel,
+                input,
+                outputs,
+                &running.registry,
+                restore,
+                running.stop.clone(),
+            )?);
+        }
+        running.tasks.insert(op_name.to_string(), new_slots);
+        // Scale-down hygiene: dead subtasks' state-size gauges would pollute
+        // per-operator sums forever. Counters are kept — their deltas go to
+        // zero, and operator totals stay cumulative across the redeploy.
+        running.registry.retain(|id| {
+            id.name != names::STATE_SIZE_BYTES
+                || id.label("op") != Some(op_name)
+                || id
+                    .label("task")
+                    .and_then(|t| t.parse::<u32>().ok())
+                    .map(|t| t < new_p)
+                    .unwrap_or(true)
+        });
+        let t_restore = t0.elapsed();
+
+        // 5. Retire the old channels in every downstream tracker and set the
+        // new expected channel count.
+        for (dst, _, _) in graph.downstream(op.id) {
+            let d_op = graph.op(dst);
+            let expected: usize = d_op
+                .inputs
+                .iter()
+                .map(|(src, _)| running.plan.op_parallelism(*src) as usize)
+                .sum();
+            if let Some(slots) = running.tasks.get(&d_op.name) {
+                for slot in slots {
+                    let _ = slot.control.send(ControlMsg::RewireInput {
+                        retire: retired.clone(),
+                        expected,
+                    });
+                }
+            }
+        }
+        let t_rewire = t0.elapsed();
+        Ok(PartialRedeploy {
+            savepoint_entries,
+            savepoint: t_savepoint,
+            restore: t_restore.saturating_sub(t_savepoint),
+            rewire: t_rewire.saturating_sub(t_restore),
         })
     }
 }
@@ -537,6 +817,104 @@ mod tests {
         // restored window and run 1 fired most.
         assert!(fired_run1 > 0, "run1 fired nothing");
         assert!(fired_run2 > 0, "run2 must fire restored windows");
+    }
+
+    #[test]
+    fn partial_redeploy_rescales_one_operator_without_stopping_the_job() {
+        // src → count (stateful, hash-partitioned) → sink, with a window so
+        // large it never fires: every key lives in count's state until the
+        // final savepoint, so entry counts expose loss or duplication.
+        let mut graph = LogicalGraph::new("livejob");
+        let src = graph.add_op("src", OpKind::Source, false, vec![], 1);
+        let count = graph.add_op(
+            "count",
+            OpKind::Transform,
+            true,
+            vec![(
+                src,
+                Partitioning::Hash(Arc::new(|r: &Record| match r {
+                    Record::Pair { key, .. } => *key,
+                    _ => 0,
+                })),
+            )],
+            1,
+        );
+        graph.add_op(
+            "sink",
+            OpKind::Sink,
+            false,
+            vec![(count, Partitioning::Rebalance)],
+            1,
+        );
+        struct EndlessSource {
+            next: u64,
+        }
+        impl Source for EndlessSource {
+            fn poll(&mut self, max: usize) -> SourceBatch {
+                let out = (0..max.min(64))
+                    .map(|_| {
+                        let i = self.next;
+                        self.next += 1;
+                        Record::Pair {
+                            key: i % 50,
+                            value: 1,
+                            ts: i,
+                        }
+                    })
+                    .collect();
+                SourceBatch::Records(out)
+            }
+            fn watermark(&self) -> u64 {
+                self.next.saturating_sub(1)
+            }
+        }
+        let job = StreamJob {
+            graph,
+            factories: vec![
+                OpFactory::source(|_, _| Box::new(EndlessSource { next: 0 }) as _),
+                OpFactory::transform(|_, _| {
+                    Box::new(KeyedWindowAggregate::new(
+                        |r| match r {
+                            Record::Pair { key, .. } => *key,
+                            _ => 0,
+                        },
+                        WindowAssigner::Tumbling { size_ms: 1 << 40 },
+                        CountAggregator,
+                    ))
+                }),
+                OpFactory::transform(|_, _| Box::new(SinkOp)),
+            ],
+        };
+        let mut jm = JobManager::new(test_config());
+        let registry = Registry::new();
+        let mut assignment = ScalingAssignment::initial(&job.graph);
+        let mut running = jm.deploy(&job, &assignment, &registry, None).unwrap();
+        std::thread::sleep(Duration::from_millis(120));
+
+        assignment.set("count", OpScaling::new(2, Some(0)));
+        let rd = jm
+            .redeploy_op(&mut running, &job, "count", &assignment)
+            .unwrap();
+        assert!(
+            rd.savepoint_entries > 0,
+            "old task must export mid-stream state"
+        );
+        assert_eq!(running.plan.op_parallelism(count), 2);
+
+        // The rest of the job never stopped: the source keeps emitting.
+        let before = running.op_counter("src", names::RECORDS_OUT);
+        std::thread::sleep(Duration::from_millis(150));
+        let after = running.op_counter("src", names::RECORDS_OUT);
+        assert!(running.is_running());
+        assert!(
+            after > before,
+            "source stalled across partial redeploy ({before} → {after})"
+        );
+
+        // Drain: both new count tasks deliver EOS downstream, and the final
+        // savepoint holds every key exactly once.
+        let sp = running.stop_with_savepoint().unwrap();
+        assert_eq!(sp.operator("count").unwrap().entry_count(), 50);
     }
 
     #[test]

@@ -26,8 +26,8 @@ pub mod task;
 pub mod window;
 pub mod xla_op;
 
-pub use controller::{autoscale_live, LiveReconfig, LiveReport};
-pub use job::{JobManager, OpFactory, RunningJob, StreamJob};
+pub use controller::{autoscale_live, DowntimeBreakdown, LiveReconfig, LiveReport};
+pub use job::{JobManager, OpFactory, PartialRedeploy, RunningJob, StreamJob};
 pub use operators::{
     AccessMode, Aggregator, CountAggregator, FlatMapOp, IncrementalJoinOp, KeyedWindowAggregate,
     KvStoreOp, MapOp, OpCtx, Operator, SinkOp, Source, SourceBatch, SumPriceAggregator,
@@ -36,5 +36,6 @@ pub use operators::{
 pub use savepoint::{OperatorState, Savepoint, TaskRestore};
 pub use scrape::Scraper;
 pub use sources::RateLimitedSource;
+pub use task::{ControlMsg, IdleBackoff};
 pub use window::{Window, WindowAssigner};
 pub use xla_op::{XlaCurrencyMapOp, XlaWindowCountOp};

@@ -131,6 +131,45 @@ mod tests {
         });
     }
 
+    /// Re-assemble an operator export from task fragments, the way the job
+    /// manager does when the new tasks later savepoint again.
+    fn reexport(frags: Vec<TaskRestore>) -> OperatorState {
+        let mut st = OperatorState::default();
+        for frag in frags {
+            for (k, v) in frag.keyed {
+                let (group, _) = crate::state::split_state_key(&k).unwrap();
+                st.keyed.entry(group).or_default().push((k, v));
+            }
+        }
+        st
+    }
+
+    #[test]
+    fn rescale_roundtrip_2_3_2_preserves_entries_bytewise() {
+        prop(50, |g| {
+            let num_groups = 128;
+            let keys: Vec<u64> = (0..g.usize(1..300)).map(|_| g.u64(0..10_000)).collect();
+            let original = export_for_keys(&keys, num_groups);
+            let flat = |st: &OperatorState| -> BTreeMap<Vec<u8>, Vec<u8>> {
+                st.keyed.values().flatten().cloned().collect()
+            };
+            let mut st = original.clone();
+            for p in [2u32, 3, 2] {
+                st = reexport(
+                    (0..p)
+                        .map(|task| st.fragment_for(num_groups, p, task))
+                        .collect(),
+                );
+            }
+            assert_eq!(st.entry_count(), original.entry_count());
+            assert_eq!(
+                flat(&st),
+                flat(&original),
+                "2→3→2 redistribution must preserve every entry byte-for-byte"
+            );
+        });
+    }
+
     #[test]
     fn merge_combines_sibling_exports() {
         let mut a = export_for_keys(&[1, 2, 3], 128);

@@ -95,10 +95,14 @@ mod tests {
         });
         let t0 = Instant::now();
         let mut n = 0u64;
+        let mut backoff = super::super::task::IdleBackoff::default();
         while t0.elapsed().as_millis() < 50 {
             match src.poll(256) {
-                SourceBatch::Records(r) => n += r.len() as u64,
-                SourceBatch::Idle => std::thread::sleep(std::time::Duration::from_micros(100)),
+                SourceBatch::Records(r) => {
+                    n += r.len() as u64;
+                    backoff.reset();
+                }
+                SourceBatch::Idle => backoff.wait(),
                 SourceBatch::Exhausted => break,
             }
         }

@@ -9,9 +9,73 @@ use crate::metrics::{names, Counter, MetricId, Registry};
 use crate::state::{split_state_key, StateBackend};
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Out-of-band control-plane messages delivered to a running task (polled
+/// once per processing-loop iteration, so they land within one flush
+/// interval). These are what make reconfigurations cheaper than a restart:
+/// an in-place memory resize touches only the state backend, and a partial
+/// redeploy re-wires a task's exchanges while it keeps processing.
+pub enum ControlMsg {
+    /// In-place vertical scaling: re-apply a managed-memory budget (MB) to
+    /// the task's state backend. No restart, no savepoint.
+    ResizeMemory { managed_mb: u64 },
+    /// The downstream operator of output partition `output` was rescaled:
+    /// flush pending buffers to the old channels, then send to these.
+    SwapOutput {
+        output: usize,
+        senders: Vec<SyncSender<Tagged>>,
+    },
+    /// An upstream operator was rescaled: drop its `retire`d channels from
+    /// the watermark/EOS bookkeeping and expect `expected` live channels.
+    RewireInput { retire: Vec<u32>, expected: usize },
+    /// This task is being replaced by a partial redeploy: drain and export
+    /// state when the input disconnects, but do NOT propagate EOS (the
+    /// downstream operators keep running).
+    Decommission,
+}
+
+/// Exponential idle backoff for the engine's poll loops: starts at 50 µs
+/// and doubles to a 1 ms cap, then resets on work. Idle tasks stop burning
+/// CPU (which would skew the busy/idle ratios the policy reads) while
+/// reaction latency stays bounded by the cap.
+#[derive(Debug, Clone)]
+pub struct IdleBackoff {
+    next: Duration,
+}
+
+impl IdleBackoff {
+    pub const FLOOR: Duration = Duration::from_micros(50);
+    pub const CAP: Duration = Duration::from_millis(1);
+
+    pub fn new() -> Self {
+        Self { next: Self::FLOOR }
+    }
+
+    /// Sleep for the current backoff, then double it (capped).
+    pub fn wait(&mut self) {
+        std::thread::sleep(self.next);
+        self.next = (self.next * 2).min(Self::CAP);
+    }
+
+    /// Work arrived: back to the floor.
+    pub fn reset(&mut self) {
+        self.next = Self::FLOOR;
+    }
+
+    /// Current sleep the next `wait` would take.
+    pub fn current(&self) -> Duration {
+        self.next
+    }
+}
+
+impl Default for IdleBackoff {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 /// Shared per-task counters (registered in the metrics registry).
 #[derive(Clone)]
@@ -61,6 +125,8 @@ pub struct TaskHarness {
     pub restore: TaskRestore,
     /// How often to flush partial output buffers / emit source watermarks.
     pub flush_interval: Duration,
+    /// Control-plane channel (live resizes, exchange re-wiring, decommission).
+    pub control: Receiver<ControlMsg>,
 }
 
 /// What a finished task hands back to the job manager.
@@ -93,6 +159,38 @@ fn emit_all(
 }
 
 impl TaskHarness {
+    /// Drain all pending control messages. Called once per loop iteration in
+    /// both task loops (an associated fn because the transform loop has the
+    /// tracker moved out of `self`). Returns nanoseconds spent blocked while
+    /// flushing during an output swap.
+    fn poll_control(
+        control: &Receiver<ControlMsg>,
+        outputs: &mut [OutputPartition],
+        state: &mut dyn StateBackend,
+        mut tracker: Option<&mut InputTracker>,
+        channel_id: u32,
+        decommissioned: &mut bool,
+    ) -> u64 {
+        let mut blocked = 0u64;
+        while let Ok(msg) = control.try_recv() {
+            match msg {
+                ControlMsg::ResizeMemory { managed_mb } => state.resize_managed(managed_mb),
+                ControlMsg::SwapOutput { output, senders } => {
+                    if let Some(out) = outputs.get_mut(output) {
+                        blocked += out.swap_senders(channel_id, senders);
+                    }
+                }
+                ControlMsg::RewireInput { retire, expected } => {
+                    if let Some(t) = tracker.as_deref_mut() {
+                        t.rewire(&retire, expected);
+                    }
+                }
+                ControlMsg::Decommission => *decommissioned = true,
+            }
+        }
+        blocked
+    }
+
     /// Run the task to completion (EOS or stop); returns the state export.
     pub fn run(mut self) -> Result<TaskExport> {
         // Restore keyed state + operator bookkeeping.
@@ -114,14 +212,26 @@ impl TaskHarness {
             unreachable!()
         };
         let mut last_flush = Instant::now();
+        let mut backoff = IdleBackoff::new();
+        let mut decommissioned = false;
         loop {
             if self.stop.load(Ordering::Relaxed) {
                 break;
             }
+            let bp_ctl = Self::poll_control(
+                &self.control,
+                &mut self.outputs,
+                self.state.as_mut(),
+                None,
+                self.channel_id,
+                &mut decommissioned,
+            );
+            self.metrics.backpressure_ns.add(bp_ctl);
             let t0 = Instant::now();
             let batch = source.poll(256);
             match batch {
                 SourceBatch::Records(records) => {
+                    backoff.reset();
                     let gen_ns = t0.elapsed().as_nanos() as u64;
                     self.metrics.records_in.add(records.len() as u64);
                     let mut bp = 0u64;
@@ -138,7 +248,7 @@ impl TaskHarness {
                         .add(gen_ns + emit_ns.saturating_sub(bp));
                 }
                 SourceBatch::Idle => {
-                    std::thread::sleep(Duration::from_micros(200));
+                    backoff.wait();
                     self.metrics
                         .idle_ns
                         .add(t0.elapsed().as_nanos() as u64);
@@ -155,11 +265,14 @@ impl TaskHarness {
                 self.metrics.backpressure_ns.add(bp);
             }
         }
-        // Final watermark then EOS.
-        let wm = source.watermark();
-        for out in &mut self.outputs {
-            out.send_watermark(self.channel_id, wm);
-            out.send_eos(self.channel_id);
+        // Final watermark then EOS (suppressed when decommissioned: the
+        // downstream operators keep running).
+        if !decommissioned {
+            let wm = source.watermark();
+            for out in &mut self.outputs {
+                out.send_watermark(self.channel_id, wm);
+                out.send_eos(self.channel_id);
+            }
         }
         Ok(TaskExport {
             op_name: self.op_name,
@@ -175,7 +288,17 @@ impl TaskHarness {
         let (rx, mut tracker) = self.input.take().expect("transform needs input");
         let mut out_buf: Vec<crate::graph::Record> = Vec::with_capacity(512);
         let mut last_flush = Instant::now();
+        let mut decommissioned = false;
         loop {
+            let bp_ctl = Self::poll_control(
+                &self.control,
+                &mut self.outputs,
+                self.state.as_mut(),
+                Some(&mut tracker),
+                self.channel_id,
+                &mut decommissioned,
+            );
+            self.metrics.backpressure_ns.add(bp_ctl);
             let t_recv = Instant::now();
             let msg = rx.recv_timeout(self.flush_interval);
             self.metrics
@@ -258,7 +381,18 @@ impl TaskHarness {
                 }
             }
         }
-        // Drain: let the operator flush, export state, propagate EOS.
+        // A Decommission sent just before the disconnect may still be queued.
+        Self::poll_control(
+            &self.control,
+            &mut self.outputs,
+            self.state.as_mut(),
+            Some(&mut tracker),
+            self.channel_id,
+            &mut decommissioned,
+        );
+        // Drain: let the operator flush, export state, propagate EOS — unless
+        // decommissioned (a partial redeploy replaces this task; downstream
+        // keeps running and must not see an end-of-stream).
         {
             let mut ctx = OpCtx {
                 out: &mut out_buf,
@@ -271,8 +405,14 @@ impl TaskHarness {
         for rec in out_buf.drain(..) {
             emit_all(&mut self.outputs, self.channel_id, rec);
         }
-        for out in &mut self.outputs {
-            out.send_eos(self.channel_id);
+        if decommissioned {
+            for out in &mut self.outputs {
+                out.flush(self.channel_id);
+            }
+        } else {
+            for out in &mut self.outputs {
+                out.send_eos(self.channel_id);
+            }
         }
         // Export keyed state grouped by key group.
         let mut export = OperatorState::default();
@@ -304,6 +444,12 @@ mod tests {
     fn metrics() -> TaskMetrics {
         let reg = Registry::new();
         TaskMetrics::register(&reg, "test", 0)
+    }
+
+    /// A control receiver whose sender is already dropped (no control
+    /// traffic; `try_recv` returns `Disconnected`, which the poll ignores).
+    fn ctl() -> Receiver<ControlMsg> {
+        std::sync::mpsc::channel().1
     }
 
     fn pair(key: u64, ts: u64) -> Record {
@@ -343,6 +489,7 @@ mod tests {
             stop: Arc::new(AtomicBool::new(false)),
             restore: TaskRestore::default(),
             flush_interval: Duration::from_millis(10),
+            control: ctl(),
         };
         let h = std::thread::spawn(move || harness.run().unwrap());
         up_tx[0]
@@ -401,6 +548,7 @@ mod tests {
             stop: Arc::new(AtomicBool::new(false)),
             restore: TaskRestore::default(),
             flush_interval: Duration::from_millis(5),
+            control: ctl(),
         };
         let h = std::thread::spawn(move || harness.run().unwrap());
         // Two events in window [0,100), one in [100,200).
@@ -471,6 +619,7 @@ mod tests {
                 stop: Arc::new(AtomicBool::new(false)),
                 restore: TaskRestore::default(),
                 flush_interval: Duration::from_millis(5),
+                control: ctl(),
             };
             let h = std::thread::spawn(move || harness.run().unwrap());
             up_tx[0]
@@ -526,6 +675,7 @@ mod tests {
             stop: Arc::new(AtomicBool::new(false)),
             restore,
             flush_interval: Duration::from_millis(5),
+            control: ctl(),
         };
         let h = std::thread::spawn(move || harness.run().unwrap());
         up_tx[0]
@@ -610,6 +760,7 @@ mod tests {
             stop: stop.clone(),
             restore: TaskRestore::default(),
             flush_interval: Duration::from_millis(5),
+            control: ctl(),
         };
         let h = std::thread::spawn(move || harness.run().unwrap());
         std::thread::sleep(Duration::from_millis(30));

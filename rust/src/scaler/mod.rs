@@ -140,6 +140,98 @@ pub fn should_trigger(
     false
 }
 
+/// How a reconfiguration C^{t-1} → C^t can be enacted, cheapest first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ReconfigTier {
+    /// Memory-level-only changes: resize block caches live, zero restarts.
+    InPlace,
+    /// Exactly one non-source operator changes parallelism: stop, savepoint,
+    /// and redeploy just that operator and its direct exchanges.
+    Partial,
+    /// Anything broader: whole-job stop-with-savepoint and redeploy.
+    Full,
+}
+
+impl std::fmt::Display for ReconfigTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ReconfigTier::InPlace => "in-place",
+            ReconfigTier::Partial => "partial",
+            ReconfigTier::Full => "full",
+        })
+    }
+}
+
+/// The enactment plan for one reconfiguration: which operators can be
+/// resized live and which must restart, plus the resulting tier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReconfigPlan {
+    pub tier: ReconfigTier,
+    /// Operators whose managed memory changes in place → new memory level.
+    pub resizes: Vec<(String, Option<u32>)>,
+    /// Operators that must be stopped and redeployed.
+    pub restarts: Vec<String>,
+}
+
+/// Classify a reconfiguration into enactment tiers (the heart of "surgical"
+/// reconfiguration): parallelism changes force a restart of that operator;
+/// memory-level changes on a stateful operator resize its LSM caches live;
+/// memory changes on stateless operators are pure accounting (their tasks
+/// hold no managed memory) and enact in place; swapping an operator between
+/// managed memory and heap (`Some` ↔ `None`) swaps the state backend, which
+/// needs a restart.
+pub fn plan_reconfig(
+    meta: &GraphMeta,
+    from: &ScalingAssignment,
+    to: &ScalingAssignment,
+) -> ReconfigPlan {
+    let mut resizes = Vec::new();
+    let mut restarts = Vec::new();
+    let names: std::collections::BTreeSet<&String> =
+        from.ops.keys().chain(to.ops.keys()).collect();
+    for name in names {
+        let old = from.get(name);
+        let new = to.get(name);
+        if old == new {
+            continue;
+        }
+        if old.parallelism != new.parallelism {
+            restarts.push(name.clone());
+            continue;
+        }
+        // Same parallelism, different memory level.
+        let stateful = meta.op(name).map(|o| o.stateful).unwrap_or(true);
+        if !stateful {
+            // Stateless tasks run on the heap backend regardless of the
+            // accounted level — nothing to restart, nothing to resize.
+            resizes.push((name.clone(), new.memory_level));
+            continue;
+        }
+        match (old.memory_level, new.memory_level) {
+            (Some(_), Some(_)) => resizes.push((name.clone(), new.memory_level)),
+            // Backend swap (lsm ↔ heap): restart the operator.
+            _ => restarts.push(name.clone()),
+        }
+    }
+    let tier = if restarts.is_empty() {
+        ReconfigTier::InPlace
+    } else if restarts.len() == 1
+        && meta
+            .op(&restarts[0])
+            .map(|o| o.kind != OpKind::Source)
+            .unwrap_or(false)
+    {
+        ReconfigTier::Partial
+    } else {
+        ReconfigTier::Full
+    };
+    ReconfigPlan {
+        tier,
+        resizes,
+        restarts,
+    }
+}
+
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
@@ -281,6 +373,88 @@ mod tests {
         // A hot op present alongside a missing one still triggers.
         windows.insert("map".to_string(), window(0.95, 1000.0, 1050.0, 1000.0));
         assert!(should_trigger(&meta, &windows, &current, &cfg));
+    }
+
+    #[test]
+    fn memory_only_change_plans_in_place() {
+        let meta = linear_meta(&[("kvstore", true)]);
+        let mut from = ScalingAssignment::default();
+        from.set("kvstore", OpScaling::new(1, Some(0)));
+        let mut to = ScalingAssignment::default();
+        to.set("kvstore", OpScaling::new(1, Some(1)));
+        let plan = plan_reconfig(&meta, &from, &to);
+        assert_eq!(plan.tier, ReconfigTier::InPlace);
+        assert_eq!(plan.resizes, vec![("kvstore".to_string(), Some(1))]);
+        assert!(plan.restarts.is_empty());
+    }
+
+    #[test]
+    fn stateless_memory_strip_is_in_place() {
+        // Justin stripping accounted memory from a stateless operator must
+        // not cost a restart — its tasks run on the heap backend anyway.
+        let meta = linear_meta(&[("map", false)]);
+        let mut from = ScalingAssignment::default();
+        from.set("map", OpScaling::new(2, Some(0)));
+        let mut to = ScalingAssignment::default();
+        to.set("map", OpScaling::new(2, None));
+        let plan = plan_reconfig(&meta, &from, &to);
+        assert_eq!(plan.tier, ReconfigTier::InPlace);
+        assert_eq!(plan.resizes, vec![("map".to_string(), None)]);
+    }
+
+    #[test]
+    fn single_parallelism_change_plans_partial() {
+        let meta = linear_meta(&[("kvstore", true)]);
+        let mut from = ScalingAssignment::default();
+        from.set("kvstore", OpScaling::new(1, Some(0)));
+        let mut to = ScalingAssignment::default();
+        to.set("kvstore", OpScaling::new(2, Some(0)));
+        let plan = plan_reconfig(&meta, &from, &to);
+        assert_eq!(plan.tier, ReconfigTier::Partial);
+        assert_eq!(plan.restarts, vec!["kvstore".to_string()]);
+        assert!(plan.resizes.is_empty());
+    }
+
+    #[test]
+    fn broad_or_source_changes_plan_full() {
+        let meta = linear_meta(&[("map", false), ("agg", true)]);
+        // Two operators change parallelism → full.
+        let mut from = ScalingAssignment::default();
+        from.set("map", OpScaling::new(1, None));
+        from.set("agg", OpScaling::new(1, Some(0)));
+        let mut to = ScalingAssignment::default();
+        to.set("map", OpScaling::new(2, None));
+        to.set("agg", OpScaling::new(2, Some(0)));
+        assert_eq!(plan_reconfig(&meta, &from, &to).tier, ReconfigTier::Full);
+        // A source restart is never partial.
+        let mut from_s = ScalingAssignment::default();
+        from_s.set("source", OpScaling::new(1, None));
+        let mut to_s = ScalingAssignment::default();
+        to_s.set("source", OpScaling::new(2, None));
+        assert_eq!(
+            plan_reconfig(&meta, &from_s, &to_s).tier,
+            ReconfigTier::Full
+        );
+        // Backend swap (heap → lsm) on a stateful op restarts it, but a
+        // lone transform restart still qualifies as partial.
+        let mut from_b = ScalingAssignment::default();
+        from_b.set("agg", OpScaling::new(2, None));
+        let mut to_b = ScalingAssignment::default();
+        to_b.set("agg", OpScaling::new(2, Some(1)));
+        let plan = plan_reconfig(&meta, &from_b, &to_b);
+        assert_eq!(plan.tier, ReconfigTier::Partial);
+        assert_eq!(plan.restarts, vec!["agg".to_string()]);
+        // Mixed: one restart plus an in-place resize stays partial.
+        let mut from_m = ScalingAssignment::default();
+        from_m.set("map", OpScaling::new(1, None));
+        from_m.set("agg", OpScaling::new(1, Some(0)));
+        let mut to_m = ScalingAssignment::default();
+        to_m.set("map", OpScaling::new(2, None));
+        to_m.set("agg", OpScaling::new(1, Some(1)));
+        let plan = plan_reconfig(&meta, &from_m, &to_m);
+        assert_eq!(plan.tier, ReconfigTier::Partial);
+        assert_eq!(plan.restarts, vec!["map".to_string()]);
+        assert_eq!(plan.resizes, vec![("agg".to_string(), Some(1))]);
     }
 
     #[test]

@@ -8,7 +8,7 @@ use super::profiles::SimQuery;
 use crate::config::Config;
 use crate::graph::{OpKind, ScalingAssignment};
 use crate::metrics::window::{OperatorSample, WindowAggregator};
-use crate::scaler::{should_trigger, Policy};
+use crate::scaler::{plan_reconfig, should_trigger, Policy, ReconfigTier};
 use crate::util::rng::Rng;
 
 /// Non-managed memory footprint of one task slot, MB (heap + network +
@@ -40,6 +40,11 @@ pub struct TracePoint {
 pub struct ReconfigEvent {
     pub t_s: f64,
     pub assignment: ScalingAssignment,
+    /// Enactment tier the engine would use for this change (the sim charges
+    /// per-tier downtime so simulated and live accounting agree).
+    pub tier: ReconfigTier,
+    /// Modeled downtime of this reconfiguration, s.
+    pub downtime_s: f64,
 }
 
 /// Full result of one autoscaling run.
@@ -81,6 +86,24 @@ impl AutoscaleTrace {
     /// Cumulative allocated CPU over the run, core·s.
     pub fn core_seconds(&self) -> f64 {
         integrate(&self.points, |p| p.cores as f64)
+    }
+
+    /// Total modeled reconfiguration downtime over the run, s.
+    pub fn total_downtime_s(&self) -> f64 {
+        self.reconfigs.iter().map(|r| r.downtime_s).sum()
+    }
+
+    /// Reconfiguration count per enactment tier: (in-place, partial, full).
+    pub fn tier_counts(&self) -> (usize, usize, usize) {
+        let mut counts = (0, 0, 0);
+        for r in &self.reconfigs {
+            match r.tier {
+                ReconfigTier::InPlace => counts.0 += 1,
+                ReconfigTier::Partial => counts.1 += 1,
+                ReconfigTier::Full => counts.2 += 1,
+            }
+        }
+        counts
     }
 }
 
@@ -216,12 +239,20 @@ pub fn run_autoscaling(
                     current: &assignment,
                 });
                 if next != assignment {
+                    let rplan = plan_reconfig(&meta, &assignment, &next);
+                    let downtime_s = match rplan.tier {
+                        ReconfigTier::InPlace => cfg.sim.reconfig_downtime_inplace_s,
+                        ReconfigTier::Partial => cfg.sim.reconfig_downtime_partial_s,
+                        ReconfigTier::Full => cfg.sim.reconfig_downtime_s,
+                    };
                     assignment = next;
                     reconfigs.push(ReconfigEvent {
                         t_s: t,
                         assignment: assignment.clone(),
+                        tier: rplan.tier,
+                        downtime_s,
                     });
-                    downtime_until = t + cfg.sim.reconfig_downtime_s;
+                    downtime_until = t + downtime_s;
                     stabilize_until = downtime_until + cfg.scaler.stabilization_s as f64;
                 }
             }
@@ -484,6 +515,36 @@ mod tests {
         let max_cores = trace.points.iter().map(|p| p.cores).max().unwrap() as f64;
         let cs = trace.core_seconds();
         assert!(cs > 0.0 && cs <= max_cores * dur);
+    }
+
+    #[test]
+    fn reconfig_tiers_follow_the_plan_and_downtime_model() {
+        let q = query_profile("q11").unwrap();
+        let cfg = fast_cfg();
+        let mut policy = Justin::new(cfg.scaler.clone());
+        let trace = run_autoscaling(&q, &mut policy, &cfg);
+        assert!(trace.steps() >= 1);
+        // Every event's tier matches a re-derived plan, and its downtime
+        // matches the per-tier model.
+        let meta = q.meta();
+        let mut prev = initial_assignment(&q);
+        for r in &trace.reconfigs {
+            let plan = plan_reconfig(&meta, &prev, &r.assignment);
+            assert_eq!(r.tier, plan.tier, "{r:?}");
+            let expect = match r.tier {
+                ReconfigTier::InPlace => cfg.sim.reconfig_downtime_inplace_s,
+                ReconfigTier::Partial => cfg.sim.reconfig_downtime_partial_s,
+                ReconfigTier::Full => cfg.sim.reconfig_downtime_s,
+            };
+            assert_eq!(r.downtime_s, expect, "{r:?}");
+            prev = r.assignment.clone();
+        }
+        let (inplace, partial, full) = trace.tier_counts();
+        assert_eq!(inplace + partial + full, trace.steps());
+        assert!(
+            trace.total_downtime_s()
+                <= trace.steps() as f64 * cfg.sim.reconfig_downtime_s
+        );
     }
 
     #[test]

@@ -9,7 +9,7 @@
 use super::block::Block;
 use super::cache::BlockCache;
 use super::compaction::{decode_record, encode_tombstone, encode_value, merge_runs};
-use super::options::DbOptions;
+use super::options::{split_managed, DbOptions, MB};
 use super::skiplist::SkipList;
 use super::sstable::{SsTableReader, SsTableWriter};
 use crate::metrics::{Counter, Gauge, Histo};
@@ -110,6 +110,15 @@ impl Db {
     pub fn resize_cache(&mut self, cache_bytes: usize) {
         self.opts.cache_bytes = cache_bytes;
         self.cache.resize(cache_bytes);
+    }
+
+    /// Re-apply the Flink managed-memory split for a new budget (in-place
+    /// vertical scaling): the MemTable threshold takes effect at the next
+    /// flush check, the block cache resizes (and evicts) immediately.
+    pub fn resize_managed(&mut self, managed_mb: u64) {
+        let (memtable_mb, cache_mb) = split_managed(managed_mb);
+        self.opts.memtable_bytes = (memtable_mb * MB) as usize;
+        self.resize_cache((cache_mb * MB) as usize);
     }
 
     /// Insert or overwrite a key.
@@ -657,6 +666,29 @@ mod tests {
         let mut db = Db::open(small_opts("resize")).unwrap();
         db.resize_cache(123_456);
         assert_eq!(db.options().cache_bytes, 123_456);
+    }
+
+    #[test]
+    fn resize_managed_applies_split_rule_and_keeps_data() {
+        // Level 0 (158 MB) → level 1 (316 MB) and back, mid-stream: the
+        // split rule applies at each step and no entry is disturbed.
+        let mut opts = small_opts("resize-managed");
+        opts.memtable_bytes = 2048;
+        let mut db = Db::open(opts).unwrap();
+        for i in 0..500u32 {
+            db.put(&i.to_be_bytes(), &[i as u8; 64]).unwrap();
+        }
+        db.resize_managed(316);
+        assert_eq!(db.options().memtable_bytes, (64 * MB) as usize);
+        assert_eq!(db.options().cache_bytes, (252 * MB) as usize);
+        for i in 500..1000u32 {
+            db.put(&i.to_be_bytes(), &[i as u8; 64]).unwrap();
+        }
+        db.resize_managed(158);
+        assert_eq!(db.options().cache_bytes, (94 * MB) as usize);
+        for i in 0..1000u32 {
+            assert_eq!(db.get(&i.to_be_bytes()).unwrap(), Some(vec![i as u8; 64]));
+        }
     }
 
     #[test]

@@ -31,6 +31,10 @@ pub trait StateBackend: Send {
     fn flush(&mut self) -> Result<()> {
         Ok(())
     }
+    /// Re-apply a managed-memory budget (MB) live, without a restart — the
+    /// in-place reconfiguration tier. Backends without managed memory (heap)
+    /// ignore it.
+    fn resize_managed(&mut self, _managed_mb: u64) {}
 }
 
 /// In-memory state backend (Flink's hashmap backend).
@@ -121,6 +125,10 @@ impl StateBackend for LsmBackend {
 
     fn flush(&mut self) -> Result<()> {
         self.db.flush()
+    }
+
+    fn resize_managed(&mut self, managed_mb: u64) {
+        self.db.resize_managed(managed_mb);
     }
 }
 

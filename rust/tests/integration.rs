@@ -210,6 +210,84 @@ fn justin_without_storage_signals_matches_ds2_parallelism() {
     assert_eq!(j.get("sessions").memory_level, None);
 }
 
+/// The reconfiguration tiers end-to-end at the state layer: entries written
+/// through a real LSM backend survive live memory-level resizes (the
+/// in-place tier) and a 2→3→2 key-group redistribution (the redeploy path)
+/// byte-for-byte.
+#[test]
+fn lsm_rescale_across_memory_levels_preserves_state_bytewise() {
+    use justin::engine::OperatorState;
+    use justin::graph::{groups_for_task, key_to_group};
+    use justin::state::lsm::{Db, DbOptions};
+    use justin::state::{split_state_key, state_key, LsmBackend, StateBackend};
+    use std::collections::BTreeMap;
+
+    let num_groups = 128u32;
+    let open = |tag: &str| {
+        let name = format!("justin-itest-resize-{tag}-{}", std::process::id());
+        let mut opts = DbOptions::for_managed_memory(std::env::temp_dir().join(name), 8);
+        opts.memtable_bytes = 4 * 1024; // tiny: force real SSTable flushes
+        LsmBackend::new(Db::open(opts).unwrap())
+    };
+
+    // Expected contents: every entry ever written, keyed by full state key.
+    let mut expected = BTreeMap::new();
+    let mut backends: Vec<LsmBackend> = (0..2).map(|t| open(&format!("g0-{t}"))).collect();
+    for k in 0..2000u64 {
+        let group = key_to_group(k, num_groups);
+        let task = (0..2u32)
+            .find(|&t| {
+                let (lo, hi) = groups_for_task(num_groups, 2, t);
+                (lo..hi).contains(&group)
+            })
+            .unwrap();
+        let sk = state_key(group, &k.to_be_bytes());
+        let value = k.to_le_bytes().repeat(1 + (k % 7) as usize);
+        backends[task as usize].put(&sk, &value).unwrap();
+        expected.insert(sk, value);
+    }
+
+    // What stop-with-savepoint does: export every backend, regrouping
+    // entries by their key-group prefix.
+    let export = |backends: &mut Vec<LsmBackend>| -> OperatorState {
+        let mut st = OperatorState::default();
+        for b in backends.iter_mut() {
+            b.flush().unwrap();
+            for (k, v) in b.scan_prefix(b"").unwrap() {
+                let (group, _) = split_state_key(&k).unwrap();
+                st.keyed.entry(group).or_default().push((k, v));
+            }
+        }
+        st
+    };
+
+    // Walk 2 → 3 → 2 while stepping the managed budget across memory
+    // levels (8 → 16 → 8 MB) via the live resize path first.
+    for (round, (p, managed_mb)) in [(3u32, 16u64), (2, 8)].into_iter().enumerate() {
+        for b in backends.iter_mut() {
+            b.resize_managed(managed_mb);
+        }
+        let st = export(&mut backends);
+        assert_eq!(st.entry_count(), expected.len());
+        backends = (0..p)
+            .map(|t| {
+                let mut b = open(&format!("r{round}-{t}"));
+                for (k, v) in st.fragment_for(num_groups, p, t).keyed {
+                    b.put(&k, &v).unwrap();
+                }
+                b
+            })
+            .collect();
+    }
+
+    let survived: BTreeMap<Vec<u8>, Vec<u8>> = export(&mut backends)
+        .keyed
+        .into_values()
+        .flatten()
+        .collect();
+    assert_eq!(survived, expected, "2→3→2 across levels must be lossless");
+}
+
 /// Config round-trip: an experiment config file drives the sim.
 #[test]
 fn config_file_drives_simulation() {
