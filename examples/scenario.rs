@@ -24,6 +24,7 @@ fn trace_json(t: &AutoscaleTrace) -> Json {
         ),
         ("core_s", Json::num(t.core_seconds())),
         ("memory_mb_s", Json::num(t.memory_mb_seconds())),
+        ("stall_s", Json::num(t.stall_seconds())),
         (
             "points",
             Json::arr(t.points.iter().step_by(6).map(|p| {

@@ -6,7 +6,8 @@
 //!   exist) — the L1/L2 integration cost on a CPU PJRT backend.
 //!
 //! Run: `cargo bench --bench engine_throughput` (after `make artifacts` for
-//! the XLA rows)
+//! the XLA rows). `BENCH_SMOKE=1` shrinks the event counts ~50× for a
+//! CI-sized pass over the same code paths.
 
 use justin::config::Config;
 use justin::engine::{JobManager, OpFactory, StreamJob};
@@ -25,12 +26,23 @@ fn run_job(job: &StreamJob, cfg: &Config, events: u64) -> f64 {
     events as f64 / t0.elapsed().as_secs_f64()
 }
 
+fn scaled(n: u64) -> u64 {
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| v != "0" && !v.is_empty())
+        .unwrap_or(false);
+    if smoke {
+        (n / 50).max(1000)
+    } else {
+        n
+    }
+}
+
 fn main() {
     let mut cfg = Config::default();
     cfg.engine.batch_size = 256;
     cfg.engine.channel_capacity = 64;
     cfg.engine.flush_interval_ms = 20;
-    let events = 2_000_000u64;
+    let events = scaled(2_000_000);
 
     // q1 (stateless map) at maximum speed.
     let spec = QuerySpec {
@@ -45,15 +57,16 @@ fn main() {
     println!("{:<52} {:>12.0} ev/s", "q1 stateless pipeline (scalar map)", rate);
 
     // q5 (stateful sliding window over rockslite).
+    let events5 = scaled(400_000);
     let spec5 = QuerySpec {
         rate: 200_000.0,
-        bounded: Some(400_000),
+        bounded: Some(events5),
         seed: 1,
         source_parallelism: 1,
         window_ms: 10,
     };
     let q5 = build("q5", spec5).unwrap();
-    let rate5 = run_job(&q5, &cfg, 400_000);
+    let rate5 = run_job(&q5, &cfg, events5);
     println!("{:<52} {:>12.0} ev/s", "q5 keyed sliding-window agg (LSM state)", rate5);
 
     // XLA batch model micro-rate (per-call latency and events/s).

@@ -1,12 +1,33 @@
 //! Bench: rockslite hot paths — put, get (cache-hot and cache-cold), scan —
 //! the L3-side numbers behind the simulator's calibration constants and the
-//! §Perf targets (get-hit ~1 µs, put ~1 µs amortised at small values).
+//! §Perf targets (get-hit ~1 µs, put ~1 µs amortised at small values), plus
+//! the background-vs-inline flush pipeline comparison (tail latency of puts
+//! when flush/compaction rides the storage worker instead of the writer).
 //!
 //! Run: `cargo bench --bench lsm_hotpath`
+//!
+//! * `BENCH_SMOKE=1` shrinks every workload ~50× — a CI-sized correctness
+//!   pass over the same code paths, not a measurement.
+//! * A machine-readable summary is written to `BENCH_lsm.json` (override
+//!   with `BENCH_OUT=<path>`).
 
-use justin::bench::harness::bench;
+use justin::bench::harness::{bench, BenchStats};
 use justin::state::lsm::{Db, DbOptions, MB};
+use justin::util::json::Json;
 use justin::util::rng::Rng;
+
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+/// Scale an iteration/population count down in smoke mode.
+fn scaled(n: u64) -> u64 {
+    if smoke() {
+        (n / 50).max(200)
+    } else {
+        n
+    }
+}
 
 fn open(tag: &str, managed_mb: u64) -> Db {
     let dir =
@@ -14,21 +35,60 @@ fn open(tag: &str, managed_mb: u64) -> Db {
     Db::open(DbOptions::for_managed_memory(dir, managed_mb)).unwrap()
 }
 
+fn stats_json(s: &BenchStats) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(s.name.clone())),
+        ("iters", Json::num(s.iters)),
+        ("mean_ns", Json::num(s.mean_ns)),
+        ("p50_ns", Json::num(s.p50_ns as f64)),
+        ("p99_ns", Json::num(s.p99_ns as f64)),
+        ("min_ns", Json::num(s.min_ns as f64)),
+        ("rate_per_s", Json::num(s.rate)),
+    ])
+}
+
+/// Flush-heavy put workload: a tiny memtable forces a rotation every ~1k
+/// puts, so flush (and the L0 compactions behind it) dominates. With
+/// `background_storage` the writer only rotates and the worker absorbs the
+/// flush; inline, every ~1000th put pays it — the p99 gap is the point of
+/// the pipeline.
+fn flush_heavy(tag: &str, name: &str, background: bool) -> (BenchStats, u64, u64) {
+    let dir =
+        std::env::temp_dir().join(format!("justin-lsmbench-{tag}-{}", std::process::id()));
+    let mut opts = DbOptions::for_managed_memory(dir, 158);
+    opts.memtable_bytes = 256 * 1024;
+    opts.background_storage = background;
+    let mut db = Db::open(opts).unwrap();
+    let iters = scaled(150_000) as u32;
+    let mut i = 0u64;
+    let stats = bench(name, iters / 20, iters, || {
+        db.put(&(i % 200_000).to_be_bytes(), &[7u8; 256]).unwrap();
+        i += 1;
+    });
+    db.flush().unwrap();
+    let s = db.stats();
+    (stats, s.stalls, s.stall_ns)
+}
+
 fn main() {
+    let mut report: Vec<Json> = Vec::new();
+
     // Small values (nexmark-like accumulators).
     let mut db = open("small", 316);
+    let iters = scaled(300_000) as u32;
     let mut i = 0u64;
-    bench(
+    let put_stats = bench(
         "put 8 B values (amortised, incl. flush/compaction)",
-        10_000,
-        300_000,
+        iters / 30,
+        iters,
         || {
             db.put(&(i % 1_000_000).to_be_bytes(), &i.to_le_bytes())
                 .unwrap();
             i += 1;
         },
-    )
-    .print();
+    );
+    put_stats.print();
+    report.push(stats_json(&put_stats));
     let stats = db.stats();
     println!(
         "  after: {} flushes, {} compactions, {} MB disk, levels {:?}",
@@ -39,42 +99,71 @@ fn main() {
     );
 
     // Cache-hot gets: working set fits the cache.
+    let hot_n = scaled(50_000);
     let mut hot = open("hot", 632);
-    for k in 0..50_000u64 {
+    for k in 0..hot_n {
         hot.put(&k.to_be_bytes(), &[1u8; 100]).unwrap();
     }
     hot.flush().unwrap();
-    for k in 0..50_000u64 {
+    for k in 0..hot_n {
         hot.get(&k.to_be_bytes()).unwrap(); // warm
     }
     let mut rng = Rng::new(1);
-    bench("get hit (warm cache, 50k × 100 B)", 10_000, 200_000, || {
-        let k = rng.gen_range(50_000);
+    let hit_iters = scaled(200_000) as u32;
+    let hit_stats = bench("get hit (warm cache, 100 B values)", hit_iters / 20, hit_iters, || {
+        let k = rng.gen_range(hot_n);
         hot.get(&k.to_be_bytes()).unwrap();
-    })
-    .print();
+    });
+    hit_stats.print();
+    report.push(stats_json(&hit_stats));
     println!("  θ = {:?}", hot.cache_hit_rate());
 
     // Cache-cold gets: working set ≫ cache (the Takeaway-2 regime).
+    let cold_n = scaled(300_000);
     let mut cold = open("cold", 158);
-    for k in 0..300_000u64 {
+    for k in 0..cold_n {
         cold.put(&k.to_be_bytes(), &[1u8; 1000]).unwrap();
     }
     cold.flush().unwrap();
     cold.resize_cache(4 * MB as usize);
     cold.reset_window_stats();
     let mut rng = Rng::new(2);
-    bench(
-        "get miss-heavy (300k × 1 KB, 4 MB cache)",
-        2_000,
-        50_000,
+    let miss_iters = scaled(50_000) as u32;
+    let miss_stats = bench(
+        "get miss-heavy (1 KB values, 4 MB cache)",
+        miss_iters / 25,
+        miss_iters,
         || {
-            let k = rng.gen_range(300_000);
+            let k = rng.gen_range(cold_n);
             cold.get(&k.to_be_bytes()).unwrap();
         },
-    )
-    .print();
+    );
+    miss_stats.print();
+    report.push(stats_json(&miss_stats));
     println!("  θ = {:?}", cold.cache_hit_rate());
+
+    // Background vs inline storage work under a flush-heavy write load.
+    let (inline, _, _) = flush_heavy(
+        "fh-inline",
+        "put 256 B flush-heavy (inline storage)",
+        false,
+    );
+    inline.print();
+    report.push(stats_json(&inline));
+    let (bg, bg_stalls, bg_stall_ns) = flush_heavy(
+        "fh-bg",
+        "put 256 B flush-heavy (background worker)",
+        true,
+    );
+    bg.print();
+    report.push(stats_json(&bg));
+    println!(
+        "  p99 put: inline {} ns vs background {} ns  ({} stalls, {:.1} ms stalled)",
+        inline.p99_ns,
+        bg.p99_ns,
+        bg_stalls,
+        bg_stall_ns as f64 / 1e6
+    );
 
     // Savepoint scan rate.
     let t0 = std::time::Instant::now();
@@ -86,4 +175,21 @@ fn main() {
         per,
         all.len()
     );
+    report.push(Json::obj(vec![
+        ("name", Json::str("scan_all (savepoint export)")),
+        ("iters", Json::num(all.len() as f64)),
+        ("mean_ns", Json::num(per)),
+    ]));
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("lsm_hotpath")),
+        ("smoke", Json::Bool(smoke())),
+        ("results", Json::Arr(report)),
+    ]);
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_lsm.json".to_string());
+    match std::fs::write(&out_path, doc.to_pretty()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
 }

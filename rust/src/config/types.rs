@@ -189,6 +189,33 @@ impl Default for LsmConfig {
     }
 }
 
+/// Live state-backend threading parameters (the background flush/compaction
+/// pipeline; the fluid-model simulator does not consume these).
+#[derive(Debug, Clone)]
+pub struct StateConfig {
+    /// Run memtable flushes and compactions on a per-task background
+    /// storage worker (true, the production path) or inline on the task
+    /// thread (false; the pre-pipeline behaviour, kept for equivalence
+    /// testing and debugging).
+    pub background_storage: bool,
+    /// Maximum immutable memtables queued for flush before writers stall.
+    pub max_immutable_memtables: usize,
+    /// Number of L0 files at which writers stall (RocksDB's
+    /// level0_stopped_writes_trigger). Must be ≥ lsm.l0_compaction_trigger
+    /// or writers would stall on a condition the worker never clears.
+    pub l0_stall_trigger: usize,
+}
+
+impl Default for StateConfig {
+    fn default() -> Self {
+        Self {
+            background_storage: true,
+            max_immutable_memtables: 2,
+            l0_stall_trigger: 8,
+        }
+    }
+}
+
 /// Simulator parameters.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -316,6 +343,7 @@ pub struct Config {
     pub scaler: ScalerConfig,
     pub engine: EngineConfig,
     pub lsm: LsmConfig,
+    pub state: StateConfig,
     pub sim: SimConfig,
     pub scenario: ScenarioConfig,
 }
@@ -379,6 +407,9 @@ impl Config {
             "lsm.level_multiplier",
             "lsm.max_levels",
             "lsm.bloom_bits_per_key",
+            "state.background_storage",
+            "state.max_immutable_memtables",
+            "state.l0_stall_trigger",
             "sim.seed",
             "sim.duration_s",
             "sim.stateless_service_us",
@@ -493,6 +524,19 @@ impl Config {
         get_num!(doc, "lsm.max_levels", c.lsm.max_levels, usize);
         get_num!(doc, "lsm.bloom_bits_per_key", c.lsm.bloom_bits_per_key, u32);
 
+        if let Some(v) = doc.get("state.background_storage") {
+            c.state.background_storage = v
+                .as_bool()
+                .context("state.background_storage must be a bool")?;
+        }
+        get_num!(
+            doc,
+            "state.max_immutable_memtables",
+            c.state.max_immutable_memtables,
+            usize
+        );
+        get_num!(doc, "state.l0_stall_trigger", c.state.l0_stall_trigger, usize);
+
         get_num!(doc, "sim.seed", c.sim.seed, u64);
         get_num!(doc, "sim.duration_s", c.sim.duration_s, u64);
         get_f64!(doc, "sim.stateless_service_us", c.sim.stateless_service_us);
@@ -597,6 +641,17 @@ impl Config {
         }
         if self.engine.key_groups == 0 {
             bail!("key_groups must be positive");
+        }
+        if self.state.max_immutable_memtables == 0 {
+            bail!("state.max_immutable_memtables must be at least 1");
+        }
+        if self.state.l0_stall_trigger < self.lsm.l0_compaction_trigger {
+            bail!(
+                "state.l0_stall_trigger ({}) must be >= lsm.l0_compaction_trigger \
+                 ({}) or writers stall on a condition compaction never clears",
+                self.state.l0_stall_trigger,
+                self.lsm.l0_compaction_trigger
+            );
         }
         if self.sim.reconfig_downtime_inplace_s < 0.0
             || self.sim.reconfig_downtime_inplace_s > self.sim.reconfig_downtime_partial_s
@@ -739,6 +794,34 @@ mod tests {
         assert!(Config::from_toml(&doc).is_err(), "partial > full rejected");
         let doc = super::super::parse_toml("[sim]\nreconfig_downtime_inplace_s = 7.0").unwrap();
         assert!(Config::from_toml(&doc).is_err(), "in-place > partial rejected");
+    }
+
+    #[test]
+    fn state_section_parses_and_validates() {
+        let c = Config::default();
+        assert!(c.state.background_storage, "background is the default path");
+        assert_eq!(c.state.max_immutable_memtables, 2);
+        assert_eq!(c.state.l0_stall_trigger, 8);
+
+        let doc = super::super::parse_toml(
+            "[state]\nbackground_storage = false\nmax_immutable_memtables = 4\n\
+             l0_stall_trigger = 12",
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert!(!c.state.background_storage);
+        assert_eq!(c.state.max_immutable_memtables, 4);
+        assert_eq!(c.state.l0_stall_trigger, 12);
+
+        // Zero immutables would make every rotation stall forever.
+        let doc = super::super::parse_toml("[state]\nmax_immutable_memtables = 0").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+        // A stall trigger below the compaction trigger can never clear.
+        let doc = super::super::parse_toml(
+            "[state]\nl0_stall_trigger = 2\n[lsm]\nl0_compaction_trigger = 4",
+        )
+        .unwrap();
+        assert!(Config::from_toml(&doc).is_err());
     }
 
     #[test]

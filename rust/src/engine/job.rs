@@ -14,7 +14,7 @@ use crate::state::{HeapBackend, LsmBackend, StateBackend};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -338,18 +338,27 @@ impl JobManager {
         stop: Arc<AtomicBool>,
     ) -> Result<TaskSlot> {
         let cfg = &self.config;
+        let mut stall_total: Option<Arc<AtomicU64>> = None;
         let state: Box<dyn StateBackend> = if op.stateful && managed_mb > 0 {
             let dir = self
                 .state_root
                 .join(format!("epoch{}/{}/{}", self.epoch, op.name, subtask));
-            let opts = DbOptions::for_managed_memory(dir, managed_mb);
+            let mut opts = DbOptions::for_managed_memory(dir, managed_mb);
+            opts.background_storage = cfg.state.background_storage;
+            opts.max_immutable_memtables = cfg.state.max_immutable_memtables;
+            opts.l0_stall_trigger = cfg.state.l0_stall_trigger;
             let mut db = Db::open(opts)?;
             let id = |n: &str| MetricId::new(n).with("op", &op.name).with("task", subtask);
+            let stall_counter = Arc::new(AtomicU64::new(0));
+            stall_total = Some(stall_counter.clone());
             db.set_hooks(DbMetricHooks {
                 cache_hit: Some(registry.counter(id(names::STATE_CACHE_HIT))),
                 cache_miss: Some(registry.counter(id(names::STATE_CACHE_MISS))),
                 access_ns: Some(registry.histo(id(names::STATE_ACCESS_NS))),
                 state_bytes: Some(registry.gauge(id(names::STATE_SIZE_BYTES))),
+                flush_ns: Some(registry.histo(id(names::STATE_FLUSH_NS))),
+                stall_ns: Some(registry.histo(id(names::STATE_STALL_NS))),
+                stall_total_ns: Some(stall_counter),
             });
             Box::new(LsmBackend::new(db))
         } else {
@@ -374,6 +383,7 @@ impl JobManager {
             restore,
             flush_interval: Duration::from_millis(cfg.engine.flush_interval_ms),
             control: control_rx,
+            stall_ns: stall_total,
         };
         let name = format!("{}-{}", op.name, subtask);
         let handle = std::thread::Builder::new()

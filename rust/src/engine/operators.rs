@@ -5,6 +5,7 @@
 use super::window::{Window, WindowAssigner};
 use crate::graph::{key_to_group, Record};
 use crate::state::{state_key, StateBackend};
+use crate::util::bytes::Bytes;
 use crate::util::hash::FxHashMap;
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -15,6 +16,9 @@ pub struct OpCtx<'a> {
     pub out: &'a mut Vec<Record>,
     /// The task's keyed state backend.
     pub state: &'a mut dyn StateBackend,
+    /// Reusable per-task key-encoding scratch buffer — state keys are
+    /// encoded in place, so the access helpers below don't allocate.
+    pub key_buf: &'a mut Vec<u8>,
     /// Number of key groups in the job.
     pub key_groups: u32,
     /// Current combined input watermark.
@@ -22,12 +26,41 @@ pub struct OpCtx<'a> {
 }
 
 impl OpCtx<'_> {
-    /// State key for `user_key` under this job's key-group scheme.
+    /// State key for `user_key` under this job's key-group scheme
+    /// (allocating variant; prefer the `state_*` helpers on the hot path).
     pub fn skey(&self, user_key: u64, suffix: &[u8]) -> Vec<u8> {
         let group = key_to_group(user_key, self.key_groups);
         let mut user = user_key.to_be_bytes().to_vec();
         user.extend_from_slice(suffix);
         state_key(group, &user)
+    }
+
+    /// Encode `[group BE][user_key BE][suffix]` into the scratch buffer.
+    fn encode_key(&mut self, user_key: u64, suffix: &[u8]) {
+        let group = key_to_group(user_key, self.key_groups);
+        self.key_buf.clear();
+        self.key_buf.extend_from_slice(&group.to_be_bytes());
+        self.key_buf.extend_from_slice(&user_key.to_be_bytes());
+        self.key_buf.extend_from_slice(suffix);
+    }
+
+    /// Allocation-free state read: the key is encoded into the scratch
+    /// buffer and the hit is a shared view of the stored bytes.
+    pub fn state_get(&mut self, user_key: u64, suffix: &[u8]) -> Result<Option<Bytes>> {
+        self.encode_key(user_key, suffix);
+        self.state.get(self.key_buf)
+    }
+
+    /// State write via the scratch key buffer.
+    pub fn state_put(&mut self, user_key: u64, suffix: &[u8], value: &[u8]) -> Result<()> {
+        self.encode_key(user_key, suffix);
+        self.state.put(self.key_buf, value)
+    }
+
+    /// State delete via the scratch key buffer.
+    pub fn state_delete(&mut self, user_key: u64, suffix: &[u8]) -> Result<()> {
+        self.encode_key(user_key, suffix);
+        self.state.delete(self.key_buf)
     }
 }
 
@@ -195,16 +228,15 @@ impl<A: Aggregator> KeyedWindowAggregate<A> {
         rec: &Record,
         ctx: &mut OpCtx,
     ) -> Result<()> {
-        let skey = ctx.skey(key, &window.encode());
-        let mut acc = match ctx.state.get(&skey)? {
-            Some(acc) => acc,
+        let mut acc = match ctx.state_get(key, &window.encode())? {
+            Some(acc) => acc.to_vec(),
             None => {
                 self.pending.insert((window.end, key, window.start), ());
                 self.aggregator.init()
             }
         };
         self.aggregator.add(&mut acc, rec);
-        ctx.state.put(&skey, &acc)?;
+        ctx.state_put(key, &window.encode(), &acc)?;
         Ok(())
     }
 
@@ -226,21 +258,22 @@ impl<A: Aggregator> KeyedWindowAggregate<A> {
         // Relocate accumulator if the window bounds changed.
         let mut acc = match old {
             Some(old_w) if old_w != merged => {
-                let old_key = ctx.skey(key, &old_w.encode());
-                let acc = ctx.state.get(&old_key)?.unwrap_or_else(|| self.aggregator.init());
-                ctx.state.delete(&old_key)?;
+                let acc = ctx
+                    .state_get(key, &old_w.encode())?
+                    .map(|b| b.to_vec())
+                    .unwrap_or_else(|| self.aggregator.init());
+                ctx.state_delete(key, &old_w.encode())?;
                 self.pending.remove(&(old_w.end, key, old_w.start));
                 acc
             }
-            Some(_) => {
-                let skey = ctx.skey(key, &merged.encode());
-                ctx.state.get(&skey)?.unwrap_or_else(|| self.aggregator.init())
-            }
+            Some(_) => ctx
+                .state_get(key, &merged.encode())?
+                .map(|b| b.to_vec())
+                .unwrap_or_else(|| self.aggregator.init()),
             None => self.aggregator.init(),
         };
         self.aggregator.add(&mut acc, rec);
-        let skey = ctx.skey(key, &merged.encode());
-        ctx.state.put(&skey, &acc)?;
+        ctx.state_put(key, &merged.encode(), &acc)?;
         self.pending.insert((merged.end, key, merged.start), ());
         Ok(())
     }
@@ -274,10 +307,9 @@ impl<A: Aggregator> Operator for KeyedWindowAggregate<A> {
             }
             self.pending.remove(&(end, key, start));
             let window = Window::new(start, end);
-            let skey = ctx.skey(key, &window.encode());
-            if let Some(acc) = ctx.state.get(&skey)? {
+            if let Some(acc) = ctx.state_get(key, &window.encode())? {
                 self.aggregator.result(key, window, &acc, ctx.out);
-                ctx.state.delete(&skey)?;
+                ctx.state_delete(key, &window.encode())?;
             }
             if self.assigner.is_session() {
                 if let Some(active) = self.sessions.get(&key) {
@@ -453,11 +485,9 @@ impl Operator for IncrementalJoinOp {
             ((self.right_key)(&rec), RIGHT_TAG, LEFT_TAG)
         };
         // Store self.
-        let my_key = ctx.skey(key, my_tag);
-        ctx.state.put(&my_key, &encode_record(&rec))?;
+        ctx.state_put(key, my_tag, &encode_record(&rec))?;
         // Probe the other side.
-        let other_key = ctx.skey(key, other_tag);
-        if let Some(stored) = ctx.state.get(&other_key)? {
+        if let Some(stored) = ctx.state_get(key, other_tag)? {
             if let Some(other) = decode_record(&stored) {
                 let out = if port == 0 {
                     (self.join)(&rec, &other)
@@ -519,10 +549,9 @@ impl Operator for WindowedJoinOp {
         let window = Window::new(start, start + self.window_ms);
         let mut suffix = window.encode().to_vec();
         suffix.push(if port == 0 { b'L' } else { b'R' });
-        let skey = ctx.skey(key, &suffix);
         // Read-modify-write: store the (latest) record for this side.
-        let existed = ctx.state.get(&skey)?.is_some();
-        ctx.state.put(&skey, &encode_record(&rec))?;
+        let existed = ctx.state_get(key, &suffix)?.is_some();
+        ctx.state_put(key, &suffix, &encode_record(&rec))?;
         if !existed {
             self.pending.insert((window.end, key, window.start), ());
         }
@@ -543,20 +572,18 @@ impl Operator for WindowedJoinOp {
             lkey.push(b'L');
             let mut rkey = window.encode().to_vec();
             rkey.push(b'R');
-            let lskey = ctx.skey(key, &lkey);
-            let rskey = ctx.skey(key, &rkey);
-            let left = ctx.state.get(&lskey)?;
-            let right = ctx.state.get(&rskey)?;
+            let left = ctx.state_get(key, &lkey)?;
+            let right = ctx.state_get(key, &rkey)?;
             if let (Some(l), Some(_r)) = (&left, &right) {
                 if let Some(lrec) = decode_record(l) {
                     (self.emit)(key, &lrec, window, ctx.out);
                 }
             }
             if left.is_some() {
-                ctx.state.delete(&lskey)?;
+                ctx.state_delete(key, &lkey)?;
             }
             if right.is_some() {
-                ctx.state.delete(&rskey)?;
+                ctx.state_delete(key, &rkey)?;
             }
         }
         Ok(())
@@ -614,10 +641,9 @@ pub struct KvStoreOp {
 impl Operator for KvStoreOp {
     fn on_record(&mut self, _port: usize, rec: Record, ctx: &mut OpCtx) -> Result<()> {
         if let Record::Kv { key, payload, ts } = rec {
-            let skey = ctx.skey(key, b"");
             match self.mode {
                 AccessMode::Read => {
-                    let v = ctx.state.get(&skey)?;
+                    let v = ctx.state_get(key, b"")?;
                     ctx.out.push(Record::Pair {
                         key,
                         value: v.map(|v| v.len() as i64).unwrap_or(0),
@@ -625,12 +651,12 @@ impl Operator for KvStoreOp {
                     });
                 }
                 AccessMode::Write => {
-                    ctx.state.put(&skey, &payload)?;
+                    ctx.state_put(key, b"", &payload)?;
                     ctx.out.push(Record::Pair { key, value: 1, ts });
                 }
                 AccessMode::Update => {
-                    let old = ctx.state.get(&skey)?;
-                    ctx.state.put(&skey, &payload)?;
+                    let old = ctx.state_get(key, b"")?;
+                    ctx.state_put(key, b"", &payload)?;
                     ctx.out.push(Record::Pair {
                         key,
                         value: old.map(|v| v.len() as i64).unwrap_or(0),
@@ -677,11 +703,13 @@ mod tests {
     fn ctx_with<'a>(
         out: &'a mut Vec<Record>,
         state: &'a mut HeapBackend,
+        key_buf: &'a mut Vec<u8>,
         wm: u64,
     ) -> OpCtx<'a> {
         OpCtx {
             out,
             state,
+            key_buf,
             key_groups: 128,
             watermark: wm,
         }
@@ -702,7 +730,8 @@ mod tests {
     fn map_and_flatmap() {
         let mut out = Vec::new();
         let mut state = HeapBackend::new();
-        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        let mut buf = Vec::new();
+        let mut ctx = ctx_with(&mut out, &mut state, &mut buf, 0);
         let mut m = MapOp {
             f: |r| match r {
                 Record::Pair { key, value, ts } => Some(Record::Pair {
@@ -734,7 +763,8 @@ mod tests {
         );
         let mut out = Vec::new();
         let mut state = HeapBackend::new();
-        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        let mut buf = Vec::new();
+        let mut ctx = ctx_with(&mut out, &mut state, &mut buf, 0);
         for i in 0..5 {
             op.on_record(0, pair(7, 100 + i), &mut ctx).unwrap();
         }
@@ -775,7 +805,8 @@ mod tests {
         );
         let mut out = Vec::new();
         let mut state = HeapBackend::new();
-        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        let mut buf = Vec::new();
+        let mut ctx = ctx_with(&mut out, &mut state, &mut buf, 0);
         op.on_record(0, pair(1, 2500), &mut ctx).unwrap();
         op.on_watermark(10_000, &mut ctx).unwrap();
         // ts=2500 belongs to [1000,3000) and [2000,4000).
@@ -791,7 +822,8 @@ mod tests {
         );
         let mut out = Vec::new();
         let mut state = HeapBackend::new();
-        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        let mut buf = Vec::new();
+        let mut ctx = ctx_with(&mut out, &mut state, &mut buf, 0);
         // Three events within the gap → one session [1000, 1250).
         op.on_record(0, pair(1, 1000), &mut ctx).unwrap();
         op.on_record(0, pair(1, 1080), &mut ctx).unwrap();
@@ -830,7 +862,8 @@ mod tests {
         );
         let mut out = Vec::new();
         let mut state = HeapBackend::new();
-        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        let mut buf = Vec::new();
+        let mut ctx = ctx_with(&mut out, &mut state, &mut buf, 0);
         op.on_record(0, pair(1, 100), &mut ctx).unwrap();
         op.on_watermark(150, &mut ctx).unwrap();
         assert_eq!(ctx.out.len(), 1);
@@ -850,7 +883,8 @@ mod tests {
         );
         let mut out = Vec::new();
         let mut state = HeapBackend::new();
-        let mut ctx = ctx_with(&mut out, &mut state, 1000);
+        let mut buf = Vec::new();
+        let mut ctx = ctx_with(&mut out, &mut state, &mut buf, 1000);
         op.on_record(0, pair(1, 50), &mut ctx).unwrap();
         op.on_watermark(2000, &mut ctx).unwrap();
         assert!(ctx.out.is_empty());
@@ -865,7 +899,8 @@ mod tests {
         );
         let mut out = Vec::new();
         let mut state = HeapBackend::new();
-        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        let mut buf = Vec::new();
+        let mut ctx = ctx_with(&mut out, &mut state, &mut buf, 0);
         op.on_record(0, pair(1, 100), &mut ctx).unwrap();
         op.on_record(0, pair(2, 1100), &mut ctx).unwrap();
         let frags = op.aux_snapshot();
@@ -945,7 +980,8 @@ mod tests {
         };
         let mut out = Vec::new();
         let mut state = HeapBackend::new();
-        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        let mut buf = Vec::new();
+        let mut ctx = ctx_with(&mut out, &mut state, &mut buf, 0);
         op.on_record(
             0,
             Record::Auction {
@@ -1001,7 +1037,8 @@ mod tests {
         );
         let mut out = Vec::new();
         let mut state = HeapBackend::new();
-        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        let mut buf = Vec::new();
+        let mut ctx = ctx_with(&mut out, &mut state, &mut buf, 0);
         // Person 1 and their auction in the same window → match.
         op.on_record(0, Record::Person { id: 1, city: 0, ts: 100 }, &mut ctx)
             .unwrap();
@@ -1038,7 +1075,8 @@ mod tests {
     fn kvstore_modes() {
         let mut out = Vec::new();
         let mut state = HeapBackend::new();
-        let mut ctx = ctx_with(&mut out, &mut state, 0);
+        let mut buf = Vec::new();
+        let mut ctx = ctx_with(&mut out, &mut state, &mut buf, 0);
         let rec = |k: u64| Record::Kv {
             key: k,
             payload: vec![9u8; 16],

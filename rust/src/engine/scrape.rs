@@ -27,6 +27,10 @@ struct OpAcc {
     has_storage: bool,
     access_ns_sum: f64,
     access_ns_n: u64,
+    /// Write-stall and flush/compaction ns: folded into τ's numerator but
+    /// not its access count — storage wait amortised over real accesses.
+    stall_ns_sum: f64,
+    flush_ns_sum: f64,
     state_bytes: u64,
 }
 
@@ -81,10 +85,24 @@ impl Scraper {
                     }
                 }
                 Sample::Histo { count, mean, .. } => {
-                    if id.name == names::STATE_ACCESS_NS && *count > 0 {
-                        a.access_ns_sum += mean * *count as f64;
-                        a.access_ns_n += count;
-                        a.has_storage = true;
+                    if *count == 0 {
+                        continue;
+                    }
+                    match id.name.as_str() {
+                        names::STATE_ACCESS_NS => {
+                            a.access_ns_sum += mean * *count as f64;
+                            a.access_ns_n += count;
+                            a.has_storage = true;
+                        }
+                        names::STATE_STALL_NS => {
+                            a.stall_ns_sum += mean * *count as f64;
+                            a.has_storage = true;
+                        }
+                        names::STATE_FLUSH_NS => {
+                            a.flush_ns_sum += mean * *count as f64;
+                            a.has_storage = true;
+                        }
+                        _ => {}
                     }
                 }
             }
@@ -123,8 +141,16 @@ impl Scraper {
                         .then(|| {
                             a.cache_hits as f64 / (a.cache_hits + a.cache_misses) as f64
                         }),
-                    access_latency_us: (a.access_ns_n > 0)
-                        .then(|| a.access_ns_sum / a.access_ns_n as f64 / 1e3),
+                    // τ decomposition: pure access time plus stall and
+                    // flush/compaction time, amortised over the interval's
+                    // accesses — storage pressure shows up in τ even though
+                    // the work happens on the background worker.
+                    access_latency_us: (a.access_ns_n > 0).then(|| {
+                        (a.access_ns_sum + a.stall_ns_sum + a.flush_ns_sum)
+                            / a.access_ns_n as f64
+                            / 1e3
+                    }),
+                    stall_seconds: a.stall_ns_sum / 1e9,
                     state_size_bytes: a.state_bytes,
                 };
                 (op, sample)
@@ -224,6 +250,24 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(5));
         let s = scraper.sample();
         assert!(s["y"].busyness < 0.1, "busyness {}", s["y"].busyness);
+    }
+
+    #[test]
+    fn stall_and_flush_time_fold_into_tau() {
+        let reg = Registry::new();
+        let id = |n: &str| MetricId::new(n).with("op", "s").with("task", 0);
+        reg.counter(id(names::BUSY_NS)).add(1);
+        // 10 accesses × 1 ms + one 5 ms stall + one 5 ms flush:
+        // τ = (10 + 5 + 5) ms / 10 accesses = 2 ms.
+        reg.histo(id(names::STATE_ACCESS_NS)).record_n(1_000_000, 10);
+        reg.histo(id(names::STATE_STALL_NS)).record(5_000_000);
+        reg.histo(id(names::STATE_FLUSH_NS)).record(5_000_000);
+        let mut scraper = Scraper::new(reg);
+        let s = scraper.sample();
+        let tau = s["s"].access_latency_us.unwrap();
+        assert!((tau - 2000.0).abs() / 2000.0 < 0.05, "tau={tau}");
+        // Stall seconds surface on the sample for trace integrals.
+        assert!((s["s"].stall_seconds - 0.005).abs() < 1e-6);
     }
 
     #[test]

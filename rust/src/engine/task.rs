@@ -8,7 +8,7 @@ use super::savepoint::{OperatorState, TaskRestore};
 use crate::metrics::{names, Counter, MetricId, Registry};
 use crate::state::{split_state_key, StateBackend};
 use anyhow::Result;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -127,6 +127,12 @@ pub struct TaskHarness {
     pub flush_interval: Duration,
     /// Control-plane channel (live resizes, exchange re-wiring, decommission).
     pub control: Receiver<ControlMsg>,
+    /// Cumulative LSM write-stall nanoseconds, shared with the state
+    /// backend's metric hooks. Sampled around record processing so stall
+    /// time is billed as blocked (backpressure), not busy — a stalled task
+    /// must read as "waiting on storage", or the policy would scale CPU
+    /// when it should scale memory.
+    pub stall_ns: Option<Arc<AtomicU64>>,
 }
 
 /// What a finished task hands back to the job manager.
@@ -287,8 +293,12 @@ impl TaskHarness {
         };
         let (rx, mut tracker) = self.input.take().expect("transform needs input");
         let mut out_buf: Vec<crate::graph::Record> = Vec::with_capacity(512);
+        let mut key_buf: Vec<u8> = Vec::with_capacity(64);
         let mut last_flush = Instant::now();
         let mut decommissioned = false;
+        let stall_counter = self.stall_ns.clone();
+        let stall_now =
+            |c: &Option<Arc<AtomicU64>>| c.as_ref().map_or(0, |s| s.load(Ordering::Relaxed));
         loop {
             let bp_ctl = Self::poll_control(
                 &self.control,
@@ -308,6 +318,7 @@ impl TaskHarness {
                 Ok((from, Envelope::Batch { port, records })) => {
                     let _ = from;
                     let t0 = Instant::now();
+                    let stall0 = stall_now(&stall_counter);
                     let n = records.len() as u64;
                     self.metrics.records_in.add(n);
                     let wm = tracker.current_watermark();
@@ -317,6 +328,7 @@ impl TaskHarness {
                         let mut ctx = OpCtx {
                             out: &mut out_buf,
                             state: self.state.as_mut(),
+                            key_buf: &mut key_buf,
                             key_groups: self.key_groups,
                             watermark: wm,
                         };
@@ -328,20 +340,25 @@ impl TaskHarness {
                     for rec in out_buf.drain(..) {
                         bp += emit_all(&mut self.outputs, self.channel_id, rec);
                     }
+                    // Write-stall ns accrued inside on_record count as
+                    // blocked time, not busy time.
+                    let blocked = bp + (stall_now(&stall_counter) - stall0);
                     self.metrics.records_out.add(emitted);
-                    self.metrics.backpressure_ns.add(bp);
+                    self.metrics.backpressure_ns.add(blocked);
                     self.metrics
                         .busy_ns
-                        .add((t0.elapsed().as_nanos() as u64).saturating_sub(bp));
+                        .add((t0.elapsed().as_nanos() as u64).saturating_sub(blocked));
                 }
                 Ok((from, Envelope::Watermark { ts, .. })) => {
                     if let Some(wm) = tracker.on_watermark(from, ts) {
                         let t0 = Instant::now();
+                        let stall0 = stall_now(&stall_counter);
                         let mut bp = 0u64;
                         {
                             let mut ctx = OpCtx {
                                 out: &mut out_buf,
                                 state: self.state.as_mut(),
+                                key_buf: &mut key_buf,
                                 key_groups: self.key_groups,
                                 watermark: wm,
                             };
@@ -354,11 +371,12 @@ impl TaskHarness {
                         for out in &mut self.outputs {
                             bp += out.send_watermark(self.channel_id, wm);
                         }
+                        let blocked = bp + (stall_now(&stall_counter) - stall0);
                         self.metrics.records_out.add(emitted);
-                        self.metrics.backpressure_ns.add(bp);
+                        self.metrics.backpressure_ns.add(blocked);
                         self.metrics
                             .busy_ns
-                            .add((t0.elapsed().as_nanos() as u64).saturating_sub(bp));
+                            .add((t0.elapsed().as_nanos() as u64).saturating_sub(blocked));
                     }
                 }
                 Ok((from, Envelope::Eos)) => {
@@ -397,6 +415,7 @@ impl TaskHarness {
             let mut ctx = OpCtx {
                 out: &mut out_buf,
                 state: self.state.as_mut(),
+                key_buf: &mut key_buf,
                 key_groups: self.key_groups,
                 watermark: tracker.current_watermark(),
             };
@@ -414,11 +433,16 @@ impl TaskHarness {
                 out.send_eos(self.channel_id);
             }
         }
-        // Export keyed state grouped by key group.
+        // Export keyed state grouped by key group (owned copies: the
+        // savepoint must outlive the backend's buffers).
         let mut export = OperatorState::default();
         for (k, v) in self.state.scan_prefix(b"")? {
             if let Some((group, _)) = split_state_key(&k) {
-                export.keyed.entry(group).or_default().push((k, v));
+                export
+                    .keyed
+                    .entry(group)
+                    .or_default()
+                    .push((k.to_vec(), v.to_vec()));
             }
         }
         for (group, blob) in op.aux_snapshot() {
@@ -490,6 +514,7 @@ mod tests {
             restore: TaskRestore::default(),
             flush_interval: Duration::from_millis(10),
             control: ctl(),
+            stall_ns: None,
         };
         let h = std::thread::spawn(move || harness.run().unwrap());
         up_tx[0]
@@ -549,6 +574,7 @@ mod tests {
             restore: TaskRestore::default(),
             flush_interval: Duration::from_millis(5),
             control: ctl(),
+            stall_ns: None,
         };
         let h = std::thread::spawn(move || harness.run().unwrap());
         // Two events in window [0,100), one in [100,200).
@@ -620,6 +646,7 @@ mod tests {
                 restore: TaskRestore::default(),
                 flush_interval: Duration::from_millis(5),
                 control: ctl(),
+                stall_ns: None,
             };
             let h = std::thread::spawn(move || harness.run().unwrap());
             up_tx[0]
@@ -676,6 +703,7 @@ mod tests {
             restore,
             flush_interval: Duration::from_millis(5),
             control: ctl(),
+            stall_ns: None,
         };
         let h = std::thread::spawn(move || harness.run().unwrap());
         up_tx[0]
@@ -761,6 +789,7 @@ mod tests {
             restore: TaskRestore::default(),
             flush_interval: Duration::from_millis(5),
             control: ctl(),
+            stall_ns: None,
         };
         let h = std::thread::spawn(move || harness.run().unwrap());
         std::thread::sleep(Duration::from_millis(30));

@@ -269,9 +269,11 @@ mod tests {
         let mut op = XlaCurrencyMapOp::new(model);
         let mut out = Vec::new();
         let mut state = HeapBackend::new();
+        let mut key_buf = Vec::new();
         let mut ctx = OpCtx {
             out: &mut out,
             state: &mut state,
+            key_buf: &mut key_buf,
             key_groups: 128,
             watermark: 0,
         };
@@ -299,9 +301,11 @@ mod tests {
         let mut op = XlaWindowCountOp::new(model, 100);
         let mut out = Vec::new();
         let mut state = HeapBackend::new();
+        let mut key_buf = Vec::new();
         let mut ctx = OpCtx {
             out: &mut out,
             state: &mut state,
+            key_buf: &mut key_buf,
             key_groups: 128,
             watermark: 0,
         };
@@ -337,9 +341,11 @@ mod tests {
         let mut op = XlaWindowCountOp::new(model, 1_000_000);
         let mut out = Vec::new();
         let mut state = HeapBackend::new();
+        let mut key_buf = Vec::new();
         let mut ctx = OpCtx {
             out: &mut out,
             state: &mut state,
+            key_buf: &mut key_buf,
             key_groups: 128,
             watermark: 0,
         };

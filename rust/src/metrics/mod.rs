@@ -286,6 +286,10 @@ pub mod names {
     pub const STATE_CACHE_MISS: &str = "state_cache_miss";
     /// State access latency histogram, nanoseconds (per task).
     pub const STATE_ACCESS_NS: &str = "state_access_ns";
+    /// Background flush/compaction unit duration histogram, ns (per task).
+    pub const STATE_FLUSH_NS: &str = "state_flush_ns";
+    /// Write-stall duration histogram, nanoseconds (per task).
+    pub const STATE_STALL_NS: &str = "state_stall_ns";
     /// Current state size in bytes (per task).
     pub const STATE_SIZE_BYTES: &str = "state_size_bytes";
     /// Source: current emitted rate (events/s).

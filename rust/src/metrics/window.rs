@@ -22,7 +22,14 @@ pub struct OperatorSample {
     /// statelessness is detected by the absence of RocksDB metrics).
     pub cache_hit_rate: Option<f64>,
     /// Mean state access latency τ in µs; `None` for stateless operators.
+    /// Includes write-stall and flush/compaction time amortised over the
+    /// interval's accesses, so τ reflects what the operator actually waits
+    /// on storage.
     pub access_latency_us: Option<f64>,
+    /// Write-stall seconds accrued during the sample interval, summed over
+    /// the operator's tasks (memtable/L0 backpressure from the background
+    /// storage worker).
+    pub stall_seconds: f64,
     /// Total state size in bytes across tasks.
     pub state_size_bytes: u64,
 }
@@ -39,6 +46,8 @@ pub struct OperatorWindow {
     /// `None` if no task of this operator reported storage metrics.
     pub cache_hit_rate: Option<f64>,
     pub access_latency_us: Option<f64>,
+    /// Total write-stall seconds over the window (additive, not averaged).
+    pub stall_seconds: f64,
     pub state_size_bytes: u64,
 }
 
@@ -77,6 +86,7 @@ struct Acc {
     hit_n: u32,
     lat_sum: f64,
     lat_n: u32,
+    stall_sum: f64,
     state_size_last: u64,
 }
 
@@ -102,6 +112,7 @@ impl WindowAggregator {
             a.lat_sum += l;
             a.lat_n += 1;
         }
+        a.stall_sum += s.stall_seconds;
         a.state_size_last = s.state_size_bytes;
     }
 
@@ -129,6 +140,7 @@ impl WindowAggregator {
                         cache_hit_rate: (a.hit_n > 0).then(|| a.hit_sum / a.hit_n as f64),
                         access_latency_us: (a.lat_n > 0)
                             .then(|| a.lat_sum / a.lat_n as f64),
+                        stall_seconds: a.stall_sum,
                         state_size_bytes: a.state_size_last,
                     },
                 )
@@ -152,6 +164,7 @@ mod tests {
             output_rate: rate * 2.0,
             cache_hit_rate: hit,
             access_latency_us: hit.map(|_| 500.0),
+            stall_seconds: 0.25,
             state_size_bytes: 1024,
         }
     }
@@ -167,6 +180,8 @@ mod tests {
         assert!((c.busyness - 0.5).abs() < 1e-9);
         assert!((c.observed_rate - 150.0).abs() < 1e-9);
         assert!((c.cache_hit_rate.unwrap() - 0.8).abs() < 1e-9);
+        // Stall time is additive across samples, not averaged.
+        assert!((c.stall_seconds - 0.5).abs() < 1e-9);
         assert!(!c.is_stateless());
     }
 

@@ -7,7 +7,12 @@
 //! * θ — block-cache hit rate (low ⇒ the cache is too small for the
 //!   working set, Takeaway 2),
 //! * τ — mean state access latency (high ⇒ a significant fraction of
-//!   accesses reach disk, §4).
+//!   accesses reach disk, §4). With the background flush/compaction
+//!   pipeline, the live engine's τ is a *decomposition*: pure foreground
+//!   access time plus write-stall time plus background storage-unit
+//!   (flush/compaction) time, amortised over the window's accesses — so an
+//!   operator whose writes outrun its storage worker still shows the
+//!   latency pressure that steers this policy toward a vertical step.
 //!
 //! A decision history tracks whether the previous step was vertical
 //! (`o.v`) and whether it helped (θ↑ or τ↓), implementing lines 7–14;

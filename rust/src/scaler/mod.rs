@@ -281,6 +281,7 @@ pub(crate) mod testutil {
             output_rate: out_rate,
             cache_hit_rate: None,
             access_latency_us: None,
+            stall_seconds: 0.0,
             state_size_bytes: 0,
         }
     }

@@ -33,6 +33,11 @@ pub struct TracePoint {
     pub cores: u32,
     /// Allocated memory, MB (slot overheads + managed).
     pub memory_mb: u64,
+    /// Write-stall seconds accrued across all subtasks during this sample
+    /// interval. The fluid model reports zero (it amortises flush and
+    /// compaction work into `put_us`); live traces fill this from the
+    /// per-operator `stall_seconds` samples.
+    pub stall_s: f64,
 }
 
 /// A reconfiguration the policy enacted.
@@ -86,6 +91,13 @@ impl AutoscaleTrace {
     /// Cumulative allocated CPU over the run, core·s.
     pub fn core_seconds(&self) -> f64 {
         integrate(&self.points, |p| p.cores as f64)
+    }
+
+    /// Cumulative write-stall seconds across subtasks over the run. Unlike
+    /// the resource integrals this is a plain sum: each point already
+    /// carries seconds accrued during its interval.
+    pub fn stall_seconds(&self) -> f64 {
+        self.points.iter().map(|p| p.stall_s).sum()
     }
 
     /// Total modeled reconfiguration downtime over the run, s.
@@ -187,6 +199,7 @@ pub fn run_autoscaling(
                 offered,
                 cores,
                 memory_mb,
+                stall_s: 0.0,
             });
             continue;
         }
@@ -206,6 +219,7 @@ pub fn run_autoscaling(
             offered,
             cores,
             memory_mb,
+            stall_s: 0.0,
         });
 
         if t < stabilize_until {
@@ -220,6 +234,7 @@ pub fn run_autoscaling(
                 output_rate: load.output_rate * noise,
                 cache_hit_rate: load.theta,
                 access_latency_us: load.tau_us,
+                stall_seconds: 0.0,
                 state_size_bytes: load.state_bytes,
             };
             aggregator.record(name, &sample);
@@ -515,6 +530,18 @@ mod tests {
         let max_cores = trace.points.iter().map(|p| p.cores).max().unwrap() as f64;
         let cs = trace.core_seconds();
         assert!(cs > 0.0 && cs <= max_cores * dur);
+        // The fluid model never stalls (flush cost is amortised in put_us).
+        assert_eq!(trace.stall_seconds(), 0.0);
+    }
+
+    #[test]
+    fn stall_integral_is_a_plain_sum_over_points() {
+        let (_, mut trace) = run("q1", ScalerKind::Ds2);
+        for (i, p) in trace.points.iter_mut().enumerate() {
+            p.stall_s = if i % 2 == 0 { 0.5 } else { 0.0 };
+        }
+        let expect = 0.5 * trace.points.iter().step_by(2).count() as f64;
+        assert!((trace.stall_seconds() - expect).abs() < 1e-9);
     }
 
     #[test]

@@ -6,50 +6,96 @@
 //! footer:  [entry_count: u32][crc32 of everything before: u32]
 //! ```
 //! Entries are sorted by key; blocks are immutable once built.
+//!
+//! A decoded block keeps the raw buffer in one shared `Arc<[u8]>` plus an
+//! offset index, so lookups hand out [`Bytes`] views into the buffer instead
+//! of copying every key and value (the allocation-free read path).
+
+use crate::util::bytes::Bytes;
+use std::sync::Arc;
+
+/// Per-entry bookkeeping overhead added to `size_bytes` (offset slot +
+/// amortised header), keeping cache accounting roughly comparable to the
+/// old per-entry representation.
+const ENTRY_OVERHEAD: usize = 16;
 
 /// A decoded, immutable data block.
 #[derive(Clone, Debug)]
 pub struct Block {
-    /// (key, value) pairs, sorted.
-    entries: Vec<(Vec<u8>, Vec<u8>)>,
-    bytes: usize,
+    /// The raw encoded block (entries only, footer stripped).
+    data: Arc<[u8]>,
+    /// Byte offset of each entry header within `data`, sorted by key.
+    offsets: Vec<u32>,
 }
 
 impl Block {
-    /// Binary-search lookup.
-    pub fn get(&self, key: &[u8]) -> Option<&[u8]> {
-        self.entries
-            .binary_search_by(|(k, _)| k.as_slice().cmp(key))
-            .ok()
-            .map(|i| self.entries[i].1.as_slice())
+    /// An empty block (no entries, no buffer).
+    pub fn empty() -> Block {
+        Block {
+            data: Arc::from(&[][..]),
+            offsets: Vec::new(),
+        }
     }
 
-    pub fn entries(&self) -> &[(Vec<u8>, Vec<u8>)] {
-        &self.entries
+    /// `(key_range, value_range)` of entry `i` within `data`.
+    fn entry_bounds(&self, i: usize) -> (std::ops::Range<usize>, std::ops::Range<usize>) {
+        let pos = self.offsets[i] as usize;
+        let klen = u16::from_le_bytes(self.data[pos..pos + 2].try_into().unwrap()) as usize;
+        let vlen =
+            u32::from_le_bytes(self.data[pos + 2..pos + 6].try_into().unwrap()) as usize;
+        let kstart = pos + 6;
+        (kstart..kstart + klen, kstart + klen..kstart + klen + vlen)
     }
 
-    pub fn first_key(&self) -> Option<&[u8]> {
-        self.entries.first().map(|(k, _)| k.as_slice())
+    /// Borrowed key of entry `i`.
+    pub fn key_at(&self, i: usize) -> &[u8] {
+        let (kr, _) = self.entry_bounds(i);
+        &self.data[kr]
     }
 
-    pub fn last_key(&self) -> Option<&[u8]> {
-        self.entries.last().map(|(k, _)| k.as_slice())
+    /// Shared-key view of entry `i` (no copy).
+    pub fn key_bytes_at(&self, i: usize) -> Bytes {
+        let (kr, _) = self.entry_bounds(i);
+        Bytes::from_arc(self.data.clone()).slice(kr)
+    }
+
+    /// Shared-value view of entry `i` (no copy).
+    pub fn value_at(&self, i: usize) -> Bytes {
+        let (_, vr) = self.entry_bounds(i);
+        Bytes::from_arc(self.data.clone()).slice(vr)
+    }
+
+    /// Binary-search lookup; the hit shares the block buffer.
+    pub fn get(&self, key: &[u8]) -> Option<Bytes> {
+        let mut lo = 0usize;
+        let mut hi = self.offsets.len();
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            match self.key_at(mid).cmp(key) {
+                std::cmp::Ordering::Less => lo = mid + 1,
+                std::cmp::Ordering::Greater => hi = mid,
+                std::cmp::Ordering::Equal => return Some(self.value_at(mid)),
+            }
+        }
+        None
     }
 
     /// In-memory footprint (for cache accounting).
     pub fn size_bytes(&self) -> usize {
-        self.bytes
+        self.data.len() + self.offsets.len() * ENTRY_OVERHEAD
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.offsets.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.offsets.is_empty()
     }
 
-    /// Decode from the on-disk representation, verifying the CRC.
+    /// Decode from the on-disk representation, verifying the CRC. The entry
+    /// body is copied once into the shared buffer; all reads after that are
+    /// zero-copy views.
     pub fn decode(data: &[u8]) -> anyhow::Result<Block> {
         if data.len() < 8 {
             anyhow::bail!("block too short: {} bytes", data.len());
@@ -62,9 +108,8 @@ impl Block {
         if stored_crc != actual_crc {
             anyhow::bail!("block CRC mismatch: stored={stored_crc:08x} actual={actual_crc:08x}");
         }
-        let mut entries = Vec::with_capacity(count);
+        let mut offsets = Vec::with_capacity(count);
         let mut pos = 0usize;
-        let mut bytes = 0usize;
         for _ in 0..count {
             if pos + 6 > body_len {
                 anyhow::bail!("block truncated at entry header");
@@ -72,18 +117,16 @@ impl Block {
             let klen = u16::from_le_bytes(data[pos..pos + 2].try_into().unwrap()) as usize;
             let vlen =
                 u32::from_le_bytes(data[pos + 2..pos + 6].try_into().unwrap()) as usize;
-            pos += 6;
-            if pos + klen + vlen > body_len {
+            if pos + 6 + klen + vlen > body_len {
                 anyhow::bail!("block truncated at entry body");
             }
-            let key = data[pos..pos + klen].to_vec();
-            pos += klen;
-            let value = data[pos..pos + vlen].to_vec();
-            pos += vlen;
-            bytes += klen + vlen + 48;
-            entries.push((key, value));
+            offsets.push(pos as u32);
+            pos += 6 + klen + vlen;
         }
-        Ok(Block { entries, bytes })
+        Ok(Block {
+            data: Arc::from(&data[..body_len]),
+            offsets,
+        })
     }
 }
 
@@ -165,8 +208,39 @@ mod tests {
         assert_eq!(last, 99u32.to_be_bytes());
         let block = Block::decode(&bytes).unwrap();
         assert_eq!(block.len(), 100);
-        assert_eq!(block.get(&42u32.to_be_bytes()), Some(b"value-42".as_ref()));
+        assert_eq!(
+            block.get(&42u32.to_be_bytes()).as_deref(),
+            Some(b"value-42".as_ref())
+        );
         assert_eq!(block.get(&200u32.to_be_bytes()), None);
+    }
+
+    #[test]
+    fn lookups_share_the_block_buffer() {
+        let mut b = BlockBuilder::new(4096);
+        b.add(b"k1", b"v1");
+        b.add(b"k2", b"v2");
+        let (bytes, _, _) = b.finish();
+        let block = Block::decode(&bytes).unwrap();
+        let v1 = block.get(b"k1").unwrap();
+        let v2 = block.get(b"k2").unwrap();
+        // Both hits view the same underlying buffer — no per-hit allocation.
+        let base = block.data.as_ptr() as usize;
+        let p1 = v1.as_slice().as_ptr() as usize;
+        let p2 = v2.as_slice().as_ptr() as usize;
+        assert!(p1 >= base && p1 < base + block.data.len());
+        assert!(p2 >= base && p2 < base + block.data.len());
+        assert_eq!(&v1[..], b"v1");
+        assert_eq!(&v2[..], b"v2");
+    }
+
+    #[test]
+    fn empty_block_is_empty() {
+        let e = Block::empty();
+        assert!(e.is_empty());
+        assert_eq!(e.len(), 0);
+        assert_eq!(e.get(b"anything"), None);
+        assert_eq!(e.size_bytes(), 0);
     }
 
     #[test]
@@ -216,7 +290,8 @@ mod tests {
             let block = Block::decode(&bytes).unwrap();
             assert_eq!(block.len(), keys.len());
             for (i, k) in keys.iter().enumerate() {
-                assert_eq!(block.get(k), Some(i.to_le_bytes().as_ref()));
+                assert_eq!(block.get(k).as_deref(), Some(i.to_le_bytes().as_ref()));
+                assert_eq!(block.key_at(i), k.as_slice());
             }
         });
     }

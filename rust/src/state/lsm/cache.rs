@@ -8,7 +8,7 @@
 
 use super::block::Block;
 use crate::util::hash::FxHashMap;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Cache key: (table id, block index within the table).
 pub type BlockKey = (u64, u32);
@@ -175,7 +175,7 @@ impl BlockCache {
             let size = self.arena[idx].block.size_bytes();
             self.detach(idx);
             self.map.remove(&key);
-            self.arena[idx].block = Arc::new(Block::decode(&empty_block()).unwrap());
+            self.arena[idx].block = empty_block();
             self.free.push(idx);
             self.used_bytes -= size;
             self.evictions += 1;
@@ -194,7 +194,7 @@ impl BlockCache {
             let idx = self.map.remove(&key).unwrap();
             self.used_bytes -= self.arena[idx].block.size_bytes();
             self.detach(idx);
-            self.arena[idx].block = Arc::new(Block::decode(&empty_block()).unwrap());
+            self.arena[idx].block = empty_block();
             self.free.push(idx);
         }
     }
@@ -213,13 +213,13 @@ impl BlockCache {
     }
 }
 
-/// Encoded empty block used to replace evicted Arcs (frees the old block as
-/// soon as external references drop).
-fn empty_block() -> Vec<u8> {
-    let mut out = 0u32.to_le_bytes().to_vec();
-    let crc = crc32fast::hash(&out);
-    out.extend_from_slice(&crc.to_le_bytes());
-    out
+/// One lazily-created shared empty block, used to replace evicted entries'
+/// Arcs (frees the old block as soon as external references drop). Shared
+/// process-wide: eviction and invalidation only bump a refcount instead of
+/// building and decoding a placeholder per slot.
+fn empty_block() -> Arc<Block> {
+    static EMPTY: OnceLock<Arc<Block>> = OnceLock::new();
+    EMPTY.get_or_init(|| Arc::new(Block::empty())).clone()
 }
 
 #[cfg(test)]
@@ -363,6 +363,24 @@ mod tests {
         let survivor = (0..100u32).find(|i| c.contains(&(0, *i))).unwrap();
         c.insert((0, survivor), make_block(survivor, 500));
         assert_eq!(c.used_bytes(), before);
+    }
+
+    #[test]
+    fn evicted_slots_share_one_placeholder() {
+        let b0 = make_block(0, 1000);
+        let size = b0.size_bytes();
+        let mut c = BlockCache::new(size);
+        c.insert((0, 0), b0);
+        c.insert((0, 1), make_block(1, 1000)); // evicts (0,0)
+        c.invalidate_table(0);
+        assert!(c.is_empty());
+        // Every freed slot points at the single shared empty block — no
+        // fresh decode per eviction.
+        let placeholder = empty_block();
+        for &idx in &c.free {
+            assert!(Arc::ptr_eq(&c.arena[idx].block, &placeholder));
+        }
+        assert!(!c.free.is_empty());
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! K-way merge of sorted runs for compaction. Runs are ordered
 //! newest-to-oldest; the newest occurrence of a key wins. Tombstones are
 //! dropped only when merging into the bottommost populated level.
+//!
+//! Runs carry shared [`Bytes`] keys/records, so "taking" an entry during the
+//! merge is a reference-count bump, not a buffer copy.
+
+use crate::util::bytes::Bytes;
 
 /// One entry as stored internally: tag byte distinguishes puts from deletes.
 pub const TAG_VALUE: u8 = 0;
@@ -27,15 +32,24 @@ pub fn decode_record(stored: &[u8]) -> Option<&[u8]> {
     }
 }
 
+/// Decode a shared stored record into a shared user-value view (no copy):
+/// `Some(value)` or `None` for a tombstone.
+pub fn decode_record_shared(stored: &Bytes) -> Option<Bytes> {
+    match stored.first() {
+        Some(&TAG_VALUE) => Some(stored.slice(1..stored.len())),
+        _ => None, // TAG_TOMBSTONE or malformed
+    }
+}
+
 /// Merge sorted runs (each `Vec<(key, stored_record)>`, sorted by key,
 /// `runs[0]` newest). Returns a single sorted run with one record per key.
 /// If `drop_tombstones`, deletion markers are elided from the output.
 pub fn merge_runs(
-    runs: Vec<Vec<(Vec<u8>, Vec<u8>)>>,
+    runs: Vec<Vec<(Bytes, Bytes)>>,
     drop_tombstones: bool,
-) -> Vec<(Vec<u8>, Vec<u8>)> {
+) -> Vec<(Bytes, Bytes)> {
     let total: usize = runs.iter().map(|r| r.len()).sum();
-    let mut out: Vec<(Vec<u8>, Vec<u8>)> = Vec::with_capacity(total);
+    let mut out: Vec<(Bytes, Bytes)> = Vec::with_capacity(total);
     // Cursor per run.
     let mut cursors = vec![0usize; runs.len()];
     loop {
@@ -53,9 +67,8 @@ pub fn merge_runs(
                 _ => {}
             }
         }
-        let Some((winner, key)) = best else { break };
-        let key = key.to_vec();
-        let record = runs[winner][cursors[winner]].1.clone();
+        let Some((winner, _)) = best else { break };
+        let (key, record) = runs[winner][cursors[winner]].clone();
         // Advance every run past this key (older duplicates are shadowed).
         for (i, run) in runs.iter().enumerate() {
             while cursors[i] < run.len() && run[cursors[i]].0 == key {
@@ -76,12 +89,18 @@ mod tests {
     use crate::testing::prop;
     use std::collections::BTreeMap;
 
-    fn kv(k: &str, v: &str) -> (Vec<u8>, Vec<u8>) {
-        (k.as_bytes().to_vec(), encode_value(v.as_bytes()))
+    fn kv(k: &str, v: &str) -> (Bytes, Bytes) {
+        (
+            Bytes::copy_from_slice(k.as_bytes()),
+            Bytes::from_vec(encode_value(v.as_bytes())),
+        )
     }
 
-    fn tomb(k: &str) -> (Vec<u8>, Vec<u8>) {
-        (k.as_bytes().to_vec(), encode_tombstone())
+    fn tomb(k: &str) -> (Bytes, Bytes) {
+        (
+            Bytes::copy_from_slice(k.as_bytes()),
+            Bytes::from_vec(encode_tombstone()),
+        )
     }
 
     #[test]
@@ -105,7 +124,7 @@ mod tests {
         assert_eq!(decode_record(&kept[0].1), None);
         let dropped = merge_runs(runs, true);
         assert_eq!(dropped.len(), 1);
-        assert_eq!(dropped[0].0, b"b");
+        assert_eq!(dropped[0].0, b"b".as_ref());
     }
 
     #[test]
@@ -113,6 +132,17 @@ mod tests {
         assert_eq!(decode_record(&encode_value(b"x")), Some(b"x".as_ref()));
         assert_eq!(decode_record(&encode_value(b"")), Some(b"".as_ref()));
         assert_eq!(decode_record(&encode_tombstone()), None);
+    }
+
+    #[test]
+    fn shared_decode_is_a_view() {
+        let stored = Bytes::from_vec(encode_value(b"payload"));
+        let v = decode_record_shared(&stored).unwrap();
+        assert_eq!(&v[..], b"payload");
+        assert_eq!(decode_record_shared(&Bytes::from_vec(encode_tombstone())), None);
+        // Empty value decodes to an empty view.
+        let empty = decode_record_shared(&Bytes::from_vec(encode_value(b""))).unwrap();
+        assert!(empty.is_empty());
     }
 
     #[test]
@@ -136,12 +166,20 @@ mod tests {
                 for (k, v) in &run {
                     model.insert(k.clone(), v.clone());
                 }
-                runs_old_to_new.push(run.into_iter().collect::<Vec<_>>());
+                runs_old_to_new.push(
+                    run.into_iter()
+                        .map(|(k, v)| (Bytes::from_vec(k), Bytes::from_vec(v)))
+                        .collect::<Vec<_>>(),
+                );
             }
             runs_old_to_new.reverse(); // now newest-first
             let merged = merge_runs(runs_old_to_new, false);
+            let got: Vec<(Vec<u8>, Vec<u8>)> = merged
+                .into_iter()
+                .map(|(k, v)| (k.to_vec(), v.to_vec()))
+                .collect();
             let want: Vec<(Vec<u8>, Vec<u8>)> = model.into_iter().collect();
-            assert_eq!(merged, want);
+            assert_eq!(got, want);
         });
     }
 

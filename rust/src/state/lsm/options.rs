@@ -29,6 +29,16 @@ pub struct DbOptions {
     pub max_levels: usize,
     /// PRNG seed (skiplist tower heights).
     pub seed: u64,
+    /// Run flushes/compactions on a background storage worker thread
+    /// (writes rotate the MemTable and return; RocksDB-style). When false,
+    /// storage work runs inline on the caller thread, deterministically.
+    pub background_storage: bool,
+    /// Writes stall once this many rotated (immutable) MemTables are
+    /// queued for flush. Must be ≥ 1.
+    pub max_immutable_memtables: usize,
+    /// Writes stall once L0 holds this many files (compaction debt).
+    /// Should be ≥ `l0_compaction_trigger`.
+    pub l0_stall_trigger: usize,
 }
 
 impl DbOptions {
@@ -47,6 +57,9 @@ impl DbOptions {
             file_target_bytes: 8 * MB,
             max_levels: 7,
             seed: 0x5EED,
+            background_storage: true,
+            max_immutable_memtables: 2,
+            l0_stall_trigger: 8,
         }
     }
 }

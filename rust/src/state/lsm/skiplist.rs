@@ -1,10 +1,15 @@
 //! Arena-backed skip list — the MemTable's core data structure (§3: "The
 //! MemTable, implemented as a skip list, is used to buffer writes").
 //!
-//! Single-writer, single-reader (each task owns its state backend), so no
-//! concurrency machinery: nodes live in a `Vec` arena addressed by `u32`
-//! indices, towers are per-node `Vec<u32>`.
+//! Single-writer (the owning task thread); once rotated into the immutable
+//! queue it is shared read-only with the background storage worker via
+//! `Arc<SkipList>` — nodes live in a `Vec` arena addressed by `u32`
+//! indices, towers are per-node `Vec<u32>`, no interior mutability.
+//!
+//! Values are stored as shared [`Bytes`] so rotated memtables and reads
+//! hand them out without copying.
 
+use crate::util::bytes::Bytes;
 use crate::util::rng::Rng;
 
 const MAX_HEIGHT: usize = 12;
@@ -12,7 +17,7 @@ const NIL: u32 = u32::MAX;
 
 struct Node {
     key: Vec<u8>,
-    value: Vec<u8>,
+    value: Bytes,
     /// next[level] — arena index of the successor at each level.
     next: Vec<u32>,
 }
@@ -89,7 +94,7 @@ impl SkipList {
     }
 
     /// Insert or overwrite.
-    pub fn insert(&mut self, key: &[u8], value: &[u8]) {
+    pub fn insert(&mut self, key: &[u8], value: Bytes) {
         let prev = self.find_prev(key);
         // Check for exact match at level 0.
         let at0 = if prev[0] == NIL {
@@ -100,7 +105,7 @@ impl SkipList {
         if at0 != NIL && self.arena[at0 as usize].key == key {
             let node = &mut self.arena[at0 as usize];
             self.bytes = self.bytes - node.value.len() + value.len();
-            node.value = value.to_vec();
+            node.value = value;
             return;
         }
         let h = self.random_height();
@@ -125,13 +130,13 @@ impl SkipList {
         self.len += 1;
         self.arena.push(Node {
             key: key.to_vec(),
-            value: value.to_vec(),
+            value,
             next,
         });
     }
 
-    /// Point lookup.
-    pub fn get(&self, key: &[u8]) -> Option<&[u8]> {
+    /// Point lookup: a shared view of the stored value.
+    pub fn get(&self, key: &[u8]) -> Option<&Bytes> {
         let prev = self.find_prev(key);
         let at0 = if prev[0] == NIL {
             self.head[0]
@@ -175,7 +180,7 @@ pub struct SkipIter<'a> {
 }
 
 impl<'a> Iterator for SkipIter<'a> {
-    type Item = (&'a [u8], &'a [u8]);
+    type Item = (&'a [u8], &'a Bytes);
 
     fn next(&mut self) -> Option<Self::Item> {
         if self.cur == NIL {
@@ -193,17 +198,21 @@ mod tests {
     use crate::testing::prop;
     use std::collections::BTreeMap;
 
+    fn b(s: &[u8]) -> Bytes {
+        Bytes::copy_from_slice(s)
+    }
+
     #[test]
     fn insert_get_overwrite() {
         let mut s = SkipList::new(1);
-        s.insert(b"b", b"2");
-        s.insert(b"a", b"1");
-        s.insert(b"c", b"3");
-        assert_eq!(s.get(b"a"), Some(b"1".as_ref()));
-        assert_eq!(s.get(b"b"), Some(b"2".as_ref()));
+        s.insert(b"b", b(b"2"));
+        s.insert(b"a", b(b"1"));
+        s.insert(b"c", b(b"3"));
+        assert_eq!(s.get(b"a").map(|v| &v[..]), Some(b"1".as_ref()));
+        assert_eq!(s.get(b"b").map(|v| &v[..]), Some(b"2".as_ref()));
         assert_eq!(s.get(b"zz"), None);
-        s.insert(b"b", b"22");
-        assert_eq!(s.get(b"b"), Some(b"22".as_ref()));
+        s.insert(b"b", b(b"22"));
+        assert_eq!(s.get(b"b").map(|v| &v[..]), Some(b"22".as_ref()));
         assert_eq!(s.len(), 3);
     }
 
@@ -211,7 +220,7 @@ mod tests {
     fn iteration_sorted() {
         let mut s = SkipList::new(2);
         for k in [5u8, 3, 9, 1, 7, 2, 8, 4, 6, 0] {
-            s.insert(&[k], &[k]);
+            s.insert(&[k], b(&[k]));
         }
         let keys: Vec<u8> = s.iter().map(|(k, _)| k[0]).collect();
         assert_eq!(keys, (0..10).collect::<Vec<u8>>());
@@ -221,7 +230,7 @@ mod tests {
     fn iter_from_seeks() {
         let mut s = SkipList::new(3);
         for k in 0..20u8 {
-            s.insert(&[k * 2], &[k]);
+            s.insert(&[k * 2], b(&[k]));
         }
         // Seek to a key between entries.
         let first = s.iter_from(&[7]).next().unwrap();
@@ -238,12 +247,12 @@ mod tests {
         let mut s = SkipList::new(4);
         let mut last = 0;
         for k in 0..100u32 {
-            s.insert(&k.to_be_bytes(), &[0u8; 100]);
+            s.insert(&k.to_be_bytes(), b(&[0u8; 100]));
             assert!(s.approx_bytes() > last);
             last = s.approx_bytes();
         }
         // Overwrite with smaller value shrinks accounting.
-        s.insert(&5u32.to_be_bytes(), &[0u8; 10]);
+        s.insert(&5u32.to_be_bytes(), b(&[0u8; 10]));
         assert!(s.approx_bytes() < last);
     }
 
@@ -257,11 +266,11 @@ mod tests {
                 let key = g.bytes(1, 8);
                 if g.chance(0.7) {
                     let value = g.bytes(0, 16);
-                    s.insert(&key, &value);
+                    s.insert(&key, Bytes::copy_from_slice(&value));
                     model.insert(key, value);
                 } else {
                     assert_eq!(
-                        s.get(&key),
+                        s.get(&key).map(|v| &v[..]),
                         model.get(&key).map(|v| v.as_slice()),
                         "get mismatch"
                     );

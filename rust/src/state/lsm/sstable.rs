@@ -12,6 +12,7 @@
 
 use super::block::{Block, BlockBuilder};
 use super::bloom::Bloom;
+use crate::util::bytes::Bytes;
 use anyhow::{bail, Context};
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom, Write};
@@ -198,15 +199,14 @@ impl SsTableReader {
         file.seek(SeekFrom::Start(index_off))?;
         file.read_exact(&mut index_bytes)?;
         let index_block = Block::decode(&index_bytes)?;
-        let metas = index_block
-            .entries()
-            .iter()
-            .map(|(k, v)| {
+        let metas = (0..index_block.len())
+            .map(|i| {
+                let v = index_block.value_at(i);
                 if v.len() != 16 {
                     bail!("bad index entry");
                 }
                 Ok(BlockMeta {
-                    last_key: k.clone(),
+                    last_key: index_block.key_at(i).to_vec(),
                     offset: u64::from_le_bytes(v[0..8].try_into().unwrap()),
                     len: u64::from_le_bytes(v[8..16].try_into().unwrap()),
                 })
@@ -263,12 +263,16 @@ impl SsTableReader {
         self.metas.len()
     }
 
-    /// Sequential scan over all entries (used by compaction; bypasses cache).
-    pub fn scan(&self) -> anyhow::Result<Vec<(Vec<u8>, Vec<u8>)>> {
+    /// Sequential scan over all entries (used by compaction; bypasses
+    /// cache). Entries are shared views of each block's buffer — one read
+    /// and one decode per block, no per-entry copies.
+    pub fn scan(&self) -> anyhow::Result<Vec<(Bytes, Bytes)>> {
         let mut out = Vec::with_capacity(self.handle.entry_count as usize);
         for i in 0..self.metas.len() {
             let block = self.read_block(i)?;
-            out.extend(block.entries().iter().cloned());
+            for e in 0..block.len() {
+                out.push((block.key_bytes_at(e), block.value_at(e)));
+            }
         }
         Ok(out)
     }
@@ -308,7 +312,7 @@ mod tests {
             let bi = r.find_block(&i.to_be_bytes()).unwrap();
             let block = r.read_block(bi).unwrap();
             assert_eq!(
-                block.get(&i.to_be_bytes()),
+                block.get(&i.to_be_bytes()).as_deref(),
                 Some(format!("val-{i}").as_bytes()),
                 "key {i}"
             );

@@ -7,27 +7,33 @@
 //! * [`lsm::Db`] via [`LsmBackend`] — the production path ("rockslite"),
 //!   whose cache hit rate θ and access latency τ drive Justin's decisions.
 //!
-//! Keys are namespaced by key group (`u16` big-endian prefix) so savepoints
-//! can export/import state per key group during rescaling, like Flink.
+//! Reads hand out shared [`Bytes`] views (refcounted slices of the MemTable
+//! entry or cached block) instead of copying every value — the
+//! allocation-free read path. Keys are namespaced by key group (`u16`
+//! big-endian prefix) so savepoints can export/import state per key group
+//! during rescaling, like Flink.
 
 pub mod lsm;
 
+use crate::util::bytes::Bytes;
 use anyhow::Result;
 
 /// Key/value state interface used by stateful operators.
 pub trait StateBackend: Send {
-    fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>>;
+    /// Point lookup; the hit is a shared view, not a copy.
+    fn get(&mut self, key: &[u8]) -> Result<Option<Bytes>>;
     fn put(&mut self, key: &[u8], value: &[u8]) -> Result<()>;
     fn delete(&mut self, key: &[u8]) -> Result<()>;
     /// All live entries with the given prefix, sorted by key.
-    fn scan_prefix(&mut self, prefix: &[u8]) -> Result<Vec<(Vec<u8>, Vec<u8>)>>;
+    fn scan_prefix(&mut self, prefix: &[u8]) -> Result<Vec<(Bytes, Bytes)>>;
     /// Approximate state footprint in bytes.
     fn size_bytes(&self) -> u64;
     /// Does this backend report storage metrics (θ/τ)? Heap does not.
     fn has_storage_metrics(&self) -> bool {
         false
     }
-    /// Flush any buffered writes (pre-savepoint barrier).
+    /// Flush any buffered writes (pre-savepoint barrier). For the LSM
+    /// backend this also quiesces the background storage worker.
     fn flush(&mut self) -> Result<()> {
         Ok(())
     }
@@ -40,7 +46,7 @@ pub trait StateBackend: Send {
 /// In-memory state backend (Flink's hashmap backend).
 #[derive(Default)]
 pub struct HeapBackend {
-    map: std::collections::BTreeMap<Vec<u8>, Vec<u8>>,
+    map: std::collections::BTreeMap<Vec<u8>, Bytes>,
     bytes: u64,
 }
 
@@ -51,12 +57,14 @@ impl HeapBackend {
 }
 
 impl StateBackend for HeapBackend {
-    fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+    fn get(&mut self, key: &[u8]) -> Result<Option<Bytes>> {
+        // Clone is a refcount bump on the shared buffer, not a copy.
         Ok(self.map.get(key).cloned())
     }
 
     fn put(&mut self, key: &[u8], value: &[u8]) -> Result<()> {
-        if let Some(old) = self.map.insert(key.to_vec(), value.to_vec()) {
+        let value = Bytes::copy_from_slice(value);
+        if let Some(old) = self.map.insert(key.to_vec(), value.clone()) {
             self.bytes = self.bytes - old.len() as u64 + value.len() as u64;
         } else {
             self.bytes += (key.len() + value.len() + 32) as u64;
@@ -73,12 +81,12 @@ impl StateBackend for HeapBackend {
         Ok(())
     }
 
-    fn scan_prefix(&mut self, prefix: &[u8]) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+    fn scan_prefix(&mut self, prefix: &[u8]) -> Result<Vec<(Bytes, Bytes)>> {
         Ok(self
             .map
             .range(prefix.to_vec()..)
             .take_while(|(k, _)| k.starts_with(prefix))
-            .map(|(k, v)| (k.clone(), v.clone()))
+            .map(|(k, v)| (Bytes::copy_from_slice(k), v.clone()))
             .collect())
     }
 
@@ -99,7 +107,7 @@ impl LsmBackend {
 }
 
 impl StateBackend for LsmBackend {
-    fn get(&mut self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+    fn get(&mut self, key: &[u8]) -> Result<Option<Bytes>> {
         self.db.get(key)
     }
 
@@ -111,7 +119,7 @@ impl StateBackend for LsmBackend {
         self.db.delete(key)
     }
 
-    fn scan_prefix(&mut self, prefix: &[u8]) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+    fn scan_prefix(&mut self, prefix: &[u8]) -> Result<Vec<(Bytes, Bytes)>> {
         self.db.scan_prefix(prefix)
     }
 
@@ -140,6 +148,14 @@ pub fn state_key(key_group: u16, user_key: &[u8]) -> Vec<u8> {
     out
 }
 
+/// Encode a state key into a caller-provided scratch buffer (the per-task
+/// key-encoding buffer on the hot path — no allocation per access).
+pub fn encode_state_key(buf: &mut Vec<u8>, key_group: u16, user_key: &[u8]) {
+    buf.clear();
+    buf.extend_from_slice(&key_group.to_be_bytes());
+    buf.extend_from_slice(user_key);
+}
+
 /// Split a state key into `(key_group, user_key)`.
 pub fn split_state_key(state_key: &[u8]) -> Option<(u16, &[u8])> {
     if state_key.len() < 2 {
@@ -158,11 +174,20 @@ mod tests {
         let mut b = HeapBackend::new();
         b.put(b"k", b"v1").unwrap();
         b.put(b"k", b"v2").unwrap();
-        assert_eq!(b.get(b"k").unwrap(), Some(b"v2".to_vec()));
+        assert_eq!(b.get(b"k").unwrap().as_deref(), Some(b"v2".as_ref()));
         assert!(b.size_bytes() > 0);
         b.delete(b"k").unwrap();
         assert_eq!(b.get(b"k").unwrap(), None);
         assert!(!b.has_storage_metrics());
+    }
+
+    #[test]
+    fn heap_gets_share_the_stored_buffer() {
+        let mut b = HeapBackend::new();
+        b.put(b"k", b"value").unwrap();
+        let x = b.get(b"k").unwrap().unwrap();
+        let y = b.get(b"k").unwrap().unwrap();
+        assert_eq!(x.as_slice().as_ptr(), y.as_slice().as_ptr());
     }
 
     #[test]
@@ -184,5 +209,11 @@ mod tests {
         assert_eq!(g, 300);
         assert_eq!(k, b"user");
         assert!(split_state_key(&[1]).is_none());
+
+        let mut buf = Vec::new();
+        encode_state_key(&mut buf, 300, b"user");
+        assert_eq!(buf, sk);
+        encode_state_key(&mut buf, 7, b"other");
+        assert_eq!(buf, state_key(7, b"other"));
     }
 }

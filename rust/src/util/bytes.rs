@@ -1,0 +1,227 @@
+//! Cheaply-cloneable shared byte slices — the `bytes::Bytes` idea without
+//! the dependency (the offline crate cache only carries the `xla` closure).
+//!
+//! A [`Bytes`] is a view (`start..end`) into one reference-counted buffer.
+//! Cloning or slicing shares the buffer instead of copying it, which is what
+//! lets the LSM read path hand out values without a `to_vec()` per hit.
+
+use std::sync::Arc;
+
+/// An immutable, reference-counted slice of bytes.
+#[derive(Clone)]
+pub struct Bytes {
+    data: Arc<[u8]>,
+    start: usize,
+    end: usize,
+}
+
+impl Bytes {
+    /// New empty slice (allocates a zero-length buffer once per call; use
+    /// sparingly on hot paths — prefer slicing an existing buffer).
+    pub fn new() -> Self {
+        Self::from_arc(Arc::from(&[][..]))
+    }
+
+    /// Copy `s` into a fresh shared buffer.
+    pub fn copy_from_slice(s: &[u8]) -> Self {
+        Self::from_arc(Arc::from(s))
+    }
+
+    /// Take ownership of `v` (one buffer move, no copy of the contents
+    /// beyond the `Vec → Arc` conversion).
+    pub fn from_vec(v: Vec<u8>) -> Self {
+        Self::from_arc(Arc::from(v.into_boxed_slice()))
+    }
+
+    /// View over a whole shared buffer.
+    pub fn from_arc(data: Arc<[u8]>) -> Self {
+        let end = data.len();
+        Self {
+            data,
+            start: 0,
+            end,
+        }
+    }
+
+    /// Sub-view of the same buffer; `range` is relative to this view.
+    /// Panics if the range is out of bounds (mirrors slice indexing).
+    pub fn slice(&self, range: std::ops::Range<usize>) -> Self {
+        assert!(
+            range.start <= range.end && self.start + range.end <= self.end,
+            "slice {range:?} out of bounds for Bytes of len {}",
+            self.len()
+        );
+        Self {
+            data: self.data.clone(),
+            start: self.start + range.start,
+            end: self.start + range.end,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data[self.start..self.end]
+    }
+}
+
+impl Default for Bytes {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::ops::Deref for Bytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Bytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::borrow::Borrow<[u8]> for Bytes {
+    fn borrow(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Self {
+        Self::from_vec(v)
+    }
+}
+
+impl From<&[u8]> for Bytes {
+    fn from(s: &[u8]) -> Self {
+        Self::copy_from_slice(s)
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Bytes {}
+
+impl PartialOrd for Bytes {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Bytes {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.as_slice().cmp(other.as_slice())
+    }
+}
+
+impl std::hash::Hash for Bytes {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.as_slice().hash(state);
+    }
+}
+
+impl PartialEq<[u8]> for Bytes {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[u8]> for Bytes {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Bytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Bytes> for Vec<u8> {
+    fn eq(&self, other: &Bytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bytes({:?})", self.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_views() {
+        let b = Bytes::copy_from_slice(b"hello world");
+        assert_eq!(b.len(), 11);
+        assert_eq!(&b[..], b"hello world");
+        let w = b.slice(6..11);
+        assert_eq!(&w[..], b"world");
+        assert_eq!(w.len(), 5);
+        // Sub-slicing a view is relative to the view.
+        let o = w.slice(1..3);
+        assert_eq!(&o[..], b"or");
+    }
+
+    #[test]
+    fn clone_shares_buffer() {
+        let b = Bytes::from_vec(vec![1, 2, 3]);
+        let c = b.clone();
+        assert_eq!(Arc::as_ptr(&b.data), Arc::as_ptr(&c.data));
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn equality_across_types() {
+        let b = Bytes::copy_from_slice(b"abc");
+        assert_eq!(b, b"abc".as_ref());
+        assert_eq!(b, b"abc".to_vec());
+        assert_eq!(b"abc".to_vec(), b);
+        assert_ne!(b, b"abd".as_ref());
+    }
+
+    #[test]
+    fn ordering_matches_slices() {
+        let mut v = vec![
+            Bytes::copy_from_slice(b"b"),
+            Bytes::copy_from_slice(b"a"),
+            Bytes::copy_from_slice(b"ab"),
+        ];
+        v.sort();
+        let flat: Vec<&[u8]> = v.iter().map(|b| b.as_slice()).collect();
+        assert_eq!(flat, vec![b"a".as_ref(), b"ab".as_ref(), b"b".as_ref()]);
+    }
+
+    #[test]
+    fn empty_and_default() {
+        assert!(Bytes::new().is_empty());
+        assert!(Bytes::default().is_empty());
+        assert_eq!(Bytes::new(), Bytes::copy_from_slice(b""));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_out_of_bounds_panics() {
+        let b = Bytes::copy_from_slice(b"ab");
+        let _ = b.slice(0..3);
+    }
+}

@@ -2,6 +2,7 @@
 //! parsing, JSON. The offline crate cache only carries the `xla` closure, so
 //! these are hand-rolled instead of pulling `rand`/`serde`/`clap`.
 
+pub mod bytes;
 pub mod cli;
 pub mod ewma;
 pub mod hash;

@@ -180,6 +180,7 @@ fn justin_without_storage_signals_matches_ds2_parallelism() {
         output_rate: rate,
         cache_hit_rate: None,
         access_latency_us: None,
+        stall_seconds: 0.0,
         state_size_bytes: 0,
     };
     windows.insert("source".into(), mk(0.5, 100_000.0, 200_000.0));
@@ -255,7 +256,10 @@ fn lsm_rescale_across_memory_levels_preserves_state_bytewise() {
             b.flush().unwrap();
             for (k, v) in b.scan_prefix(b"").unwrap() {
                 let (group, _) = split_state_key(&k).unwrap();
-                st.keyed.entry(group).or_default().push((k, v));
+                st.keyed
+                    .entry(group)
+                    .or_default()
+                    .push((k.to_vec(), v.to_vec()));
             }
         }
         st
