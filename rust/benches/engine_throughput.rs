@@ -2,19 +2,23 @@
 //!
 //! * stateless pipeline (q1 shape): events/s through source → map → sink;
 //! * keyed stateful pipeline (q5 shape): windowed aggregation over LSM;
+//! * operator chaining: the same forward pipeline fused into one task vs a
+//!   task (thread + exchange) per operator;
 //! * scalar operator vs the XLA/Pallas batched operator (when artifacts
 //!   exist) — the L1/L2 integration cost on a CPU PJRT backend.
 //!
 //! Run: `cargo bench --bench engine_throughput` (after `make artifacts` for
 //! the XLA rows). `BENCH_SMOKE=1` shrinks the event counts ~50× for a
-//! CI-sized pass over the same code paths.
+//! CI-sized pass over the same code paths. Results are also written as JSON
+//! to `$BENCH_ENGINE_OUT` (default `BENCH_engine.json`) for CI artifacts.
 
 use justin::config::Config;
-use justin::engine::{JobManager, OpFactory, StreamJob};
+use justin::engine::{JobManager, MapOp, OpFactory, SinkOp, Source, SourceBatch, StreamJob};
 use justin::graph::{LogicalGraph, OpKind, Partitioning, Record, ScalingAssignment};
 use justin::metrics::Registry;
 use justin::nexmark::queries::{build, QuerySpec};
 use justin::runtime::{artifacts_dir, SharedModel};
+use justin::util::json::Json;
 
 fn run_job(job: &StreamJob, cfg: &Config, events: u64) -> f64 {
     let mut jm = JobManager::new(cfg.clone());
@@ -26,14 +30,94 @@ fn run_job(job: &StreamJob, cfg: &Config, events: u64) -> f64 {
     events as f64 / t0.elapsed().as_secs_f64()
 }
 
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
 fn scaled(n: u64) -> u64 {
-    let smoke = std::env::var("BENCH_SMOKE")
-        .map(|v| v != "0" && !v.is_empty())
-        .unwrap_or(false);
-    if smoke {
+    if smoke() {
         (n / 50).max(1000)
     } else {
         n
+    }
+}
+
+/// Bounded counting source for the chaining rows: emits `end` pairs as fast
+/// as the engine will take them.
+struct CountSource {
+    next: u64,
+    end: u64,
+}
+
+impl Source for CountSource {
+    fn poll(&mut self, max: usize) -> SourceBatch {
+        if self.next >= self.end {
+            return SourceBatch::Exhausted;
+        }
+        let n = (max as u64).min(self.end - self.next);
+        let out = (0..n)
+            .map(|i| Record::Pair {
+                key: self.next + i,
+                value: 1,
+                ts: self.next + i,
+            })
+            .collect();
+        self.next += n;
+        SourceBatch::Records(out)
+    }
+    fn watermark(&self) -> u64 {
+        self.next.saturating_sub(1)
+    }
+}
+
+/// source → m1 → m2 → sink over Forward edges, everything at parallelism 1:
+/// with chaining on this fuses into a single task; with chaining off each
+/// hop pays an exchange (batch buffer + envelope + channel + wakeup).
+fn chain_job(events: u64) -> StreamJob {
+    let mut graph = LogicalGraph::new("chainbench");
+    let src = graph.add_op("source", OpKind::Source, false, vec![], 1);
+    let m1 = graph.add_op(
+        "m1",
+        OpKind::Transform,
+        false,
+        vec![(src, Partitioning::Forward)],
+        1,
+    );
+    let m2 = graph.add_op(
+        "m2",
+        OpKind::Transform,
+        false,
+        vec![(m1, Partitioning::Forward)],
+        1,
+    );
+    graph.add_op(
+        "sink",
+        OpKind::Sink,
+        false,
+        vec![(m2, Partitioning::Forward)],
+        1,
+    );
+    StreamJob {
+        graph,
+        factories: vec![
+            OpFactory::source(move |_, _| {
+                Box::new(CountSource {
+                    next: 0,
+                    end: events,
+                }) as _
+            }),
+            OpFactory::transform(|_, _| {
+                Box::new(MapOp {
+                    f: |r| Some(r),
+                })
+            }),
+            OpFactory::transform(|_, _| {
+                Box::new(MapOp {
+                    f: |r| Some(r),
+                })
+            }),
+            OpFactory::transform(|_, _| Box::new(SinkOp)),
+        ],
     }
 }
 
@@ -68,6 +152,58 @@ fn main() {
     let q5 = build("q5", spec5).unwrap();
     let rate5 = run_job(&q5, &cfg, events5);
     println!("{:<52} {:>12.0} ev/s", "q5 keyed sliding-window agg (LSM state)", rate5);
+
+    // Operator chaining: identical 3-hop forward pipeline, fused vs
+    // task-per-op. The fused run keeps records in one thread; the unfused
+    // run pays three exchanges.
+    let chain_events = scaled(5_000_000);
+    let mut unchained_cfg = cfg.clone();
+    unchained_cfg.engine.chaining = false;
+    let unchained_rate = run_job(&chain_job(chain_events), &unchained_cfg, chain_events);
+    println!("{:<52} {:>12.0} ev/s", "forward chain, task-per-op", unchained_rate);
+    let mut chained_cfg = cfg.clone();
+    chained_cfg.engine.chaining = true;
+    let chained_rate = run_job(&chain_job(chain_events), &chained_cfg, chain_events);
+    println!("{:<52} {:>12.0} ev/s", "forward chain, fused (chained)", chained_rate);
+    let speedup = chained_rate / unchained_rate;
+    println!("{:<52} {:>12.2} x", "  → chaining speedup (fused / task-per-op)", speedup);
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("engine_throughput")),
+        ("smoke", Json::Bool(smoke())),
+        ("chaining_speedup", Json::num(speedup)),
+        (
+            "results",
+            Json::Arr(vec![
+                Json::obj(vec![
+                    ("name", Json::str("q1_stateless_pipeline")),
+                    ("events", Json::num(events as f64)),
+                    ("rate_per_s", Json::num(rate)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("q5_keyed_window_lsm")),
+                    ("events", Json::num(events5 as f64)),
+                    ("rate_per_s", Json::num(rate5)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("forward_chain_task_per_op")),
+                    ("events", Json::num(chain_events as f64)),
+                    ("rate_per_s", Json::num(unchained_rate)),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::str("forward_chain_fused")),
+                    ("events", Json::num(chain_events as f64)),
+                    ("rate_per_s", Json::num(chained_rate)),
+                ]),
+            ]),
+        ),
+    ]);
+    let out_path =
+        std::env::var("BENCH_ENGINE_OUT").unwrap_or_else(|_| "BENCH_engine.json".to_string());
+    match std::fs::write(&out_path, doc.to_pretty()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("failed to write {out_path}: {e}"),
+    }
 
     // XLA batch model micro-rate (per-call latency and events/s).
     match SharedModel::load(&artifacts_dir()) {

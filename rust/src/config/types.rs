@@ -145,6 +145,13 @@ pub struct EngineConfig {
     pub flush_interval_ms: u64,
     /// Use the XLA runtime for operator batch compute when artifacts exist.
     pub use_xla: bool,
+    /// Fuse one-to-one (Forward / equal-parallelism Rebalance) edges into
+    /// single tasks (operator chaining). Per-operator opt-out via
+    /// `LogicalGraph::set_chainable`.
+    pub chaining: bool,
+    /// Per-member busy-time attribution inside a chain measures 1 in
+    /// `chain_sample_stride` records and scales up; 1 = measure everything.
+    pub chain_sample_stride: usize,
 }
 
 impl Default for EngineConfig {
@@ -155,6 +162,8 @@ impl Default for EngineConfig {
             key_groups: 128,
             flush_interval_ms: 50,
             use_xla: false,
+            chaining: true,
+            chain_sample_stride: 64,
         }
     }
 }
@@ -401,6 +410,8 @@ impl Config {
             "engine.key_groups",
             "engine.flush_interval_ms",
             "engine.use_xla",
+            "engine.chaining",
+            "engine.chain_sample_stride",
             "lsm.memtable_max_mb",
             "lsm.block_size_kb",
             "lsm.l0_compaction_trigger",
@@ -511,6 +522,10 @@ impl Config {
         if let Some(v) = doc.get("engine.use_xla") {
             c.engine.use_xla = v.as_bool().context("engine.use_xla must be a bool")?;
         }
+        if let Some(v) = doc.get("engine.chaining") {
+            c.engine.chaining = v.as_bool().context("engine.chaining must be a bool")?;
+        }
+        get_num!(doc, "engine.chain_sample_stride", c.engine.chain_sample_stride, usize);
 
         get_num!(doc, "lsm.memtable_max_mb", c.lsm.memtable_max_mb, u64);
         get_num!(doc, "lsm.block_size_kb", c.lsm.block_size_kb, u64);
@@ -641,6 +656,9 @@ impl Config {
         }
         if self.engine.key_groups == 0 {
             bail!("key_groups must be positive");
+        }
+        if self.engine.chain_sample_stride == 0 {
+            bail!("engine.chain_sample_stride must be at least 1");
         }
         if self.state.max_immutable_memtables == 0 {
             bail!("state.max_immutable_memtables must be at least 1");
@@ -821,6 +839,23 @@ mod tests {
             "[state]\nl0_stall_trigger = 2\n[lsm]\nl0_compaction_trigger = 4",
         )
         .unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn chaining_knobs_parse_and_validate() {
+        let c = Config::default();
+        assert!(c.engine.chaining, "chaining is on by default");
+        assert_eq!(c.engine.chain_sample_stride, 64);
+
+        let toml = "[engine]\nchaining = false\nchain_sample_stride = 16";
+        let doc = super::super::parse_toml(toml).unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert!(!c.engine.chaining);
+        assert_eq!(c.engine.chain_sample_stride, 16);
+
+        // Stride 0 would divide by zero in the attribution scale-up.
+        let doc = super::super::parse_toml("[engine]\nchain_sample_stride = 0").unwrap();
         assert!(Config::from_toml(&doc).is_err());
     }
 

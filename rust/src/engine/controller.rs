@@ -119,7 +119,17 @@ pub fn autoscale_live(
                 if next != assignment {
                     let t0 = Instant::now();
                     let rplan = plan_reconfig(&meta, &assignment, &next);
-                    let (entries, breakdown) = match rplan.tier {
+                    // A partial redeploy restarts a whole chain unit; if
+                    // that unit swallowed a source (the restart target is
+                    // fused with it), escalate to a full restart.
+                    let mut tier = rplan.tier;
+                    if tier == ReconfigTier::Partial {
+                        let target = &rplan.restarts[0];
+                        if jm.partial_unit_contains_source(&running, job, target, &next) {
+                            tier = ReconfigTier::Full;
+                        }
+                    }
+                    let (entries, breakdown) = match tier {
                         ReconfigTier::InPlace => {
                             // Resize live — zero task restarts, the running
                             // backends re-split their budget in place.
@@ -179,7 +189,7 @@ pub fn autoscale_live(
                     reconfigs.push(LiveReconfig {
                         at: start.elapsed(),
                         assignment: assignment.clone(),
-                        tier: rplan.tier,
+                        tier,
                         savepoint_entries: entries,
                         downtime: t0.elapsed(),
                         breakdown,

@@ -47,6 +47,9 @@ pub struct OutputPartition {
     /// Per-destination pending buffers.
     buffers: Vec<Vec<Record>>,
     batch_size: usize,
+    /// The producing subtask index — Forward routes subtask i to channel
+    /// i mod downstream_p (exact one-to-one when parallelisms match).
+    from_subtask: u32,
 }
 
 impl OutputPartition {
@@ -66,7 +69,14 @@ impl OutputPartition {
             rr: 0,
             buffers: (0..n).map(|_| Vec::with_capacity(batch_size)).collect(),
             batch_size,
+            from_subtask: 0,
         }
+    }
+
+    /// Set the producing subtask index (used by `Partitioning::Forward`).
+    pub fn with_from_subtask(mut self, subtask: u32) -> Self {
+        self.from_subtask = subtask;
+        self
     }
 
     /// Route one record into its destination buffer; flush the buffer when
@@ -74,21 +84,34 @@ impl OutputPartition {
     pub fn emit(&mut self, my_channel_id: u32, record: Record) -> u64 {
         let dest = match &self.partitioning {
             Partitioning::Rebalance => {
+                // Post-increment: sender 0 gets the first record after
+                // startup or swap_senders.
+                let dest = self.rr;
                 self.rr = (self.rr + 1) % self.senders.len();
-                self.rr
+                dest
             }
             Partitioning::Hash(key_fn) => {
                 let group = key_to_group(key_fn(&record), self.num_key_groups);
                 task_for_group(group, self.num_key_groups, self.senders.len() as u32)
                     as usize
             }
+            Partitioning::Forward => self.from_subtask as usize % self.senders.len(),
             Partitioning::Broadcast => {
                 let mut blocked = 0;
-                for dest in 0..self.senders.len() {
+                // Clone for all but the last destination, move into the last
+                // (N−1 clones for N destinations).
+                let Some(last) = self.senders.len().checked_sub(1) else {
+                    return 0;
+                };
+                for dest in 0..last {
                     self.buffers[dest].push(record.clone());
                     if self.buffers[dest].len() >= self.batch_size {
                         blocked += self.flush_dest(my_channel_id, dest);
                     }
+                }
+                self.buffers[last].push(record);
+                if self.buffers[last].len() >= self.batch_size {
+                    blocked += self.flush_dest(my_channel_id, last);
                 }
                 return blocked;
             }
@@ -344,6 +367,60 @@ mod tests {
             }
             assert_eq!(n, 30);
         }
+    }
+
+    #[test]
+    fn rebalance_starts_at_sender_zero() {
+        // Regression: the cursor used to pre-increment, so sender 0 never got
+        // the first record after startup or swap_senders.
+        let (senders, receivers) = build_edge_channels(3, 16);
+        let mut out = OutputPartition::new(senders, Partitioning::Rebalance, 0, 128, 1);
+        for i in 0..5u64 {
+            out.emit(0, kv(i));
+        }
+        let counts: Vec<usize> = receivers
+            .iter()
+            .map(|rx| {
+                let mut n = 0;
+                while let Ok((_, Envelope::Batch { records, .. })) = rx.try_recv() {
+                    n += records.len();
+                }
+                n
+            })
+            .collect();
+        // 5 records over 3 senders starting at 0: [2, 2, 1].
+        assert_eq!(counts, vec![2, 2, 1]);
+
+        // …and the cursor resets to 0 after a swap.
+        let (new_tx, new_rx) = build_edge_channels(2, 16);
+        out.swap_senders(0, new_tx);
+        out.emit(0, kv(9));
+        match new_rx[0].try_recv() {
+            Ok((_, Envelope::Batch { records, .. })) => assert_eq!(records.len(), 1),
+            other => panic!("first record after swap must hit sender 0: {other:?}"),
+        }
+        assert!(new_rx[1].try_recv().is_err());
+    }
+
+    #[test]
+    fn forward_routes_one_to_one() {
+        let (senders, receivers) = build_edge_channels(3, 16);
+        let mut out = OutputPartition::new(senders, Partitioning::Forward, 0, 128, 1)
+            .with_from_subtask(1);
+        for i in 0..4u64 {
+            out.emit(0, kv(i));
+        }
+        let counts: Vec<usize> = receivers
+            .iter()
+            .map(|rx| {
+                let mut n = 0;
+                while let Ok((_, Envelope::Batch { records, .. })) = rx.try_recv() {
+                    n += records.len();
+                }
+                n
+            })
+            .collect();
+        assert_eq!(counts, vec![0, 4, 0], "subtask 1 feeds only channel 1");
     }
 
     #[test]

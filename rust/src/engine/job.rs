@@ -4,9 +4,12 @@
 use super::exchange::{build_edge_channels, InputTracker, OutputPartition, Tagged};
 use super::operators::{Operator, Source};
 use super::savepoint::{OperatorState, Savepoint, TaskRestore};
-use super::task::{ControlMsg, TaskExport, TaskHarness, TaskKind, TaskMetrics};
+use super::task::{ChainedOp, ControlMsg, TaskExport, TaskHarness, TaskKind, TaskMetrics};
 use crate::config::Config;
-use crate::graph::{LogicalGraph, LogicalOp, OpId, OpKind, PhysicalPlan, ScalingAssignment};
+use crate::graph::{
+    plan_chains, ChainLayout, LogicalGraph, LogicalOp, OpId, OpKind, PhysicalPlan,
+    ScalingAssignment,
+};
 use crate::metrics::{names, MetricId, Registry};
 use crate::placement::{Cluster, Placement};
 use crate::state::lsm::{Db, DbMetricHooks, DbOptions};
@@ -76,7 +79,7 @@ struct TaskSlot {
     channel_id: u32,
 }
 
-/// Timing breakdown of a partial (single-operator) redeploy.
+/// Timing breakdown of a partial (single-unit) redeploy.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PartialRedeploy {
     /// Keyed entries exported from the decommissioned tasks.
@@ -109,6 +112,12 @@ pub struct RunningJob {
     /// Next unassigned exchange channel id — partial redeploys keep channel
     /// ids globally unique across epochs.
     next_channel_id: u32,
+    /// Chain layout as deployed: head op name → member names in flow order
+    /// (head first; unchained operators are singletons). `tasks` and
+    /// `senders` are keyed by head names.
+    chains: BTreeMap<String, Vec<String>>,
+    /// Logical op name → its chain head's name.
+    head_of: BTreeMap<String, String>,
 }
 
 impl RunningJob {
@@ -131,8 +140,19 @@ impl RunningJob {
                 .join()
                 .map_err(|e| anyhow::anyhow!("task panicked: {e:?}"))??;
             savepoint.merge_task_export(&export.op_name.clone(), export.state);
+            // Fused chain members export under their own logical names, so
+            // the savepoint looks identical to an unchained run.
+            for (name, state) in export.chained {
+                savepoint.merge_task_export(&name, state);
+            }
         }
         Ok(savepoint)
+    }
+
+    /// Members of the deployed chain containing `op`, head first (None for
+    /// unknown operators).
+    pub fn deployed_chain(&self, op: &str) -> Option<&[String]> {
+        self.chains.get(self.head_of.get(op)?).map(Vec::as_slice)
     }
 
     /// Is any task thread still running?
@@ -145,17 +165,23 @@ impl RunningJob {
 
     /// Send a live managed-memory resize to every task of `op` — the
     /// in-place reconfiguration tier: zero restarts, the LSM backends
-    /// re-split their budget at the next control poll. Returns how many
-    /// tasks accepted the message.
+    /// re-split their budget at the next control poll. If `op` is fused
+    /// into a chain, the message routes to the chain's tasks and addresses
+    /// the member's backend by logical name. Returns how many tasks
+    /// accepted the message.
     pub fn resize_memory(&self, op: &str, managed_mb: u64) -> usize {
+        let head = self.head_of.get(op).map(String::as_str).unwrap_or(op);
         self.tasks
-            .get(op)
+            .get(head)
             .map(|slots| {
                 slots
                     .iter()
                     .filter(|s| {
                         s.control
-                            .send(ControlMsg::ResizeMemory { managed_mb })
+                            .send(ControlMsg::ResizeMemory {
+                                op: op.to_string(),
+                                managed_mb,
+                            })
                             .is_ok()
                     })
                     .count()
@@ -209,6 +235,10 @@ impl JobManager {
     }
 
     /// Deploy `job` under `assignment`, optionally restoring a savepoint.
+    ///
+    /// Runs chain formation first (see [`plan_chains`]): each chain becomes
+    /// one task set keyed by its head, with the non-head members fused into
+    /// the head's threads. Exchange channels exist only between chains.
     pub fn deploy(
         &mut self,
         job: &StreamJob,
@@ -225,23 +255,26 @@ impl JobManager {
             .cluster
             .place(&plan.slot_requests())
             .context("placing tasks on task managers")?;
+        let layout = plan_chains(graph, &plan.parallelism, cfg.engine.chaining);
 
-        // Per-op inbound channels.
-        let mut op_senders: Vec<Vec<SyncSender<Tagged>>> = Vec::new();
-        let mut op_receivers = Vec::new();
-        for op in &graph.ops {
-            let p = plan.op_parallelism(op.id) as usize;
-            if op.kind == OpKind::Source {
-                op_senders.push(Vec::new());
-                op_receivers.push(Vec::new());
-            } else {
+        // Inbound channels per chain head (members receive in-thread from
+        // their head; sources have no input).
+        let mut op_senders: Vec<Vec<SyncSender<Tagged>>> =
+            (0..graph.ops.len()).map(|_| Vec::new()).collect();
+        let mut op_receivers: Vec<Vec<Receiver<Tagged>>> =
+            (0..graph.ops.len()).map(|_| Vec::new()).collect();
+        for chain in &layout.chains {
+            let head = graph.op(chain[0]);
+            if head.kind != OpKind::Source {
+                let p = plan.op_parallelism(head.id) as usize;
                 let (tx, rx) = build_edge_channels(p, cfg.engine.channel_capacity);
-                op_senders.push(tx);
-                op_receivers.push(rx);
+                op_senders[head.id] = tx;
+                op_receivers[head.id] = rx;
             }
         }
 
-        // Upstream channel counts per op (for watermark/EOS tracking).
+        // Upstream channel counts per op (for watermark/EOS tracking). An
+        // upstream chain has as many tasks as its equal-parallelism members.
         let mut in_channels = vec![0usize; graph.ops.len()];
         for op in &graph.ops {
             for (src, _) in &op.inputs {
@@ -252,18 +285,21 @@ impl JobManager {
         let stop = Arc::new(AtomicBool::new(false));
         let mut tasks: BTreeMap<String, Vec<TaskSlot>> = BTreeMap::new();
         let mut channel_id: u32 = 0;
-        for op in &graph.ops {
-            let p = plan.op_parallelism(op.id);
-            let managed_mb = plan.managed_mb[op.id];
-            let mut receivers = std::mem::take(&mut op_receivers[op.id]);
+        for chain in &layout.chains {
+            let head = graph.op(chain[0]);
+            let tail_id = *chain.last().unwrap();
+            let p = plan.op_parallelism(head.id);
+            let managed_mb = plan.managed_mb[head.id];
+            let mut receivers = std::mem::take(&mut op_receivers[head.id]);
             receivers.reverse(); // pop() gives subtask 0 first
             let mut slots = Vec::with_capacity(p as usize);
             for subtask in 0..p {
                 let my_channel = channel_id;
                 channel_id += 1;
-                // Outputs: one partition per downstream edge.
+                // Outputs: one partition per downstream edge of the tail
+                // (every exchange destination is itself a chain head).
                 let outputs: Vec<OutputPartition> = graph
-                    .downstream(op.id)
+                    .downstream(tail_id)
                     .into_iter()
                     .map(|(dst, partitioning, port)| {
                         OutputPartition::new(
@@ -273,24 +309,45 @@ impl JobManager {
                             cfg.engine.key_groups,
                             cfg.engine.batch_size,
                         )
+                        .with_from_subtask(subtask)
                     })
                     .collect();
-                // Restore fragment.
+                // Restore fragments stay keyed by logical operator: one for
+                // the head, one per fused member.
                 let restore = savepoint
-                    .and_then(|sp| sp.operator(&op.name))
+                    .and_then(|sp| sp.operator(&head.name))
                     .map(|st| st.fragment_for(cfg.engine.key_groups, p, subtask))
                     .unwrap_or_default();
-                let input = if op.kind == OpKind::Source {
+                let members = chain[1..]
+                    .iter()
+                    .map(|&m_id| {
+                        let m = graph.op(m_id);
+                        let m_restore = savepoint
+                            .and_then(|sp| sp.operator(&m.name))
+                            .map(|st| st.fragment_for(cfg.engine.key_groups, p, subtask))
+                            .unwrap_or_default();
+                        self.build_chained_op(
+                            job,
+                            m,
+                            subtask,
+                            p,
+                            plan.managed_mb[m_id],
+                            registry,
+                            m_restore,
+                        )
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let input = if head.kind == OpKind::Source {
                     None
                 } else {
                     Some((
                         receivers.pop().expect("receiver per subtask"),
-                        InputTracker::new(in_channels[op.id]),
+                        InputTracker::new(in_channels[head.id]),
                     ))
                 };
                 slots.push(self.spawn_task(
                     job,
-                    op,
+                    head,
                     subtask,
                     p,
                     managed_mb,
@@ -299,14 +356,27 @@ impl JobManager {
                     outputs,
                     registry,
                     restore,
+                    members,
                     stop.clone(),
                 )?);
             }
-            tasks.insert(op.name.clone(), slots);
+            tasks.insert(head.name.clone(), slots);
         }
-        let senders = graph
-            .ops
+        let mut chains = BTreeMap::new();
+        let mut head_of = BTreeMap::new();
+        for chain in &layout.chains {
+            let head_name = graph.op(chain[0]).name.clone();
+            let names: Vec<String> = chain.iter().map(|&i| graph.op(i).name.clone()).collect();
+            for n in &names {
+                head_of.insert(n.clone(), head_name.clone());
+            }
+            chains.insert(head_name, names);
+        }
+        let senders = layout
+            .chains
             .iter()
+            .map(|c| graph.op(c[0]))
+            .filter(|op| op.kind != OpKind::Source)
             .map(|op| (op.name.clone(), std::mem::take(&mut op_senders[op.id])))
             .collect();
         Ok(RunningJob {
@@ -317,11 +387,83 @@ impl JobManager {
             stop,
             senders,
             next_channel_id: channel_id,
+            chains,
+            head_of,
         })
     }
 
+    /// Build a task-local state backend for one logical operator: an LSM
+    /// instance under the per-epoch state directory when the operator is
+    /// stateful and holds managed memory, a plain heap map otherwise. The
+    /// second return is the shared write-stall counter (LSM only).
+    fn build_backend(
+        &self,
+        op: &LogicalOp,
+        subtask: u32,
+        managed_mb: u64,
+        registry: &Registry,
+    ) -> Result<(Box<dyn StateBackend>, Option<Arc<AtomicU64>>)> {
+        let cfg = &self.config;
+        if op.stateful && managed_mb > 0 {
+            let dir = self
+                .state_root
+                .join(format!("epoch{}/{}/{}", self.epoch, op.name, subtask));
+            let mut opts = DbOptions::for_managed_memory(dir, managed_mb);
+            opts.background_storage = cfg.state.background_storage;
+            opts.max_immutable_memtables = cfg.state.max_immutable_memtables;
+            opts.l0_stall_trigger = cfg.state.l0_stall_trigger;
+            let mut db = Db::open(opts)?;
+            let id = |n: &str| MetricId::new(n).with("op", &op.name).with("task", subtask);
+            let stall_counter = Arc::new(AtomicU64::new(0));
+            db.set_hooks(DbMetricHooks {
+                cache_hit: Some(registry.counter(id(names::STATE_CACHE_HIT))),
+                cache_miss: Some(registry.counter(id(names::STATE_CACHE_MISS))),
+                access_ns: Some(registry.histo(id(names::STATE_ACCESS_NS))),
+                state_bytes: Some(registry.gauge(id(names::STATE_SIZE_BYTES))),
+                flush_ns: Some(registry.histo(id(names::STATE_FLUSH_NS))),
+                stall_ns: Some(registry.histo(id(names::STATE_STALL_NS))),
+                stall_total_ns: Some(stall_counter.clone()),
+            });
+            Ok((Box::new(LsmBackend::new(db)), Some(stall_counter)))
+        } else {
+            Ok((Box::new(HeapBackend::new()), None))
+        }
+    }
+
+    /// Build one fused chain member: its own operator instance, state
+    /// backend, metrics series (under its logical name, so the scraper sees
+    /// it exactly like a standalone task), and restore fragment.
+    #[allow(clippy::too_many_arguments)]
+    fn build_chained_op(
+        &self,
+        job: &StreamJob,
+        op: &LogicalOp,
+        subtask: u32,
+        parallelism: u32,
+        managed_mb: u64,
+        registry: &Registry,
+        restore: TaskRestore,
+    ) -> Result<ChainedOp> {
+        let operator = match &job.factories[op.id] {
+            OpFactory::Transform(f) => f(subtask, parallelism),
+            OpFactory::Source(_) => {
+                anyhow::bail!("source {} cannot be a chain member", op.name)
+            }
+        };
+        let (state, stall) = self.build_backend(op, subtask, managed_mb, registry)?;
+        Ok(ChainedOp::new(
+            op.name.clone(),
+            operator,
+            state,
+            TaskMetrics::register(registry, &op.name, subtask),
+            restore,
+            stall,
+        ))
+    }
+
     /// Build the state backend, operator instance, metrics, and control
-    /// channel for one task, then spawn its thread.
+    /// channel for one task (the head of its chain, with `chain` holding
+    /// any fused members), then spawn its thread.
     #[allow(clippy::too_many_arguments)]
     fn spawn_task(
         &self,
@@ -335,35 +477,11 @@ impl JobManager {
         outputs: Vec<OutputPartition>,
         registry: &Registry,
         restore: TaskRestore,
+        chain: Vec<ChainedOp>,
         stop: Arc<AtomicBool>,
     ) -> Result<TaskSlot> {
         let cfg = &self.config;
-        let mut stall_total: Option<Arc<AtomicU64>> = None;
-        let state: Box<dyn StateBackend> = if op.stateful && managed_mb > 0 {
-            let dir = self
-                .state_root
-                .join(format!("epoch{}/{}/{}", self.epoch, op.name, subtask));
-            let mut opts = DbOptions::for_managed_memory(dir, managed_mb);
-            opts.background_storage = cfg.state.background_storage;
-            opts.max_immutable_memtables = cfg.state.max_immutable_memtables;
-            opts.l0_stall_trigger = cfg.state.l0_stall_trigger;
-            let mut db = Db::open(opts)?;
-            let id = |n: &str| MetricId::new(n).with("op", &op.name).with("task", subtask);
-            let stall_counter = Arc::new(AtomicU64::new(0));
-            stall_total = Some(stall_counter.clone());
-            db.set_hooks(DbMetricHooks {
-                cache_hit: Some(registry.counter(id(names::STATE_CACHE_HIT))),
-                cache_miss: Some(registry.counter(id(names::STATE_CACHE_MISS))),
-                access_ns: Some(registry.histo(id(names::STATE_ACCESS_NS))),
-                state_bytes: Some(registry.gauge(id(names::STATE_SIZE_BYTES))),
-                flush_ns: Some(registry.histo(id(names::STATE_FLUSH_NS))),
-                stall_ns: Some(registry.histo(id(names::STATE_STALL_NS))),
-                stall_total_ns: Some(stall_counter),
-            });
-            Box::new(LsmBackend::new(db))
-        } else {
-            Box::new(HeapBackend::new())
-        };
+        let (state, stall_total) = self.build_backend(op, subtask, managed_mb, registry)?;
         let kind = match &job.factories[op.id] {
             OpFactory::Source(f) => TaskKind::Source(f(subtask, parallelism)),
             OpFactory::Transform(f) => TaskKind::Transform(f(subtask, parallelism)),
@@ -384,6 +502,8 @@ impl JobManager {
             flush_interval: Duration::from_millis(cfg.engine.flush_interval_ms),
             control: control_rx,
             stall_ns: stall_total,
+            chain,
+            chain_stride: cfg.engine.chain_sample_stride,
         };
         let name = format!("{}-{}", op.name, subtask);
         let handle = std::thread::Builder::new()
@@ -421,17 +541,50 @@ impl JobManager {
         Ok(())
     }
 
-    /// Partial redeploy: stop, savepoint, and restart *one* non-source
-    /// operator under a new parallelism/memory level, leaving the rest of
-    /// the job running.
+    /// Would a partial redeploy of `op_name` under `assignment` have to
+    /// restart a source? The redeploy unit is a chain closure (see
+    /// [`Self::redeploy_op`]); when it swallows a source the partial tier is
+    /// not applicable and the caller should escalate to a full restart.
+    pub fn partial_unit_contains_source(
+        &self,
+        running: &RunningJob,
+        job: &StreamJob,
+        op_name: &str,
+        assignment: &ScalingAssignment,
+    ) -> bool {
+        let graph = &job.graph;
+        let plan = PhysicalPlan::build(graph, assignment, self.config.cluster.managed_mb_per_slot);
+        let new_layout = plan_chains(graph, &plan.parallelism, self.config.engine.chaining);
+        let unit = redeploy_unit(graph, &running.chains, &new_layout, op_name);
+        graph
+            .ops
+            .iter()
+            .any(|o| o.kind == OpKind::Source && unit.contains(&o.name))
+    }
+
+    /// Partial redeploy: stop, savepoint, and restart the *redeploy unit*
+    /// around one non-source operator under a new parallelism/memory level,
+    /// leaving the rest of the job running.
     ///
-    /// Sequencing: (1) decommission the old tasks (drain without emitting
-    /// EOS), (2) swap every upstream output onto fresh channels — dropping
-    /// the last senders on the old channels lets the old tasks drain out and
-    /// exit, (3) join them and merge their state exports, (4) spawn the new
-    /// task set with redistributed fragments into the same cumulative
-    /// registry, (5) retire the old channel ids in every downstream input
-    /// tracker.
+    /// With chaining the unit of deployment is a whole chain, so the restart
+    /// set is the fixpoint closure of currently deployed chains and newly
+    /// planned chains over the target operator: a parallelism change can
+    /// split the chain the operator lives in (each side restarts as its own
+    /// task set) or re-fuse it with neighbours (which must then restart
+    /// too). The unit must not contain a source — check
+    /// [`Self::partial_unit_contains_source`] first and fall back to a full
+    /// restart if it does. The assignment is assumed to differ from the
+    /// running plan only at `op_name`, so chains outside the unit are
+    /// identical in the old and new layouts.
+    ///
+    /// Sequencing: (1) decommission the old unit tasks (drain without
+    /// emitting EOS), (2) swap every upstream-of-unit output onto fresh
+    /// channels — dropping the last senders on the old channels lets the old
+    /// tasks drain out and exit (internal unit channels disconnect in
+    /// cascade as their upstream tasks exit), (3) join them and merge their
+    /// per-logical-operator state exports, (4) spawn the new chains with
+    /// redistributed fragments into the same cumulative registry, (5) retire
+    /// the old channel ids in every downstream-of-unit input tracker.
     pub fn redeploy_op(
         &mut self,
         running: &mut RunningJob,
@@ -440,54 +593,88 @@ impl JobManager {
         assignment: &ScalingAssignment,
     ) -> Result<PartialRedeploy> {
         let graph = &job.graph;
-        let op = graph
+        anyhow::ensure!(
+            graph.ops.iter().any(|o| o.name == op_name),
+            "unknown operator {op_name}"
+        );
+        let plan = PhysicalPlan::build(graph, assignment, self.config.cluster.managed_mb_per_slot);
+        let new_layout = plan_chains(graph, &plan.parallelism, self.config.engine.chaining);
+        let unit = redeploy_unit(graph, &running.chains, &new_layout, op_name);
+        if let Some(src) = graph
             .ops
             .iter()
-            .find(|o| o.name == op_name)
-            .ok_or_else(|| anyhow::anyhow!("unknown operator {op_name}"))?;
-        anyhow::ensure!(
-            op.kind != OpKind::Source,
-            "cannot partially redeploy source {op_name}"
-        );
+            .find(|o| o.kind == OpKind::Source && unit.contains(&o.name))
+        {
+            anyhow::bail!(
+                "cannot partially redeploy {op_name}: its chain unit contains source {}",
+                src.name
+            );
+        }
         self.refresh_plan(running, job, assignment)?;
         self.epoch += 1;
         let cfg = &self.config;
-        let new_p = running.plan.op_parallelism(op.id);
-        let managed_mb = running.plan.managed_mb[op.id];
         let t0 = Instant::now();
 
-        // 1. Decommission: the old tasks keep draining their inputs but will
-        // neither emit EOS nor a final watermark.
-        let old_slots = running.tasks.remove(op_name).unwrap_or_default();
-        for slot in &old_slots {
-            let _ = slot.control.send(ControlMsg::Decommission);
+        // 1. Decommission every old task in the unit: they keep draining
+        // their inputs but will neither emit EOS nor a final watermark.
+        // Dropping the registry's copy of their inbound senders here is safe
+        // — upstream tasks still hold clones until the swap below.
+        let old_heads: Vec<String> = running
+            .chains
+            .keys()
+            .filter(|h| unit.contains(h.as_str()))
+            .cloned()
+            .collect();
+        let mut old_slots = Vec::new();
+        for head in &old_heads {
+            let slots = running.tasks.remove(head).unwrap_or_default();
+            for slot in &slots {
+                let _ = slot.control.send(ControlMsg::Decommission);
+            }
+            old_slots.extend(slots);
+            running.senders.remove(head);
         }
 
-        // 2. Fresh inbound exchange, swapped into every upstream task.
-        let (new_senders, new_receivers) =
-            build_edge_channels(new_p as usize, cfg.engine.channel_capacity);
-        let upstream_ids: std::collections::BTreeSet<OpId> =
-            op.inputs.iter().map(|(src, _)| *src).collect();
-        for src_id in upstream_ids {
-            let src_name = &graph.op(src_id).name;
-            for (output, (dst, _, _)) in graph.downstream(src_id).iter().enumerate() {
-                if *dst != op.id {
-                    continue;
+        // 2. Fresh inbound exchange per new chain head in the unit, swapped
+        // into each upstream-of-unit task. An upstream outside the unit is
+        // necessarily a chain tail (its edge leaves a chain), and its task
+        // set is keyed by its chain head.
+        let new_chains: Vec<&Vec<OpId>> = new_layout
+            .chains
+            .iter()
+            .filter(|c| unit.contains(&graph.op(c[0]).name))
+            .collect();
+        let mut new_receivers: BTreeMap<OpId, Vec<Receiver<Tagged>>> = BTreeMap::new();
+        for chain in &new_chains {
+            let head = graph.op(chain[0]);
+            let p = running.plan.op_parallelism(head.id) as usize;
+            let (tx, rx) = build_edge_channels(p, cfg.engine.channel_capacity);
+            for (src_id, _) in &head.inputs {
+                let src_op = graph.op(*src_id);
+                if unit.contains(&src_op.name) {
+                    continue; // internal edge: wired when the new upstream spawns
                 }
-                if let Some(slots) = running.tasks.get(src_name) {
-                    for slot in slots {
-                        let _ = slot.control.send(ControlMsg::SwapOutput {
-                            output,
-                            senders: new_senders.clone(),
-                        });
+                for (output, (dst, _, _)) in graph.downstream(*src_id).iter().enumerate() {
+                    if *dst != head.id {
+                        continue;
+                    }
+                    if let Some(slots) = running.tasks.get(&running.head_of[&src_op.name]) {
+                        for slot in slots {
+                            let _ = slot.control.send(ControlMsg::SwapOutput {
+                                output,
+                                senders: tx.clone(),
+                            });
+                        }
                     }
                 }
             }
+            running.senders.insert(head.name.clone(), tx);
+            new_receivers.insert(head.id, rx);
         }
-        running.senders.insert(op_name.to_string(), new_senders);
 
-        // 3. Join the old tasks; their exports form the operator savepoint.
-        let mut exported = OperatorState::default();
+        // 3. Join the old tasks; their exports — keyed by logical operator,
+        // chained members included — form the unit savepoint.
+        let mut exported: BTreeMap<String, OperatorState> = BTreeMap::new();
         let mut retired = Vec::with_capacity(old_slots.len());
         for slot in old_slots {
             retired.push(slot.channel_id);
@@ -495,82 +682,158 @@ impl JobManager {
                 .handle
                 .join()
                 .map_err(|e| anyhow::anyhow!("task panicked: {e:?}"))??;
-            exported.merge(export.state);
+            exported
+                .entry(export.op_name.clone())
+                .or_default()
+                .merge(export.state);
+            for (name, state) in export.chained {
+                exported.entry(name).or_default().merge(state);
+            }
         }
-        let savepoint_entries = exported.entry_count();
+        let savepoint_entries: usize = exported.values().map(|s| s.entry_count()).sum();
         let t_savepoint = t0.elapsed();
 
-        // 4. Spawn the new task set, restoring redistributed fragments into
+        // 4. Spawn the new chains, restoring redistributed fragments into
         // the same (cumulative) registry.
-        let in_channels: usize = op
-            .inputs
-            .iter()
-            .map(|(src, _)| running.plan.op_parallelism(*src) as usize)
-            .sum();
-        let mut new_slots = Vec::with_capacity(new_p as usize);
-        for (subtask, receiver) in new_receivers.into_iter().enumerate() {
-            let subtask = subtask as u32;
-            let my_channel = running.next_channel_id;
-            running.next_channel_id += 1;
-            let outputs: Vec<OutputPartition> = graph
-                .downstream(op.id)
-                .into_iter()
-                .map(|(dst, partitioning, port)| {
-                    OutputPartition::new(
-                        running.senders[&graph.op(dst).name].clone(),
-                        partitioning,
-                        port,
-                        cfg.engine.key_groups,
-                        cfg.engine.batch_size,
-                    )
-                })
-                .collect();
-            let restore = exported.fragment_for(cfg.engine.key_groups, new_p, subtask);
-            let input = Some((receiver, InputTracker::new(in_channels)));
-            new_slots.push(self.spawn_task(
-                job,
-                op,
-                subtask,
-                new_p,
-                managed_mb,
-                my_channel,
-                input,
-                outputs,
-                &running.registry,
-                restore,
-                running.stop.clone(),
-            )?);
-        }
-        running.tasks.insert(op_name.to_string(), new_slots);
-        // Scale-down hygiene: dead subtasks' state-size gauges would pollute
-        // per-operator sums forever. Counters are kept — their deltas go to
-        // zero, and operator totals stay cumulative across the redeploy.
-        running.registry.retain(|id| {
-            id.name != names::STATE_SIZE_BYTES
-                || id.label("op") != Some(op_name)
-                || id
-                    .label("task")
-                    .and_then(|t| t.parse::<u32>().ok())
-                    .map(|t| t < new_p)
-                    .unwrap_or(true)
-        });
-        let t_restore = t0.elapsed();
-
-        // 5. Retire the old channels in every downstream tracker and set the
-        // new expected channel count.
-        for (dst, _, _) in graph.downstream(op.id) {
-            let d_op = graph.op(dst);
-            let expected: usize = d_op
+        for chain in &new_chains {
+            let head = graph.op(chain[0]);
+            let tail_id = *chain.last().unwrap();
+            let p = running.plan.op_parallelism(head.id);
+            let managed_mb = running.plan.managed_mb[head.id];
+            let in_channels: usize = head
                 .inputs
                 .iter()
                 .map(|(src, _)| running.plan.op_parallelism(*src) as usize)
                 .sum();
-            if let Some(slots) = running.tasks.get(&d_op.name) {
-                for slot in slots {
-                    let _ = slot.control.send(ControlMsg::RewireInput {
-                        retire: retired.clone(),
-                        expected,
-                    });
+            let mut receivers = new_receivers.remove(&head.id).unwrap_or_default();
+            receivers.reverse(); // pop() gives subtask 0 first
+            let mut new_slots = Vec::with_capacity(p as usize);
+            for subtask in 0..p {
+                let my_channel = running.next_channel_id;
+                running.next_channel_id += 1;
+                let outputs: Vec<OutputPartition> = graph
+                    .downstream(tail_id)
+                    .into_iter()
+                    .map(|(dst, partitioning, port)| {
+                        OutputPartition::new(
+                            running.senders[&graph.op(dst).name].clone(),
+                            partitioning,
+                            port,
+                            cfg.engine.key_groups,
+                            cfg.engine.batch_size,
+                        )
+                        .with_from_subtask(subtask)
+                    })
+                    .collect();
+                let restore = exported
+                    .get(&head.name)
+                    .map(|st| st.fragment_for(cfg.engine.key_groups, p, subtask))
+                    .unwrap_or_default();
+                let members = chain[1..]
+                    .iter()
+                    .map(|&m_id| {
+                        let m = graph.op(m_id);
+                        let m_restore = exported
+                            .get(&m.name)
+                            .map(|st| st.fragment_for(cfg.engine.key_groups, p, subtask))
+                            .unwrap_or_default();
+                        self.build_chained_op(
+                            job,
+                            m,
+                            subtask,
+                            p,
+                            running.plan.managed_mb[m_id],
+                            &running.registry,
+                            m_restore,
+                        )
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let input = Some((
+                    receivers.pop().expect("receiver per subtask"),
+                    InputTracker::new(in_channels),
+                ));
+                new_slots.push(self.spawn_task(
+                    job,
+                    head,
+                    subtask,
+                    p,
+                    managed_mb,
+                    my_channel,
+                    input,
+                    outputs,
+                    &running.registry,
+                    restore,
+                    members,
+                    running.stop.clone(),
+                )?);
+            }
+            running.tasks.insert(head.name.clone(), new_slots);
+        }
+
+        // Rebuild the chain bookkeeping for the unit.
+        for head in &old_heads {
+            if let Some(members) = running.chains.remove(head) {
+                for m in members {
+                    running.head_of.remove(&m);
+                }
+            }
+        }
+        for chain in &new_chains {
+            let head_name = graph.op(chain[0]).name.clone();
+            let names: Vec<String> = chain.iter().map(|&i| graph.op(i).name.clone()).collect();
+            for n in &names {
+                running.head_of.insert(n.clone(), head_name.clone());
+            }
+            running.chains.insert(head_name, names);
+        }
+
+        // Scale-down hygiene: dead subtasks' state-size gauges would pollute
+        // per-operator sums forever. Counters are kept — their deltas go to
+        // zero, and operator totals stay cumulative across the redeploy.
+        let unit_p: BTreeMap<String, u32> = graph
+            .ops
+            .iter()
+            .filter(|o| unit.contains(&o.name))
+            .map(|o| (o.name.clone(), running.plan.op_parallelism(o.id)))
+            .collect();
+        running.registry.retain(|id| {
+            id.name != names::STATE_SIZE_BYTES
+                || id
+                    .label("op")
+                    .and_then(|op| unit_p.get(op))
+                    .map(|&p| {
+                        id.label("task")
+                            .and_then(|t| t.parse::<u32>().ok())
+                            .map(|t| t < p)
+                            .unwrap_or(true)
+                    })
+                    .unwrap_or(true)
+        });
+        let t_restore = t0.elapsed();
+
+        // 5. Retire the old channels in every downstream-of-unit tracker and
+        // set the new expected channel count. (New unit tasks already built
+        // their trackers against the new plan.)
+        let mut notified: std::collections::BTreeSet<OpId> = std::collections::BTreeSet::new();
+        for chain in &new_chains {
+            let tail_id = *chain.last().unwrap();
+            for (dst, _, _) in graph.downstream(tail_id) {
+                let d_op = graph.op(dst);
+                if unit.contains(&d_op.name) || !notified.insert(dst) {
+                    continue;
+                }
+                let expected: usize = d_op
+                    .inputs
+                    .iter()
+                    .map(|(src, _)| running.plan.op_parallelism(*src) as usize)
+                    .sum();
+                if let Some(slots) = running.tasks.get(&d_op.name) {
+                    for slot in slots {
+                        let _ = slot.control.send(ControlMsg::RewireInput {
+                            retire: retired.clone(),
+                            expected,
+                        });
+                    }
                 }
             }
         }
@@ -582,6 +845,37 @@ impl JobManager {
             rewire: t_rewire.saturating_sub(t_restore),
         })
     }
+}
+
+/// The set of logical operators that must restart together for a partial
+/// redeploy of `op_name`: the fixpoint closure of currently deployed chains
+/// and newly planned chains over the target operator. Any chain (old or new)
+/// that intersects the unit is absorbed whole, because tasks deploy and tear
+/// down per chain.
+fn redeploy_unit(
+    graph: &LogicalGraph,
+    deployed: &BTreeMap<String, Vec<String>>,
+    new_layout: &ChainLayout,
+    op_name: &str,
+) -> std::collections::BTreeSet<String> {
+    let mut unit: std::collections::BTreeSet<String> = [op_name.to_string()].into();
+    loop {
+        let before = unit.len();
+        for members in deployed.values() {
+            if members.iter().any(|m| unit.contains(m)) {
+                unit.extend(members.iter().cloned());
+            }
+        }
+        for chain in &new_layout.chains {
+            if chain.iter().any(|&i| unit.contains(&graph.op(i).name)) {
+                unit.extend(chain.iter().map(|&i| graph.op(i).name.clone()));
+            }
+        }
+        if unit.len() == before {
+            break;
+        }
+    }
+    unit
 }
 
 #[cfg(test)]
@@ -981,5 +1275,190 @@ mod tests {
             })
             .sum();
         assert_eq!(sink_in, 500);
+    }
+
+    /// src → count → sink with everything at p=1: count and sink fuse into
+    /// one task, and the run produces the same savepoint and per-logical-op
+    /// metrics as the unchained deployment of the identical job.
+    #[test]
+    fn chained_deploy_matches_unchained_savepoint_and_metrics() {
+        let run = |chaining: bool| {
+            let job = wordcountish_job();
+            let mut cfg = test_config();
+            cfg.engine.chaining = chaining;
+            let mut jm = JobManager::new(cfg);
+            let registry = Registry::new();
+            let mut assignment = ScalingAssignment::initial(&job.graph);
+            // Equalize parallelism so count → sink is fusable.
+            assignment.set("count", OpScaling::new(1, Some(0)));
+            assignment.set("sink", OpScaling::new(1, None));
+            assignment.set("src", OpScaling::new(1, None));
+            let running = jm.deploy(&job, &assignment, &registry, None).unwrap();
+            let fused = running.deployed_chain("sink").map(|c| c.join(","));
+            let sp = running.wait_drained().unwrap();
+            let sink_in: u64 = {
+                let snap = registry.snapshot();
+                snap.iter()
+                    .filter_map(|(id, s)| {
+                        (id.name == names::RECORDS_IN && id.label("op") == Some("sink")).then(
+                            || match s {
+                                crate::metrics::Sample::Counter(v) => *v,
+                                _ => 0,
+                            },
+                        )
+                    })
+                    .sum()
+            };
+            (fused, sp, sink_in)
+        };
+        let (fused, sp_chained, sink_chained) = run(true);
+        let (unfused, sp_plain, sink_plain) = run(false);
+        assert_eq!(fused.as_deref(), Some("count,sink"));
+        assert_eq!(unfused.as_deref(), Some("sink"));
+        assert!(sink_chained > 0);
+        assert_eq!(sink_chained, sink_plain, "fired windows must match");
+        let entries = |sp: &Savepoint| sp.operator("count").map(|s| s.entry_count()).unwrap_or(0);
+        assert_eq!(entries(&sp_chained), entries(&sp_plain));
+    }
+
+    #[test]
+    fn partial_redeploy_splits_and_refuses_chains() {
+        // count(1) → sink(1) fuses at deploy. Scaling count to 2 splits the
+        // chain (parallelism mismatch); scaling sink to 2 afterwards
+        // re-fuses it — the redeploy unit absorbs count, whose tasks restart
+        // into the fused chain with their state intact.
+        let mut graph = LogicalGraph::new("chainjob");
+        let src = graph.add_op("src", OpKind::Source, false, vec![], 1);
+        let count = graph.add_op(
+            "count",
+            OpKind::Transform,
+            true,
+            vec![(
+                src,
+                Partitioning::Hash(Arc::new(|r: &Record| match r {
+                    Record::Pair { key, .. } => *key,
+                    _ => 0,
+                })),
+            )],
+            1,
+        );
+        graph.add_op(
+            "sink",
+            OpKind::Sink,
+            false,
+            vec![(count, Partitioning::Rebalance)],
+            1,
+        );
+        struct EndlessSource {
+            next: u64,
+        }
+        impl Source for EndlessSource {
+            fn poll(&mut self, max: usize) -> SourceBatch {
+                let out = (0..max.min(64))
+                    .map(|_| {
+                        let i = self.next;
+                        self.next += 1;
+                        Record::Pair {
+                            key: i % 50,
+                            value: 1,
+                            ts: i,
+                        }
+                    })
+                    .collect();
+                SourceBatch::Records(out)
+            }
+            fn watermark(&self) -> u64 {
+                self.next.saturating_sub(1)
+            }
+        }
+        let job = StreamJob {
+            graph,
+            factories: vec![
+                OpFactory::source(|_, _| Box::new(EndlessSource { next: 0 }) as _),
+                OpFactory::transform(|_, _| {
+                    Box::new(KeyedWindowAggregate::new(
+                        |r| match r {
+                            Record::Pair { key, .. } => *key,
+                            _ => 0,
+                        },
+                        WindowAssigner::Tumbling { size_ms: 1 << 40 },
+                        CountAggregator,
+                    ))
+                }),
+                OpFactory::transform(|_, _| Box::new(SinkOp)),
+            ],
+        };
+        let mut jm = JobManager::new(test_config());
+        let registry = Registry::new();
+        let mut assignment = ScalingAssignment::initial(&job.graph);
+        let mut running = jm.deploy(&job, &assignment, &registry, None).unwrap();
+        assert_eq!(running.deployed_chain("sink").unwrap().join(","), "count,sink");
+        std::thread::sleep(Duration::from_millis(80));
+
+        // Split: count(2) vs sink(1) breaks the equal-parallelism condition.
+        assignment.set("count", OpScaling::new(2, Some(0)));
+        let rd = jm
+            .redeploy_op(&mut running, &job, "count", &assignment)
+            .unwrap();
+        assert!(rd.savepoint_entries > 0, "split must carry count's state");
+        assert_eq!(running.deployed_chain("count").unwrap().join(","), "count");
+        assert_eq!(running.deployed_chain("sink").unwrap().join(","), "sink");
+        assert_eq!(running.plan.op_parallelism(count), 2);
+        std::thread::sleep(Duration::from_millis(80));
+
+        // Re-fuse: sink(2) matches count(2); the unit closure pulls count
+        // in, so both restart as one fused task set.
+        assignment.set("sink", OpScaling::new(2, None));
+        let rd = jm
+            .redeploy_op(&mut running, &job, "sink", &assignment)
+            .unwrap();
+        assert!(rd.savepoint_entries > 0, "re-fuse must carry count's state");
+        assert_eq!(running.deployed_chain("count").unwrap().join(","), "count,sink");
+        assert!(running.is_running());
+
+        // Conservation: every key lives in count's state exactly once.
+        let sp = running.stop_with_savepoint().unwrap();
+        assert_eq!(sp.operator("count").unwrap().entry_count(), 50);
+    }
+
+    #[test]
+    fn redeploy_unit_refuses_source_chains() {
+        // src → map fused: a partial redeploy of map would restart the
+        // source, which the job manager must refuse (the controller
+        // escalates to a full restart instead).
+        let mut graph = LogicalGraph::new("srcchain");
+        let src = graph.add_op("src", OpKind::Source, false, vec![], 1);
+        graph.add_op(
+            "map",
+            OpKind::Transform,
+            false,
+            vec![(src, Partitioning::Rebalance)],
+            1,
+        );
+        let job = StreamJob {
+            graph,
+            factories: vec![
+                OpFactory::source(|_, _| {
+                    Box::new(BoundedSource {
+                        next: 0,
+                        end: 100,
+                        step_ts: 1,
+                    }) as _
+                }),
+                OpFactory::transform(|_, _| Box::new(SinkOp)),
+            ],
+        };
+        let mut jm = JobManager::new(test_config());
+        let registry = Registry::new();
+        let mut assignment = ScalingAssignment::initial(&job.graph);
+        let mut running = jm.deploy(&job, &assignment, &registry, None).unwrap();
+        assert_eq!(running.deployed_chain("map").unwrap().join(","), "src,map");
+        assignment.set("map", OpScaling::new(2, None));
+        assert!(jm.partial_unit_contains_source(&running, &job, "map", &assignment));
+        let err = jm
+            .redeploy_op(&mut running, &job, "map", &assignment)
+            .unwrap_err();
+        assert!(err.to_string().contains("contains source"));
+        running.stop_with_savepoint().unwrap();
     }
 }

@@ -36,6 +36,6 @@ pub use operators::{
 pub use savepoint::{OperatorState, Savepoint, TaskRestore};
 pub use scrape::Scraper;
 pub use sources::RateLimitedSource;
-pub use task::{ControlMsg, IdleBackoff};
+pub use task::{ChainedOp, ControlMsg, IdleBackoff};
 pub use window::{Window, WindowAssigner};
 pub use xla_op::{XlaCurrencyMapOp, XlaWindowCountOp};

@@ -5,6 +5,7 @@
 use super::exchange::{Envelope, InputTracker, OutputPartition, Tagged};
 use super::operators::{OpCtx, Operator, Source, SourceBatch};
 use super::savepoint::{OperatorState, TaskRestore};
+use crate::graph::Record;
 use crate::metrics::{names, Counter, MetricId, Registry};
 use crate::state::{split_state_key, StateBackend};
 use anyhow::Result;
@@ -20,8 +21,10 @@ use std::time::{Duration, Instant};
 /// redeploy re-wires a task's exchanges while it keeps processing.
 pub enum ControlMsg {
     /// In-place vertical scaling: re-apply a managed-memory budget (MB) to
-    /// the task's state backend. No restart, no savepoint.
-    ResizeMemory { managed_mb: u64 },
+    /// the state backend of logical operator `op` within this task (the
+    /// head or a fused chain member; an empty name targets the head).
+    /// No restart, no savepoint.
+    ResizeMemory { op: String, managed_mb: u64 },
     /// The downstream operator of output partition `output` was rescaled:
     /// flush pending buffers to the old channels, then send to these.
     SwapOutput {
@@ -106,6 +109,51 @@ pub enum TaskKind {
     Transform(Box<dyn Operator>),
 }
 
+/// One fused (non-head) member of an operator chain: it shares the head's
+/// thread but keeps its own operator, state backend, restore fragment, and
+/// metrics series, so the scraper aggregates per logical operator exactly as
+/// if the member ran in its own task.
+pub struct ChainedOp {
+    pub op_name: String,
+    pub op: Box<dyn Operator>,
+    pub state: Box<dyn StateBackend>,
+    pub metrics: TaskMetrics,
+    pub restore: TaskRestore,
+    /// Cumulative LSM write-stall ns for this member's backend (see
+    /// [`TaskHarness::stall_ns`]).
+    pub stall_ns: Option<Arc<AtomicU64>>,
+    /// Per-member key-encoding scratch (each member has its own `OpCtx`).
+    key_buf: Vec<u8>,
+    /// Sampled busy ns accumulated over the current batch, already scaled
+    /// up by the sampling stride.
+    batch_busy_ns: u64,
+    /// Stall-counter snapshot at batch start.
+    batch_stall0: u64,
+}
+
+impl ChainedOp {
+    pub fn new(
+        op_name: String,
+        op: Box<dyn Operator>,
+        state: Box<dyn StateBackend>,
+        metrics: TaskMetrics,
+        restore: TaskRestore,
+        stall_ns: Option<Arc<AtomicU64>>,
+    ) -> Self {
+        Self {
+            op_name,
+            op,
+            state,
+            metrics,
+            restore,
+            stall_ns,
+            key_buf: Vec::with_capacity(64),
+            batch_busy_ns: 0,
+            batch_stall0: 0,
+        }
+    }
+}
+
 /// Everything a task thread needs.
 pub struct TaskHarness {
     /// Globally unique channel id (tags outgoing envelopes).
@@ -133,6 +181,13 @@ pub struct TaskHarness {
     /// must read as "waiting on storage", or the policy would scale CPU
     /// when it should scale memory.
     pub stall_ns: Option<Arc<AtomicU64>>,
+    /// Fused chain members downstream of the head, in flow order. Records
+    /// pass between members by value — no envelope, no batch buffer, no
+    /// channel; only the tail's edges go through `outputs`.
+    pub chain: Vec<ChainedOp>,
+    /// Per-member busy attribution measures 1 in `chain_stride` records at
+    /// member boundaries and scales up (1 = measure every record).
+    pub chain_stride: usize,
 }
 
 /// What a finished task hands back to the job manager.
@@ -140,6 +195,9 @@ pub struct TaskExport {
     pub op_name: String,
     pub subtask: u32,
     pub state: OperatorState,
+    /// State exports of fused chain members, in flow order (logical
+    /// operator name → export) — savepoints stay keyed by logical operator.
+    pub chained: Vec<(String, OperatorState)>,
 }
 
 /// Emit one record to every output partition, cloning only when fanning
@@ -164,15 +222,208 @@ fn emit_all(
     }
 }
 
+/// Current value of an optional shared write-stall counter.
+fn stall_ns_now(c: &Option<Arc<AtomicU64>>) -> u64 {
+    c.as_ref().map_or(0, |s| s.load(Ordering::Relaxed))
+}
+
+/// Export a backend's keyed state grouped by key group, plus the operator's
+/// aux bookkeeping (owned copies: the savepoint must outlive the backend's
+/// buffers).
+fn export_operator_state(state: &mut dyn StateBackend, op: &dyn Operator) -> Result<OperatorState> {
+    let mut export = OperatorState::default();
+    for (k, v) in state.scan_prefix(b"")? {
+        if let Some((group, _)) = split_state_key(&k) {
+            export
+                .keyed
+                .entry(group)
+                .or_default()
+                .push((k.to_vec(), v.to_vec()));
+        }
+    }
+    for (group, blob) in op.aux_snapshot() {
+        export.aux.entry(group).or_default().push(blob);
+    }
+    Ok(export)
+}
+
+/// Flow `recs` through the chain members starting at index `start` — by
+/// value, no envelope, no channel — then emit whatever falls out of the tail
+/// to the task's outputs. `next` is drained scratch. Returns nanoseconds
+/// blocked on the tail's outgoing exchange.
+#[allow(clippy::too_many_arguments)]
+fn flow_from(
+    chain: &mut [ChainedOp],
+    start: usize,
+    outputs: &mut [OutputPartition],
+    channel_id: u32,
+    recs: &mut Vec<Record>,
+    next: &mut Vec<Record>,
+    key_groups: u32,
+    wm: u64,
+) -> Result<u64> {
+    for m in chain[start..].iter_mut() {
+        if recs.is_empty() {
+            return Ok(0);
+        }
+        m.metrics.records_in.add(recs.len() as u64);
+        {
+            let mut ctx = OpCtx {
+                out: next,
+                state: m.state.as_mut(),
+                key_buf: &mut m.key_buf,
+                key_groups,
+                watermark: wm,
+            };
+            for r in recs.drain(..) {
+                m.op.on_record(0, r, &mut ctx)?;
+            }
+        }
+        m.metrics.records_out.add(next.len() as u64);
+        std::mem::swap(recs, next);
+    }
+    let mut bp = 0;
+    for r in recs.drain(..) {
+        bp += emit_all(outputs, channel_id, r);
+    }
+    Ok(bp)
+}
+
+/// Drive one batch of head-output records through the chain with sampled
+/// per-member busy attribution: 1 in `stride` records is timed at member
+/// boundaries and the elapsed ns scaled up by `stride`; the rest flow
+/// untimed. `tick` persists across batches so the sample phase doesn't
+/// reset. Returns ns blocked on the tail's exchange.
+#[allow(clippy::too_many_arguments)]
+fn run_chain_records(
+    chain: &mut [ChainedOp],
+    outputs: &mut [OutputPartition],
+    channel_id: u32,
+    records: &mut Vec<Record>,
+    cur: &mut Vec<Record>,
+    next: &mut Vec<Record>,
+    key_groups: u32,
+    wm: u64,
+    stride: usize,
+    tick: &mut usize,
+) -> Result<u64> {
+    let mut bp = 0u64;
+    while !records.is_empty() {
+        let phase = *tick % stride;
+        if phase != 0 {
+            // Unmeasured run up to the next sample point, flowed as one
+            // batch so counter updates amortise over the run.
+            let run = (stride - phase).min(records.len());
+            *tick = tick.wrapping_add(run);
+            cur.extend(records.drain(..run));
+            bp += flow_from(chain, 0, outputs, channel_id, cur, next, key_groups, wm)?;
+            continue;
+        }
+        // Measured record: timed at each member boundary, scaled by stride.
+        *tick = tick.wrapping_add(1);
+        cur.extend(records.drain(..1));
+        for m in chain.iter_mut() {
+            if cur.is_empty() {
+                break;
+            }
+            m.metrics.records_in.add(cur.len() as u64);
+            let t0 = Instant::now();
+            {
+                let mut ctx = OpCtx {
+                    out: next,
+                    state: m.state.as_mut(),
+                    key_buf: &mut m.key_buf,
+                    key_groups,
+                    watermark: wm,
+                };
+                for r in cur.drain(..) {
+                    m.op.on_record(0, r, &mut ctx)?;
+                }
+            }
+            m.batch_busy_ns += t0.elapsed().as_nanos() as u64 * stride as u64;
+            m.metrics.records_out.add(next.len() as u64);
+            std::mem::swap(cur, next);
+        }
+        for r in cur.drain(..) {
+            bp += emit_all(outputs, channel_id, r);
+        }
+    }
+    Ok(bp)
+}
+
+/// Reset per-member batch accounting before driving a batch through the
+/// chain.
+fn begin_chain_batch(chain: &mut [ChainedOp]) {
+    for m in chain {
+        m.batch_busy_ns = 0;
+        m.batch_stall0 = stall_ns_now(&m.stall_ns);
+    }
+}
+
+/// Close out one batch of member accounting: sampled busy minus the
+/// member's own write-stall (which bills as blocked), the tail's exchange
+/// blocking on the last member, and idle filling the rest so each member's
+/// busy + idle + backpressure sums to the shared thread's wall time.
+fn settle_chain_batch(chain: &mut [ChainedOp], wall_ns: u64, tail_bp: u64) {
+    let last = chain.len().saturating_sub(1);
+    for (i, m) in chain.iter_mut().enumerate() {
+        let stall = stall_ns_now(&m.stall_ns).saturating_sub(m.batch_stall0);
+        let bp = stall + if i == last { tail_bp } else { 0 };
+        let busy = m.batch_busy_ns.saturating_sub(stall);
+        m.metrics.busy_ns.add(busy);
+        m.metrics.backpressure_ns.add(bp);
+        m.metrics.idle_ns.add(wall_ns.saturating_sub(busy + bp));
+    }
+}
+
+/// Run a control-point callback (watermark / drain) on each member in turn,
+/// flowing anything it emits through the rest of the chain and out the
+/// tail. These are rare relative to records, so no sampling — exact flow.
+#[allow(clippy::too_many_arguments)]
+fn chain_control<F>(
+    chain: &mut [ChainedOp],
+    outputs: &mut [OutputPartition],
+    channel_id: u32,
+    cur: &mut Vec<Record>,
+    next: &mut Vec<Record>,
+    key_groups: u32,
+    wm: u64,
+    mut f: F,
+) -> Result<u64>
+where
+    F: FnMut(&mut dyn Operator, &mut OpCtx) -> Result<()>,
+{
+    let mut bp = 0u64;
+    for i in 0..chain.len() {
+        {
+            let m = &mut chain[i];
+            let mut ctx = OpCtx {
+                out: cur,
+                state: m.state.as_mut(),
+                key_buf: &mut m.key_buf,
+                key_groups,
+                watermark: wm,
+            };
+            f(m.op.as_mut(), &mut ctx)?;
+        }
+        chain[i].metrics.records_out.add(cur.len() as u64);
+        bp += flow_from(chain, i + 1, outputs, channel_id, cur, next, key_groups, wm)?;
+    }
+    Ok(bp)
+}
+
 impl TaskHarness {
     /// Drain all pending control messages. Called once per loop iteration in
     /// both task loops (an associated fn because the transform loop has the
     /// tracker moved out of `self`). Returns nanoseconds spent blocked while
     /// flushing during an output swap.
+    #[allow(clippy::too_many_arguments)]
     fn poll_control(
         control: &Receiver<ControlMsg>,
         outputs: &mut [OutputPartition],
+        head_op: &str,
         state: &mut dyn StateBackend,
+        chain: &mut [ChainedOp],
         mut tracker: Option<&mut InputTracker>,
         channel_id: u32,
         decommissioned: &mut bool,
@@ -180,7 +431,13 @@ impl TaskHarness {
         let mut blocked = 0u64;
         while let Ok(msg) = control.try_recv() {
             match msg {
-                ControlMsg::ResizeMemory { managed_mb } => state.resize_managed(managed_mb),
+                ControlMsg::ResizeMemory { op, managed_mb } => {
+                    if op.is_empty() || op == head_op {
+                        state.resize_managed(managed_mb);
+                    } else if let Some(m) = chain.iter_mut().find(|m| m.op_name == op) {
+                        m.state.resize_managed(managed_mb);
+                    }
+                }
                 ControlMsg::SwapOutput { output, senders } => {
                     if let Some(out) = outputs.get_mut(output) {
                         blocked += out.swap_senders(channel_id, senders);
@@ -207,6 +464,13 @@ impl TaskHarness {
         if let TaskKind::Transform(op) = &mut self.kind {
             op.aux_restore(&restore.aux);
         }
+        for m in &mut self.chain {
+            let r = std::mem::take(&mut m.restore);
+            for (k, v) in &r.keyed {
+                m.state.put(k, v)?;
+            }
+            m.op.aux_restore(&r.aux);
+        }
         match self.kind {
             TaskKind::Source(_) => self.run_source(),
             TaskKind::Transform(_) => self.run_transform(),
@@ -220,6 +484,10 @@ impl TaskHarness {
         let mut last_flush = Instant::now();
         let mut backoff = IdleBackoff::new();
         let mut decommissioned = false;
+        let mut chain_cur: Vec<Record> = Vec::new();
+        let mut chain_next: Vec<Record> = Vec::new();
+        let mut sample_tick = 0usize;
+        let stride = self.chain_stride.max(1);
         loop {
             if self.stop.load(Ordering::Relaxed) {
                 break;
@@ -227,7 +495,9 @@ impl TaskHarness {
             let bp_ctl = Self::poll_control(
                 &self.control,
                 &mut self.outputs,
+                &self.op_name,
                 self.state.as_mut(),
+                &mut self.chain,
                 None,
                 self.channel_id,
                 &mut decommissioned,
@@ -239,25 +509,54 @@ impl TaskHarness {
                 SourceBatch::Records(records) => {
                     backoff.reset();
                     let gen_ns = t0.elapsed().as_nanos() as u64;
-                    self.metrics.records_in.add(records.len() as u64);
-                    let mut bp = 0u64;
                     let n = records.len() as u64;
-                    let emit_t0 = Instant::now();
-                    for rec in records {
-                        bp += emit_all(&mut self.outputs, self.channel_id, rec);
+                    self.metrics.records_in.add(n);
+                    if self.chain.is_empty() {
+                        let mut bp = 0u64;
+                        let emit_t0 = Instant::now();
+                        for rec in records {
+                            bp += emit_all(&mut self.outputs, self.channel_id, rec);
+                        }
+                        let emit_ns = emit_t0.elapsed().as_nanos() as u64;
+                        self.metrics.records_out.add(n);
+                        self.metrics.backpressure_ns.add(bp);
+                        self.metrics
+                            .busy_ns
+                            .add(gen_ns + emit_ns.saturating_sub(bp));
+                    } else {
+                        // Head accounting: generation is the source's own
+                        // busy time; driving the members is theirs, so the
+                        // head books it as idle.
+                        self.metrics.records_out.add(n);
+                        self.metrics.busy_ns.add(gen_ns);
+                        let wm = source.watermark();
+                        let mut records = records;
+                        begin_chain_batch(&mut self.chain);
+                        let c0 = Instant::now();
+                        let tail_bp = run_chain_records(
+                            &mut self.chain,
+                            &mut self.outputs,
+                            self.channel_id,
+                            &mut records,
+                            &mut chain_cur,
+                            &mut chain_next,
+                            self.key_groups,
+                            wm,
+                            stride,
+                            &mut sample_tick,
+                        )?;
+                        let chain_ns = c0.elapsed().as_nanos() as u64;
+                        self.metrics.idle_ns.add(chain_ns);
+                        settle_chain_batch(&mut self.chain, gen_ns + chain_ns, tail_bp);
                     }
-                    let emit_ns = emit_t0.elapsed().as_nanos() as u64;
-                    self.metrics.records_out.add(n);
-                    self.metrics.backpressure_ns.add(bp);
-                    self.metrics
-                        .busy_ns
-                        .add(gen_ns + emit_ns.saturating_sub(bp));
                 }
                 SourceBatch::Idle => {
                     backoff.wait();
-                    self.metrics
-                        .idle_ns
-                        .add(t0.elapsed().as_nanos() as u64);
+                    let idle = t0.elapsed().as_nanos() as u64;
+                    self.metrics.idle_ns.add(idle);
+                    for m in &mut self.chain {
+                        m.metrics.idle_ns.add(idle);
+                    }
                 }
                 SourceBatch::Exhausted => break,
             }
@@ -265,25 +564,74 @@ impl TaskHarness {
                 last_flush = Instant::now();
                 let wm = source.watermark();
                 let mut bp = 0;
+                if !self.chain.is_empty() {
+                    bp += chain_control(
+                        &mut self.chain,
+                        &mut self.outputs,
+                        self.channel_id,
+                        &mut chain_cur,
+                        &mut chain_next,
+                        self.key_groups,
+                        wm,
+                        |op, ctx| op.on_watermark(wm, ctx),
+                    )?;
+                }
                 for out in &mut self.outputs {
                     bp += out.send_watermark(self.channel_id, wm);
                 }
                 self.metrics.backpressure_ns.add(bp);
             }
         }
-        // Final watermark then EOS (suppressed when decommissioned: the
-        // downstream operators keep running).
+        // Final watermark, member drain, then EOS. Watermark and EOS are
+        // suppressed when decommissioned (the downstream operators keep
+        // running), but members still drain so their state gets exported.
+        let wm = source.watermark();
+        if !decommissioned && !self.chain.is_empty() {
+            chain_control(
+                &mut self.chain,
+                &mut self.outputs,
+                self.channel_id,
+                &mut chain_cur,
+                &mut chain_next,
+                self.key_groups,
+                wm,
+                |op, ctx| op.on_watermark(wm, ctx),
+            )?;
+        }
+        if !self.chain.is_empty() {
+            chain_control(
+                &mut self.chain,
+                &mut self.outputs,
+                self.channel_id,
+                &mut chain_cur,
+                &mut chain_next,
+                self.key_groups,
+                wm,
+                |op, ctx| op.on_drain(ctx),
+            )?;
+        }
         if !decommissioned {
-            let wm = source.watermark();
             for out in &mut self.outputs {
                 out.send_watermark(self.channel_id, wm);
                 out.send_eos(self.channel_id);
             }
+        } else {
+            for out in &mut self.outputs {
+                out.flush(self.channel_id);
+            }
+        }
+        let mut chained = Vec::with_capacity(self.chain.len());
+        for m in &mut self.chain {
+            chained.push((
+                m.op_name.clone(),
+                export_operator_state(m.state.as_mut(), m.op.as_ref())?,
+            ));
         }
         Ok(TaskExport {
             op_name: self.op_name,
             subtask: self.subtask,
             state: OperatorState::default(),
+            chained,
         })
     }
 
@@ -297,13 +645,17 @@ impl TaskHarness {
         let mut last_flush = Instant::now();
         let mut decommissioned = false;
         let stall_counter = self.stall_ns.clone();
-        let stall_now =
-            |c: &Option<Arc<AtomicU64>>| c.as_ref().map_or(0, |s| s.load(Ordering::Relaxed));
+        let mut chain_cur: Vec<Record> = Vec::new();
+        let mut chain_next: Vec<Record> = Vec::new();
+        let mut sample_tick = 0usize;
+        let stride = self.chain_stride.max(1);
         loop {
             let bp_ctl = Self::poll_control(
                 &self.control,
                 &mut self.outputs,
+                &self.op_name,
                 self.state.as_mut(),
+                &mut self.chain,
                 Some(&mut tracker),
                 self.channel_id,
                 &mut decommissioned,
@@ -311,14 +663,18 @@ impl TaskHarness {
             self.metrics.backpressure_ns.add(bp_ctl);
             let t_recv = Instant::now();
             let msg = rx.recv_timeout(self.flush_interval);
-            self.metrics
-                .idle_ns
-                .add(t_recv.elapsed().as_nanos() as u64);
+            let recv_idle = t_recv.elapsed().as_nanos() as u64;
+            self.metrics.idle_ns.add(recv_idle);
+            // Chain members share the thread: waiting for input is idle
+            // time for them too.
+            for m in &mut self.chain {
+                m.metrics.idle_ns.add(recv_idle);
+            }
             match msg {
                 Ok((from, Envelope::Batch { port, records })) => {
                     let _ = from;
                     let t0 = Instant::now();
-                    let stall0 = stall_now(&stall_counter);
+                    let stall0 = stall_ns_now(&stall_counter);
                     let n = records.len() as u64;
                     self.metrics.records_in.add(n);
                     let wm = tracker.current_watermark();
@@ -337,22 +693,51 @@ impl TaskHarness {
                         }
                     }
                     emitted += out_buf.len() as u64;
-                    for rec in out_buf.drain(..) {
-                        bp += emit_all(&mut self.outputs, self.channel_id, rec);
-                    }
-                    // Write-stall ns accrued inside on_record count as
-                    // blocked time, not busy time.
-                    let blocked = bp + (stall_now(&stall_counter) - stall0);
                     self.metrics.records_out.add(emitted);
-                    self.metrics.backpressure_ns.add(blocked);
-                    self.metrics
-                        .busy_ns
-                        .add((t0.elapsed().as_nanos() as u64).saturating_sub(blocked));
+                    if self.chain.is_empty() {
+                        for rec in out_buf.drain(..) {
+                            bp += emit_all(&mut self.outputs, self.channel_id, rec);
+                        }
+                        // Write-stall ns accrued inside on_record count as
+                        // blocked time, not busy time.
+                        let blocked = bp + (stall_ns_now(&stall_counter) - stall0);
+                        self.metrics.backpressure_ns.add(blocked);
+                        self.metrics
+                            .busy_ns
+                            .add((t0.elapsed().as_nanos() as u64).saturating_sub(blocked));
+                    } else {
+                        // Head books only its own on_record time as busy;
+                        // the members' share of the wall clock is theirs
+                        // (head reads it as idle).
+                        let head_ns = t0.elapsed().as_nanos() as u64;
+                        let head_blocked = stall_ns_now(&stall_counter) - stall0;
+                        self.metrics.backpressure_ns.add(head_blocked);
+                        self.metrics
+                            .busy_ns
+                            .add(head_ns.saturating_sub(head_blocked));
+                        begin_chain_batch(&mut self.chain);
+                        let c0 = Instant::now();
+                        let tail_bp = run_chain_records(
+                            &mut self.chain,
+                            &mut self.outputs,
+                            self.channel_id,
+                            &mut out_buf,
+                            &mut chain_cur,
+                            &mut chain_next,
+                            self.key_groups,
+                            wm,
+                            stride,
+                            &mut sample_tick,
+                        )?;
+                        let chain_ns = c0.elapsed().as_nanos() as u64;
+                        self.metrics.idle_ns.add(chain_ns);
+                        settle_chain_batch(&mut self.chain, head_ns + chain_ns, tail_bp);
+                    }
                 }
                 Ok((from, Envelope::Watermark { ts, .. })) => {
                     if let Some(wm) = tracker.on_watermark(from, ts) {
                         let t0 = Instant::now();
-                        let stall0 = stall_now(&stall_counter);
+                        let stall0 = stall_ns_now(&stall_counter);
                         let mut bp = 0u64;
                         {
                             let mut ctx = OpCtx {
@@ -365,14 +750,39 @@ impl TaskHarness {
                             op.on_watermark(wm, &mut ctx)?;
                         }
                         let emitted = out_buf.len() as u64;
-                        for rec in out_buf.drain(..) {
-                            bp += emit_all(&mut self.outputs, self.channel_id, rec);
+                        self.metrics.records_out.add(emitted);
+                        if self.chain.is_empty() {
+                            for rec in out_buf.drain(..) {
+                                bp += emit_all(&mut self.outputs, self.channel_id, rec);
+                            }
+                        } else {
+                            // Watermarks are rare; flow them exactly and
+                            // bill the whole advance to the head.
+                            bp += flow_from(
+                                &mut self.chain,
+                                0,
+                                &mut self.outputs,
+                                self.channel_id,
+                                &mut out_buf,
+                                &mut chain_next,
+                                self.key_groups,
+                                wm,
+                            )?;
+                            bp += chain_control(
+                                &mut self.chain,
+                                &mut self.outputs,
+                                self.channel_id,
+                                &mut chain_cur,
+                                &mut chain_next,
+                                self.key_groups,
+                                wm,
+                                |op, ctx| op.on_watermark(wm, ctx),
+                            )?;
                         }
                         for out in &mut self.outputs {
                             bp += out.send_watermark(self.channel_id, wm);
                         }
-                        let blocked = bp + (stall_now(&stall_counter) - stall0);
-                        self.metrics.records_out.add(emitted);
+                        let blocked = bp + (stall_ns_now(&stall_counter) - stall0);
                         self.metrics.backpressure_ns.add(blocked);
                         self.metrics
                             .busy_ns
@@ -403,7 +813,9 @@ impl TaskHarness {
         Self::poll_control(
             &self.control,
             &mut self.outputs,
+            &self.op_name,
             self.state.as_mut(),
+            &mut self.chain,
             Some(&mut tracker),
             self.channel_id,
             &mut decommissioned,
@@ -411,18 +823,42 @@ impl TaskHarness {
         // Drain: let the operator flush, export state, propagate EOS — unless
         // decommissioned (a partial redeploy replaces this task; downstream
         // keeps running and must not see an end-of-stream).
+        let final_wm = tracker.current_watermark();
         {
             let mut ctx = OpCtx {
                 out: &mut out_buf,
                 state: self.state.as_mut(),
                 key_buf: &mut key_buf,
                 key_groups: self.key_groups,
-                watermark: tracker.current_watermark(),
+                watermark: final_wm,
             };
             op.on_drain(&mut ctx)?;
         }
-        for rec in out_buf.drain(..) {
-            emit_all(&mut self.outputs, self.channel_id, rec);
+        if self.chain.is_empty() {
+            for rec in out_buf.drain(..) {
+                emit_all(&mut self.outputs, self.channel_id, rec);
+            }
+        } else {
+            flow_from(
+                &mut self.chain,
+                0,
+                &mut self.outputs,
+                self.channel_id,
+                &mut out_buf,
+                &mut chain_next,
+                self.key_groups,
+                final_wm,
+            )?;
+            chain_control(
+                &mut self.chain,
+                &mut self.outputs,
+                self.channel_id,
+                &mut chain_cur,
+                &mut chain_next,
+                self.key_groups,
+                final_wm,
+                |op, ctx| op.on_drain(ctx),
+            )?;
         }
         if decommissioned {
             for out in &mut self.outputs {
@@ -433,25 +869,19 @@ impl TaskHarness {
                 out.send_eos(self.channel_id);
             }
         }
-        // Export keyed state grouped by key group (owned copies: the
-        // savepoint must outlive the backend's buffers).
-        let mut export = OperatorState::default();
-        for (k, v) in self.state.scan_prefix(b"")? {
-            if let Some((group, _)) = split_state_key(&k) {
-                export
-                    .keyed
-                    .entry(group)
-                    .or_default()
-                    .push((k.to_vec(), v.to_vec()));
-            }
-        }
-        for (group, blob) in op.aux_snapshot() {
-            export.aux.entry(group).or_default().push(blob);
+        let export = export_operator_state(self.state.as_mut(), op.as_ref())?;
+        let mut chained = Vec::with_capacity(self.chain.len());
+        for m in &mut self.chain {
+            chained.push((
+                m.op_name.clone(),
+                export_operator_state(m.state.as_mut(), m.op.as_ref())?,
+            ));
         }
         Ok(TaskExport {
             op_name: self.op_name,
             subtask: self.subtask,
             state: export,
+            chained,
         })
     }
 }
@@ -515,6 +945,8 @@ mod tests {
             flush_interval: Duration::from_millis(10),
             control: ctl(),
             stall_ns: None,
+            chain: Vec::new(),
+            chain_stride: 64,
         };
         let h = std::thread::spawn(move || harness.run().unwrap());
         up_tx[0]
@@ -575,6 +1007,8 @@ mod tests {
             flush_interval: Duration::from_millis(5),
             control: ctl(),
             stall_ns: None,
+            chain: Vec::new(),
+            chain_stride: 64,
         };
         let h = std::thread::spawn(move || harness.run().unwrap());
         // Two events in window [0,100), one in [100,200).
@@ -647,6 +1081,8 @@ mod tests {
                 flush_interval: Duration::from_millis(5),
                 control: ctl(),
                 stall_ns: None,
+                chain: Vec::new(),
+                chain_stride: 64,
             };
             let h = std::thread::spawn(move || harness.run().unwrap());
             up_tx[0]
@@ -704,6 +1140,8 @@ mod tests {
             flush_interval: Duration::from_millis(5),
             control: ctl(),
             stall_ns: None,
+            chain: Vec::new(),
+            chain_stride: 64,
         };
         let h = std::thread::spawn(move || harness.run().unwrap());
         up_tx[0]
@@ -790,6 +1228,8 @@ mod tests {
             flush_interval: Duration::from_millis(5),
             control: ctl(),
             stall_ns: None,
+            chain: Vec::new(),
+            chain_stride: 64,
         };
         let h = std::thread::spawn(move || harness.run().unwrap());
         std::thread::sleep(Duration::from_millis(30));
@@ -808,5 +1248,272 @@ mod tests {
         h.join().unwrap();
         assert!(n > 0);
         assert!(saw_wm, "source must emit watermarks");
+    }
+
+    /// Drain a receiver until EOS, collecting record batches.
+    fn collect_until_eos(rx: &Receiver<Tagged>) -> Vec<Record> {
+        let mut got = Vec::new();
+        loop {
+            match rx.recv().unwrap() {
+                (_, Envelope::Batch { records, .. }) => got.extend(records),
+                (_, Envelope::Eos) => break,
+                _ => {}
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn chained_task_processes_through_members_with_own_metrics() {
+        let reg = Registry::new();
+        let (up_tx, up_rx) = build_edge_channels(1, 64);
+        let (down_tx, down_rx) = build_edge_channels(1, 64);
+        let m2_metrics = TaskMetrics::register(&reg, "m2", 0);
+        let member = ChainedOp::new(
+            "m2".into(),
+            Box::new(MapOp {
+                f: |r| {
+                    // Enough work per record for the sampled timer to see.
+                    let mut x = 0u64;
+                    for i in 0..10_000u64 {
+                        x = x.wrapping_mul(31).wrapping_add(i);
+                    }
+                    std::hint::black_box(x);
+                    match r {
+                        Record::Pair { key, value, ts } => Some(Record::Pair {
+                            key,
+                            value: value + 1,
+                            ts,
+                        }),
+                        other => Some(other),
+                    }
+                },
+            }),
+            Box::new(HeapBackend::new()),
+            m2_metrics.clone(),
+            TaskRestore::default(),
+            None,
+        );
+        let harness = TaskHarness {
+            channel_id: 20,
+            op_name: "m1".into(),
+            subtask: 0,
+            kind: TaskKind::Transform(Box::new(MapOp {
+                f: |r| match r {
+                    Record::Pair { key, value, ts } => Some(Record::Pair {
+                        key,
+                        value: value * 10,
+                        ts,
+                    }),
+                    other => Some(other),
+                },
+            })),
+            input: Some((up_rx.into_iter().next().unwrap(), InputTracker::new(1))),
+            outputs: vec![OutputPartition::new(
+                down_tx,
+                Partitioning::Rebalance,
+                0,
+                128,
+                16,
+            )],
+            state: Box::new(HeapBackend::new()),
+            key_groups: 128,
+            metrics: TaskMetrics::register(&reg, "m1", 0),
+            stop: Arc::new(AtomicBool::new(false)),
+            restore: TaskRestore::default(),
+            flush_interval: Duration::from_millis(10),
+            control: ctl(),
+            stall_ns: None,
+            chain: vec![member],
+            chain_stride: 1,
+        };
+        let h = std::thread::spawn(move || harness.run().unwrap());
+        up_tx[0]
+            .send((
+                0,
+                Envelope::Batch {
+                    port: 0,
+                    records: vec![pair(1, 5), pair(2, 6)],
+                },
+            ))
+            .unwrap();
+        up_tx[0].send((0, Envelope::Eos)).unwrap();
+        let export = h.join().unwrap();
+        // value 1 → head ×10 → member +1 = 11, for both records.
+        let got = collect_until_eos(&down_rx[0]);
+        assert_eq!(got.len(), 2);
+        assert!(got
+            .iter()
+            .all(|r| matches!(r, Record::Pair { value: 11, .. })));
+        // The member exports under its own logical name...
+        assert_eq!(export.chained.len(), 1);
+        assert_eq!(export.chained[0].0, "m2");
+        // ...and its metrics series carries its own attribution.
+        assert_eq!(m2_metrics.records_in.get(), 2);
+        assert_eq!(m2_metrics.records_out.get(), 2);
+        assert!(
+            m2_metrics.busy_ns.get() > 0,
+            "stride-1 sampling must book member busy time"
+        );
+    }
+
+    #[test]
+    fn chained_task_flows_watermarks_and_exports_member_state() {
+        let (up_tx, up_rx) = build_edge_channels(1, 64);
+        let (down_tx, down_rx) = build_edge_channels(1, 64);
+        let member = ChainedOp::new(
+            "count".into(),
+            Box::new(KeyedWindowAggregate::new(
+                |r| match r {
+                    Record::Pair { key, .. } => *key,
+                    _ => 0,
+                },
+                WindowAssigner::Tumbling { size_ms: 100 },
+                CountAggregator,
+            )),
+            Box::new(HeapBackend::new()),
+            metrics(),
+            TaskRestore::default(),
+            None,
+        );
+        let harness = TaskHarness {
+            channel_id: 21,
+            op_name: "fwd".into(),
+            subtask: 0,
+            kind: TaskKind::Transform(Box::new(MapOp { f: Some::<Record> })),
+            input: Some((up_rx.into_iter().next().unwrap(), InputTracker::new(1))),
+            outputs: vec![OutputPartition::new(
+                down_tx,
+                Partitioning::Rebalance,
+                0,
+                128,
+                16,
+            )],
+            state: Box::new(HeapBackend::new()),
+            key_groups: 128,
+            metrics: metrics(),
+            stop: Arc::new(AtomicBool::new(false)),
+            restore: TaskRestore::default(),
+            flush_interval: Duration::from_millis(5),
+            control: ctl(),
+            stall_ns: None,
+            chain: vec![member],
+            chain_stride: 64,
+        };
+        let h = std::thread::spawn(move || harness.run().unwrap());
+        // Two events in window [0,100), one in [100,200) — same shape as
+        // the unchained windowed test above: behavior must match exactly.
+        up_tx[0]
+            .send((
+                0,
+                Envelope::Batch {
+                    port: 0,
+                    records: vec![pair(1, 10), pair(1, 20), pair(1, 150)],
+                },
+            ))
+            .unwrap();
+        up_tx[0]
+            .send((0, Envelope::Watermark { port: 0, ts: 100 }))
+            .unwrap();
+        up_tx[0].send((0, Envelope::Eos)).unwrap();
+        let export = h.join().unwrap();
+        // The stateless head exports nothing; the member's open window
+        // [100,200) lands in the chained export under its logical name.
+        assert_eq!(export.state.entry_count(), 0);
+        assert_eq!(export.chained.len(), 1);
+        assert_eq!(export.chained[0].0, "count");
+        assert_eq!(export.chained[0].1.entry_count(), 1);
+        assert!(!export.chained[0].1.aux.is_empty(), "pending window exported");
+        assert_eq!(
+            collect_until_eos(&down_rx[0]),
+            vec![Record::Pair {
+                key: 1,
+                value: 2,
+                ts: 100
+            }]
+        );
+    }
+
+    #[test]
+    fn source_chain_drives_members_inline() {
+        struct CountSource {
+            left: u64,
+            ts: u64,
+        }
+        impl Source for CountSource {
+            fn poll(&mut self, max: usize) -> SourceBatch {
+                if self.left == 0 {
+                    return SourceBatch::Exhausted;
+                }
+                let n = (max as u64).min(self.left);
+                self.left -= n;
+                let mut out = Vec::with_capacity(n as usize);
+                for _ in 0..n {
+                    self.ts += 1;
+                    out.push(Record::Pair {
+                        key: self.ts,
+                        value: 1,
+                        ts: self.ts,
+                    });
+                }
+                SourceBatch::Records(out)
+            }
+            fn watermark(&self) -> u64 {
+                self.ts
+            }
+        }
+        let reg = Registry::new();
+        let map_metrics = TaskMetrics::register(&reg, "map", 0);
+        let member = ChainedOp::new(
+            "map".into(),
+            Box::new(MapOp {
+                f: |r| match r {
+                    Record::Pair { key, value, ts } => Some(Record::Pair {
+                        key,
+                        value: value * 3,
+                        ts,
+                    }),
+                    other => Some(other),
+                },
+            }),
+            Box::new(HeapBackend::new()),
+            map_metrics.clone(),
+            TaskRestore::default(),
+            None,
+        );
+        let (down_tx, down_rx) = build_edge_channels(1, 1024);
+        let harness = TaskHarness {
+            channel_id: 22,
+            op_name: "src".into(),
+            subtask: 0,
+            kind: TaskKind::Source(Box::new(CountSource { left: 100, ts: 0 })),
+            input: None,
+            outputs: vec![OutputPartition::new(
+                down_tx,
+                Partitioning::Rebalance,
+                0,
+                128,
+                16,
+            )],
+            state: Box::new(HeapBackend::new()),
+            key_groups: 128,
+            metrics: TaskMetrics::register(&reg, "src", 0),
+            stop: Arc::new(AtomicBool::new(false)),
+            restore: TaskRestore::default(),
+            flush_interval: Duration::from_millis(5),
+            control: ctl(),
+            stall_ns: None,
+            chain: vec![member],
+            chain_stride: 7,
+        };
+        let h = std::thread::spawn(move || harness.run().unwrap());
+        let got = collect_until_eos(&down_rx[0]);
+        h.join().unwrap();
+        assert_eq!(got.len(), 100);
+        assert!(got
+            .iter()
+            .all(|r| matches!(r, Record::Pair { value: 3, .. })));
+        assert_eq!(map_metrics.records_in.get(), 100);
+        assert_eq!(map_metrics.records_out.get(), 100);
     }
 }

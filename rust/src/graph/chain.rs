@@ -1,0 +1,218 @@
+//! Chain formation: fuse one-to-one edges of the physical plan into single
+//! tasks (Flink's operator chaining).
+//!
+//! An edge `u → v` fuses when all of:
+//!
+//! * chaining is enabled (`engine.chaining`);
+//! * `v` is `chainable` (the per-operator escape hatch) and has exactly one
+//!   input;
+//! * `u` has exactly one downstream edge (no fan-out out of a chain
+//!   interior);
+//! * the edge is `Partitioning::Forward`, or `Partitioning::Rebalance` with
+//!   equal parallelism on both ends (which the planner promotes to Forward —
+//!   a round-robin between equal-parallelism task sets is one-to-one in
+//!   expectation, and fusing it preserves per-subtask record routing exactly
+//!   because subtask *i* feeds subtask *i*);
+//! * `parallelism[u] == parallelism[v]` (a Forward edge between unequal
+//!   parallelisms falls back to a real exchange).
+//!
+//! Because fusion requires a single input on `v` and a single output on `u`,
+//! every chain is a linear path; the first member is the *head* (it keeps the
+//! task's input channel, or the source loop) and the last is the *tail* (it
+//! owns the outgoing exchange edges). Key-group ranges, state backends, and
+//! metrics stay per *logical* operator — the chain only removes the exchange
+//! hop between members.
+
+use super::{LogicalGraph, OpId, Partitioning};
+use std::collections::BTreeMap;
+
+/// The result of the chain-formation pass over one physical plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChainLayout {
+    /// Chains in topological order of their heads; each chain lists its
+    /// member op ids head-first. Unchained operators appear as singleton
+    /// chains, so `chains` covers every operator exactly once.
+    pub chains: Vec<Vec<OpId>>,
+    /// Index into `chains` per op id.
+    pub chain_of: Vec<usize>,
+}
+
+impl ChainLayout {
+    /// Members of the chain containing `op`, head-first.
+    pub fn chain_containing(&self, op: OpId) -> &[OpId] {
+        &self.chains[self.chain_of[op]]
+    }
+
+    /// The head op id of the chain containing `op`.
+    pub fn head_of(&self, op: OpId) -> OpId {
+        self.chains[self.chain_of[op]][0]
+    }
+
+    /// Is `op` the head of its chain?
+    pub fn is_head(&self, op: OpId) -> bool {
+        self.head_of(op) == op
+    }
+}
+
+/// Run chain formation over `graph` at the given per-op-id `parallelism`
+/// (indexed like [`super::PhysicalPlan::parallelism`]). With `enabled =
+/// false` every operator is its own singleton chain.
+pub fn plan_chains(graph: &LogicalGraph, parallelism: &[u32], enabled: bool) -> ChainLayout {
+    let n = graph.ops.len();
+    // head[v] = head op id of the chain v belongs to (union toward the head).
+    let mut head: Vec<OpId> = (0..n).collect();
+    if enabled {
+        for v in graph.topo_order() {
+            let op = graph.op(v);
+            if !op.chainable || op.inputs.len() != 1 {
+                continue;
+            }
+            let (u, part) = &op.inputs[0];
+            match part {
+                Partitioning::Forward | Partitioning::Rebalance => {}
+                Partitioning::Hash(_) | Partitioning::Broadcast => continue,
+            }
+            if graph.downstream(*u).len() != 1 {
+                continue;
+            }
+            if parallelism[*u] != parallelism[v] {
+                continue;
+            }
+            head[v] = head[*u];
+        }
+    }
+    let mut chains: Vec<Vec<OpId>> = Vec::new();
+    let mut chain_idx: BTreeMap<OpId, usize> = BTreeMap::new();
+    let mut chain_of = vec![0usize; n];
+    for v in graph.topo_order() {
+        let idx = *chain_idx.entry(head[v]).or_insert_with(|| {
+            chains.push(Vec::new());
+            chains.len() - 1
+        });
+        chains[idx].push(v);
+        chain_of[v] = idx;
+    }
+    ChainLayout { chains, chain_of }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, Record};
+    use std::sync::Arc;
+
+    fn linear(parallelism: &[u32], edge: fn() -> Partitioning) -> LogicalGraph {
+        let mut g = LogicalGraph::new("t");
+        let src = g.add_op("src", OpKind::Source, false, vec![], parallelism[0]);
+        let map = g.add_op(
+            "map",
+            OpKind::Transform,
+            false,
+            vec![(src, edge())],
+            parallelism[1],
+        );
+        g.add_op(
+            "sink",
+            OpKind::Sink,
+            false,
+            vec![(map, edge())],
+            parallelism[2],
+        );
+        g
+    }
+
+    #[test]
+    fn equal_parallelism_rebalance_chain_fuses_fully() {
+        let g = linear(&[1, 1, 1], || Partitioning::Rebalance);
+        let layout = plan_chains(&g, &[1, 1, 1], true);
+        assert_eq!(layout.chains, vec![vec![0, 1, 2]]);
+        assert!(layout.is_head(0));
+        assert!(!layout.is_head(2));
+        assert_eq!(layout.head_of(2), 0);
+    }
+
+    #[test]
+    fn forward_edges_fuse_like_rebalance() {
+        let g = linear(&[2, 2, 2], || Partitioning::Forward);
+        let layout = plan_chains(&g, &[2, 2, 2], true);
+        assert_eq!(layout.chains, vec![vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn disabled_chaining_yields_singletons() {
+        let g = linear(&[1, 1, 1], || Partitioning::Rebalance);
+        let layout = plan_chains(&g, &[1, 1, 1], false);
+        assert_eq!(layout.chains, vec![vec![0], vec![1], vec![2]]);
+    }
+
+    #[test]
+    fn parallelism_mismatch_splits_the_chain() {
+        let g = linear(&[1, 2, 1], || Partitioning::Rebalance);
+        let layout = plan_chains(&g, &[1, 2, 1], true);
+        assert_eq!(layout.chains, vec![vec![0], vec![1], vec![2]]);
+        // Restoring equal parallelism re-fuses.
+        let layout = plan_chains(&g, &[2, 2, 2], true);
+        assert_eq!(layout.chains, vec![vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn hash_edges_never_fuse() {
+        let mut g = LogicalGraph::new("t");
+        let src = g.add_op("src", OpKind::Source, false, vec![], 1);
+        let agg = g.add_op(
+            "agg",
+            OpKind::Transform,
+            true,
+            vec![(src, Partitioning::Hash(Arc::new(|r: &Record| r.ts())))],
+            1,
+        );
+        g.add_op(
+            "sink",
+            OpKind::Sink,
+            false,
+            vec![(agg, Partitioning::Rebalance)],
+            1,
+        );
+        let layout = plan_chains(&g, &[1, 1, 1], true);
+        assert_eq!(layout.chains, vec![vec![0], vec![1, 2]]);
+    }
+
+    #[test]
+    fn chainable_escape_hatch_forces_a_chain_head() {
+        let mut g = linear(&[1, 1, 1], || Partitioning::Rebalance);
+        g.set_chainable(1, false);
+        let layout = plan_chains(&g, &[1, 1, 1], true);
+        // "map" starts its own task but "sink" still fuses onto it.
+        assert_eq!(layout.chains, vec![vec![0], vec![1, 2]]);
+    }
+
+    #[test]
+    fn fan_out_ends_the_chain_at_the_branch() {
+        let mut g = LogicalGraph::new("t");
+        let src = g.add_op("src", OpKind::Source, false, vec![], 1);
+        let map = g.add_op(
+            "map",
+            OpKind::Transform,
+            false,
+            vec![(src, Partitioning::Rebalance)],
+            1,
+        );
+        g.add_op(
+            "sink_a",
+            OpKind::Sink,
+            false,
+            vec![(map, Partitioning::Rebalance)],
+            1,
+        );
+        g.add_op(
+            "sink_b",
+            OpKind::Sink,
+            false,
+            vec![(map, Partitioning::Rebalance)],
+            1,
+        );
+        let layout = plan_chains(&g, &[1, 1, 1, 1], true);
+        // src→map fuses; map fans out, so both sinks stay unchained.
+        assert_eq!(layout.chains, vec![vec![0, 1], vec![2], vec![3]]);
+    }
+}

@@ -6,8 +6,10 @@
 //! by key group (hash of the key modulo a fixed number of groups, each task
 //! owning a contiguous group range — Flink's rescale unit).
 
+pub mod chain;
 pub mod plan;
 
+pub use chain::{plan_chains, ChainLayout};
 pub use plan::{OpScaling, PhysicalPlan, PhysicalTask, ScalingAssignment};
 
 use crate::util::hash::hash_u64;
@@ -82,6 +84,10 @@ pub enum Partitioning {
     Hash(KeyFn),
     /// Copy to every downstream task.
     Broadcast,
+    /// One-to-one: subtask i sends only to subtask i. Requires equal
+    /// parallelism on both ends; with chaining enabled the edge fuses into a
+    /// single task and the exchange disappears entirely.
+    Forward,
 }
 
 impl std::fmt::Debug for Partitioning {
@@ -90,6 +96,7 @@ impl std::fmt::Debug for Partitioning {
             Partitioning::Rebalance => write!(f, "Rebalance"),
             Partitioning::Hash(_) => write!(f, "Hash"),
             Partitioning::Broadcast => write!(f, "Broadcast"),
+            Partitioning::Forward => write!(f, "Forward"),
         }
     }
 }
@@ -117,6 +124,10 @@ pub struct LogicalOp {
     pub inputs: Vec<(OpId, Partitioning)>,
     /// Default parallelism at t = 0.
     pub initial_parallelism: u32,
+    /// May this operator be fused onto its upstream's chain? Defaults to
+    /// true; set false for operators that must start their own task (the
+    /// escape hatch for sources/windows that need a chain head).
+    pub chainable: bool,
 }
 
 /// A logical dataflow graph (the query).
@@ -153,8 +164,15 @@ impl LogicalGraph {
             stateful,
             inputs,
             initial_parallelism,
+            chainable: true,
         });
         id
+    }
+
+    /// Toggle the per-operator chaining escape hatch (see
+    /// [`LogicalOp::chainable`]).
+    pub fn set_chainable(&mut self, id: OpId, chainable: bool) {
+        self.ops[id].chainable = chainable;
     }
 
     pub fn op(&self, id: OpId) -> &LogicalOp {

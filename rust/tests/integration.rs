@@ -292,6 +292,160 @@ fn lsm_rescale_across_memory_levels_preserves_state_bytewise() {
     assert_eq!(survived, expected, "2→3→2 across levels must be lossless");
 }
 
+/// Acceptance for operator chaining: the scraper still emits one sample per
+/// *logical* operator, and the fused member's sampled busy-time attribution
+/// drives the same DS2 scaling decision as an unchained run of the same job.
+#[test]
+fn chained_attribution_drives_same_ds2_decision_as_unchained() {
+    use justin::engine::{MapOp, OpFactory, Scraper, SinkOp, Source, SourceBatch, StreamJob};
+    use justin::graph::{LogicalGraph, OpKind, Partitioning, Record};
+    use justin::metrics::window::OperatorWindow;
+    use justin::scaler::{GraphMeta, PolicyInput};
+    use std::collections::BTreeMap;
+
+    struct Burst {
+        left: u64,
+    }
+    impl Source for Burst {
+        fn poll(&mut self, max: usize) -> SourceBatch {
+            if self.left == 0 {
+                return SourceBatch::Exhausted;
+            }
+            let n = (max as u64).min(self.left).min(64);
+            self.left -= n;
+            SourceBatch::Records(
+                (0..n)
+                    .map(|i| Record::Pair {
+                        key: i,
+                        value: 1,
+                        ts: i,
+                    })
+                    .collect(),
+            )
+        }
+        fn watermark(&self) -> u64 {
+            0
+        }
+    }
+
+    let build_job = || {
+        let mut graph = LogicalGraph::new("parity");
+        let src = graph.add_op("source", OpKind::Source, false, vec![], 1);
+        let work = graph.add_op(
+            "work",
+            OpKind::Transform,
+            false,
+            vec![(src, Partitioning::Forward)],
+            1,
+        );
+        graph.add_op(
+            "sink",
+            OpKind::Sink,
+            false,
+            vec![(work, Partitioning::Forward)],
+            1,
+        );
+        StreamJob {
+            graph,
+            factories: vec![
+                OpFactory::source(|_, _| Box::new(Burst { left: 10_000 }) as _),
+                OpFactory::transform(|_, _| {
+                    Box::new(MapOp {
+                        f: |r: Record| {
+                            // Deterministic µs-scale work per record so the
+                            // busy-time attribution has real cost to price.
+                            let mut acc = 1u64;
+                            for i in 0..20_000u64 {
+                                acc = std::hint::black_box(acc.wrapping_mul(i | 1));
+                            }
+                            std::hint::black_box(acc);
+                            Some(r)
+                        },
+                    })
+                }),
+                OpFactory::transform(|_, _| Box::new(SinkOp)),
+            ],
+        }
+    };
+
+    // Run to completion; return work's true rate (records per busy second)
+    // from the scraped per-logical-operator sample.
+    let measure = |chaining: bool| -> f64 {
+        let mut cfg = engine_cfg();
+        cfg.engine.chaining = chaining;
+        cfg.engine.chain_sample_stride = 4;
+        let job = build_job();
+        let mut jm = JobManager::new(cfg);
+        let registry = Registry::new();
+        let assignment = ScalingAssignment::initial(&job.graph);
+        let mut scraper = Scraper::new(registry.clone());
+        let running = jm.deploy(&job, &assignment, &registry, None).unwrap();
+        let fused = running.deployed_chain("work").unwrap().join(",");
+        if chaining {
+            assert_eq!(fused, "source,work,sink", "forward edges must fuse");
+        } else {
+            assert_eq!(fused, "work");
+        }
+        let _ = running.wait_drained().unwrap();
+        let samples = scraper.sample();
+        let work = &samples["work"];
+        assert!(
+            work.true_rate > 0.0,
+            "work (chained={chaining}) must attribute busy time"
+        );
+        assert!(samples["sink"].observed_rate > 0.0);
+        work.true_rate
+    };
+
+    let tr_unchained = measure(false);
+    let tr_chained = measure(true);
+    // Attribution parity: the fused member's sampled busy time prices a
+    // record within ±15% of the dedicated-task measurement.
+    let ratio = tr_chained / tr_unchained;
+    assert!((0.85..1.2).contains(&ratio), "true-rate ratio {ratio}");
+
+    // Same DS2 decision from either run's measured rate. The synthetic
+    // demand is pinned mid-band (needed = 2.5 tasks → p = 3), so the
+    // decision only flips if attribution drifts past ±20%.
+    let scfg = ScalerConfig::default();
+    let demand = 2.5 * scfg.target_busy * tr_unchained;
+    let decide = |tr: f64| {
+        let job = build_job();
+        let meta = GraphMeta::from_graph(&job.graph);
+        let mk = |busyness: f64, true_rate: f64, output_rate: f64| OperatorWindow {
+            samples: 24,
+            busyness,
+            backpressure: 0.0,
+            observed_rate: output_rate,
+            true_rate,
+            output_rate,
+            cache_hit_rate: None,
+            access_latency_us: None,
+            stall_seconds: 0.0,
+            state_size_bytes: 0,
+        };
+        let mut windows = BTreeMap::new();
+        windows.insert("source".to_string(), mk(0.5, 2.0 * demand, demand));
+        windows.insert("work".to_string(), mk(0.9, tr, demand));
+        windows.insert("sink".to_string(), mk(0.01, 1e9, 0.0));
+        let current = ScalingAssignment::initial(&job.graph);
+        let mut ds2 = Ds2::new(scfg.clone());
+        ds2.decide(&PolicyInput {
+            meta: &meta,
+            windows: &windows,
+            current: &current,
+        })
+        .parallelism("work")
+    };
+    let p_unchained = decide(tr_unchained);
+    let p_chained = decide(tr_chained);
+    assert_eq!(p_unchained, 3, "demand pinned mid-band at p=3");
+    assert_eq!(
+        p_chained, p_unchained,
+        "chained attribution must drive the same DS2 decision"
+    );
+}
+
 /// Config round-trip: an experiment config file drives the sim.
 #[test]
 fn config_file_drives_simulation() {
