@@ -152,6 +152,9 @@ pub struct EngineConfig {
     /// Per-member busy-time attribution inside a chain measures 1 in
     /// `chain_sample_stride` records and scales up; 1 = measure everything.
     pub chain_sample_stride: usize,
+    /// Fault injection (`[engine.fault]`): kill live tasks to exercise the
+    /// checkpoint/recovery path.
+    pub fault: FaultConfig,
 }
 
 impl Default for EngineConfig {
@@ -164,6 +167,58 @@ impl Default for EngineConfig {
             use_xla: false,
             chaining: true,
             chain_sample_stride: 64,
+            fault: FaultConfig::default(),
+        }
+    }
+}
+
+/// Periodic checkpointing (`[checkpoint]`): the job manager injects a
+/// barrier at every source each `interval_s` and installs the aligned
+/// state export as a recovery epoch.
+#[derive(Debug, Clone)]
+pub struct CheckpointConfig {
+    /// Run the periodic checkpoint loop.
+    pub enabled: bool,
+    /// Barrier injection interval, seconds (wall clock on the live engine).
+    pub interval_s: f64,
+    /// Completed epochs to keep; older ones are pruned after each install.
+    pub retain: usize,
+}
+
+impl Default for CheckpointConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            interval_s: 30.0,
+            retain: 3,
+        }
+    }
+}
+
+/// Seeded fault injection (`[engine.fault]`): kill up to `kills` random
+/// live tasks at random points, `min_delay_ms..=max_delay_ms` apart.
+/// Recovery rolls the job back to the last completed checkpoint epoch.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    pub enabled: bool,
+    /// PRNG seed for victim selection and kill timing.
+    pub seed: u64,
+    /// Total task kills to inject over the run.
+    pub kills: u32,
+    /// Minimum delay before each kill, milliseconds.
+    pub min_delay_ms: u64,
+    /// Maximum delay before each kill, milliseconds.
+    pub max_delay_ms: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            seed: 0xDEAD,
+            kills: 3,
+            min_delay_ms: 20,
+            max_delay_ms: 200,
         }
     }
 }
@@ -249,6 +304,13 @@ pub struct SimConfig {
     /// In-place reconfiguration downtime (live cache resize, zero task
     /// restarts), seconds.
     pub reconfig_downtime_inplace_s: f64,
+    /// Mean time between injected task failures, virtual seconds
+    /// (exponential inter-arrivals; 0 disables failures).
+    pub failure_mtbf_s: f64,
+    /// Downtime charged per recovery: the affected region rolls back to
+    /// the last checkpoint and redeploys through the partial tier, so this
+    /// must not exceed `reconfig_downtime_partial_s`.
+    pub recovery_downtime_s: f64,
 }
 
 impl Default for SimConfig {
@@ -263,6 +325,8 @@ impl Default for SimConfig {
             reconfig_downtime_s: 10.0,
             reconfig_downtime_partial_s: 6.0,
             reconfig_downtime_inplace_s: 0.0,
+            failure_mtbf_s: 0.0,
+            recovery_downtime_s: 6.0,
         }
     }
 }
@@ -353,6 +417,7 @@ pub struct Config {
     pub engine: EngineConfig,
     pub lsm: LsmConfig,
     pub state: StateConfig,
+    pub checkpoint: CheckpointConfig,
     pub sim: SimConfig,
     pub scenario: ScenarioConfig,
 }
@@ -412,6 +477,14 @@ impl Config {
             "engine.use_xla",
             "engine.chaining",
             "engine.chain_sample_stride",
+            "engine.fault.enabled",
+            "engine.fault.seed",
+            "engine.fault.kills",
+            "engine.fault.min_delay_ms",
+            "engine.fault.max_delay_ms",
+            "checkpoint.enabled",
+            "checkpoint.interval_s",
+            "checkpoint.retain",
             "lsm.memtable_max_mb",
             "lsm.block_size_kb",
             "lsm.l0_compaction_trigger",
@@ -430,6 +503,8 @@ impl Config {
             "sim.reconfig_downtime_s",
             "sim.reconfig_downtime_partial_s",
             "sim.reconfig_downtime_inplace_s",
+            "sim.failure_mtbf_s",
+            "sim.recovery_downtime_s",
             "scenario.query",
             "scenario.pattern",
             "scenario.base",
@@ -526,6 +601,31 @@ impl Config {
             c.engine.chaining = v.as_bool().context("engine.chaining must be a bool")?;
         }
         get_num!(doc, "engine.chain_sample_stride", c.engine.chain_sample_stride, usize);
+        if let Some(v) = doc.get("engine.fault.enabled") {
+            c.engine.fault.enabled = v
+                .as_bool()
+                .context("engine.fault.enabled must be a bool")?;
+        }
+        get_num!(doc, "engine.fault.seed", c.engine.fault.seed, u64);
+        get_num!(doc, "engine.fault.kills", c.engine.fault.kills, u32);
+        get_num!(
+            doc,
+            "engine.fault.min_delay_ms",
+            c.engine.fault.min_delay_ms,
+            u64
+        );
+        get_num!(
+            doc,
+            "engine.fault.max_delay_ms",
+            c.engine.fault.max_delay_ms,
+            u64
+        );
+
+        if let Some(v) = doc.get("checkpoint.enabled") {
+            c.checkpoint.enabled = v.as_bool().context("checkpoint.enabled must be a bool")?;
+        }
+        get_f64!(doc, "checkpoint.interval_s", c.checkpoint.interval_s);
+        get_num!(doc, "checkpoint.retain", c.checkpoint.retain, usize);
 
         get_num!(doc, "lsm.memtable_max_mb", c.lsm.memtable_max_mb, u64);
         get_num!(doc, "lsm.block_size_kb", c.lsm.block_size_kb, u64);
@@ -573,6 +673,8 @@ impl Config {
             "sim.reconfig_downtime_inplace_s",
             c.sim.reconfig_downtime_inplace_s
         );
+        get_f64!(doc, "sim.failure_mtbf_s", c.sim.failure_mtbf_s);
+        get_f64!(doc, "sim.recovery_downtime_s", c.sim.recovery_downtime_s);
 
         if let Some(v) = doc.get("scenario.query") {
             c.scenario.query = v
@@ -680,6 +782,40 @@ impl Config {
                 self.sim.reconfig_downtime_inplace_s,
                 self.sim.reconfig_downtime_partial_s,
                 self.sim.reconfig_downtime_s
+            );
+        }
+        if !self.checkpoint.interval_s.is_finite() || self.checkpoint.interval_s <= 0.0 {
+            bail!(
+                "checkpoint.interval_s must be positive (got {})",
+                self.checkpoint.interval_s
+            );
+        }
+        if self.checkpoint.retain == 0 {
+            bail!("checkpoint.retain must be at least 1 (recovery needs an epoch to roll back to)");
+        }
+        if self.engine.fault.enabled && !self.checkpoint.enabled {
+            bail!("engine.fault.enabled requires checkpoint.enabled, or nothing can recover");
+        }
+        if self.engine.fault.max_delay_ms < self.engine.fault.min_delay_ms {
+            bail!(
+                "engine.fault.max_delay_ms ({}) must be >= min_delay_ms ({})",
+                self.engine.fault.max_delay_ms,
+                self.engine.fault.min_delay_ms
+            );
+        }
+        if self.sim.failure_mtbf_s < 0.0 {
+            bail!("sim.failure_mtbf_s must be >= 0 (0 disables failures)");
+        }
+        // Recovery is a checkpoint-rollback + partial redeploy of the
+        // affected region, so its modeled downtime is bounded by the
+        // partial tier's.
+        if self.sim.recovery_downtime_s < 0.0
+            || self.sim.recovery_downtime_s > self.sim.reconfig_downtime_partial_s
+        {
+            bail!(
+                "sim.recovery_downtime_s ({}) must be in [0, reconfig_downtime_partial_s ({})]",
+                self.sim.recovery_downtime_s,
+                self.sim.reconfig_downtime_partial_s
             );
         }
         Ok(())
@@ -856,6 +992,72 @@ mod tests {
 
         // Stride 0 would divide by zero in the attribution scale-up.
         let doc = super::super::parse_toml("[engine]\nchain_sample_stride = 0").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn checkpoint_and_fault_sections_parse_and_validate() {
+        let c = Config::default();
+        assert!(!c.checkpoint.enabled, "checkpointing is opt-in");
+        assert!((c.checkpoint.interval_s - 30.0).abs() < 1e-9);
+        assert_eq!(c.checkpoint.retain, 3);
+        assert!(!c.engine.fault.enabled, "fault injection is opt-in");
+
+        let doc = super::super::parse_toml(
+            "[checkpoint]\nenabled = true\ninterval_s = 2.5\nretain = 5\n\
+             [engine.fault]\nenabled = true\nseed = 42\nkills = 4\n\
+             min_delay_ms = 10\nmax_delay_ms = 50",
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert!(c.checkpoint.enabled);
+        assert!((c.checkpoint.interval_s - 2.5).abs() < 1e-9);
+        assert_eq!(c.checkpoint.retain, 5);
+        assert!(c.engine.fault.enabled);
+        assert_eq!(c.engine.fault.seed, 42);
+        assert_eq!(c.engine.fault.kills, 4);
+        assert_eq!(c.engine.fault.min_delay_ms, 10);
+        assert_eq!(c.engine.fault.max_delay_ms, 50);
+
+        // A zero interval would spin the checkpoint loop.
+        let doc = super::super::parse_toml(
+            "[checkpoint]\nenabled = true\ninterval_s = 0.0",
+        )
+        .unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+        // retain = 0 leaves recovery with nothing to roll back to.
+        let doc = super::super::parse_toml("[checkpoint]\nretain = 0").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+        // Faults without checkpoints cannot recover.
+        let doc = super::super::parse_toml("[engine.fault]\nenabled = true").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+        // Inverted kill-delay window.
+        let doc = super::super::parse_toml(
+            "[checkpoint]\nenabled = true\n[engine.fault]\nenabled = true\n\
+             min_delay_ms = 100\nmax_delay_ms = 10",
+        )
+        .unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn recovery_downtime_bounded_by_partial_tier() {
+        let c = Config::default();
+        assert!((c.sim.recovery_downtime_s - 6.0).abs() < 1e-9);
+        assert!((c.sim.failure_mtbf_s - 0.0).abs() < 1e-9, "failures off by default");
+
+        let doc = super::super::parse_toml(
+            "[sim]\nfailure_mtbf_s = 300.0\nrecovery_downtime_s = 4.0",
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert!((c.sim.failure_mtbf_s - 300.0).abs() < 1e-9);
+        assert!((c.sim.recovery_downtime_s - 4.0).abs() < 1e-9);
+
+        // Recovery redeploys through the partial tier — it cannot cost more.
+        let doc = super::super::parse_toml("[sim]\nrecovery_downtime_s = 8.0").unwrap();
+        assert!(Config::from_toml(&doc).is_err(), "recovery > partial rejected");
+        let doc = super::super::parse_toml("[sim]\nfailure_mtbf_s = -1.0").unwrap();
         assert!(Config::from_toml(&doc).is_err());
     }
 

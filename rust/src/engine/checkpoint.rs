@@ -1,0 +1,417 @@
+//! Periodic checkpointing: the coordinator that turns per-task barrier
+//! acknowledgements into installed [`Snapshot`] epochs, and the seeded
+//! fault injector that exercises the recovery path.
+//!
+//! The control flow is Flink's aligned checkpointing in miniature: the job
+//! manager injects `ControlMsg::Checkpoint(epoch)` at every source; sources
+//! capture their replay offset, broadcast a barrier through the exchange
+//! and ack; downstream tasks align barriers across their inputs
+//! ([`super::exchange::BarrierAligner`]), export their state through the
+//! `flush()`-quiesced LSM path exactly on the consistent cut, and ack.
+//! When every task of the epoch has acked, the coordinator assembles one
+//! [`Snapshot`] and installs it atomically into a [`SnapshotStore`] —
+//! recovery rolls the whole job back to `latest()` and replays sources
+//! from the checkpointed offsets.
+
+use super::savepoint::{
+    InMemorySnapshotStore, OperatorState, Savepoint, Snapshot, SnapshotStore,
+};
+use crate::config::FaultConfig;
+use crate::metrics::{names, Histo, MetricId, Registry};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One task's acknowledgement of a checkpoint barrier. Sources ack when
+/// they inject the barrier; transforms ack when alignment completes (or
+/// aborts). Chained tasks carry one export per fused member.
+#[derive(Debug)]
+pub struct CheckpointAck {
+    pub epoch: u64,
+    /// Head operator of the acking task.
+    pub op_name: String,
+    pub subtask: u32,
+    /// Logical operator name → state exported on the cut (head first, then
+    /// chained members).
+    pub exports: Vec<(String, OperatorState)>,
+    /// Source tasks: the replay offset (records emitted) captured when the
+    /// barrier was injected.
+    pub source_offset: Option<u64>,
+    /// The task could not align this epoch (a reconfiguration rewired its
+    /// inputs mid-alignment); the coordinator must discard the epoch.
+    pub aborted: bool,
+}
+
+struct PendingEpoch {
+    epoch: u64,
+    needed: usize,
+    acked: usize,
+    state: Savepoint,
+    /// source op → subtask → offset.
+    offsets: BTreeMap<String, BTreeMap<u32, u64>>,
+    started: Instant,
+}
+
+/// Collects [`CheckpointAck`]s per epoch and installs completed epochs
+/// atomically: a [`Snapshot`] becomes visible in the store only once every
+/// task of its epoch has acked.
+pub struct CheckpointCoordinator {
+    job: String,
+    store: Box<dyn SnapshotStore>,
+    retain: usize,
+    pending: Option<PendingEpoch>,
+    completed: u64,
+    discarded: u64,
+    duration_ns: Arc<Histo>,
+    size_bytes: Arc<Histo>,
+}
+
+impl CheckpointCoordinator {
+    pub fn new(job: impl Into<String>, retain: usize, registry: &Registry) -> Self {
+        let job = job.into();
+        Self {
+            duration_ns: registry.histo(
+                MetricId::new(names::CHECKPOINT_DURATION_NS).with("job", &job),
+            ),
+            size_bytes: registry.histo(
+                MetricId::new(names::CHECKPOINT_SIZE_BYTES).with("job", &job),
+            ),
+            job,
+            store: Box::new(InMemorySnapshotStore::default()),
+            retain: retain.max(1),
+            pending: None,
+            completed: 0,
+            discarded: 0,
+        }
+    }
+
+    /// Start collecting epoch `epoch`, expecting `needed` acks. An earlier
+    /// epoch still in flight is discarded — it can no longer complete once
+    /// its barriers are superseded downstream.
+    pub fn begin(&mut self, epoch: u64, needed: usize) {
+        if self.pending.take().is_some() {
+            self.discarded += 1;
+        }
+        self.pending = Some(PendingEpoch {
+            epoch,
+            needed,
+            acked: 0,
+            state: Savepoint::default(),
+            offsets: BTreeMap::new(),
+            started: Instant::now(),
+        });
+    }
+
+    /// Feed one ack. Returns `Some(epoch)` when this ack completed the
+    /// epoch and the snapshot was installed.
+    pub fn on_ack(&mut self, ack: CheckpointAck) -> Option<u64> {
+        let pending = self.pending.as_mut()?;
+        if ack.epoch != pending.epoch {
+            return None; // stale ack from a discarded epoch
+        }
+        if ack.aborted {
+            self.pending = None;
+            self.discarded += 1;
+            return None;
+        }
+        if let Some(offset) = ack.source_offset {
+            pending
+                .offsets
+                .entry(ack.op_name.clone())
+                .or_default()
+                .insert(ack.subtask, offset);
+        }
+        for (op, export) in ack.exports {
+            pending.state.merge_task_export(&op, export);
+        }
+        pending.acked += 1;
+        if pending.acked < pending.needed {
+            return None;
+        }
+        // Complete: install atomically, then prune.
+        let done = self.pending.take().unwrap();
+        let mut snapshot = Snapshot::checkpoint(&self.job, done.epoch, done.state);
+        for (op, by_subtask) in done.offsets {
+            // BTreeMap iteration is subtask-ascending, matching deploy order.
+            snapshot
+                .source_offsets
+                .insert(op, by_subtask.into_values().collect());
+        }
+        self.duration_ns
+            .record(done.started.elapsed().as_nanos() as u64);
+        self.size_bytes.record(snapshot.state.size_bytes());
+        self.store.put(snapshot);
+        self.store.prune(self.retain);
+        self.completed += 1;
+        Some(done.epoch)
+    }
+
+    /// The epoch currently being collected, if any.
+    pub fn in_flight(&self) -> Option<u64> {
+        self.pending.as_ref().map(|p| p.epoch)
+    }
+
+    /// Most recent installed snapshot (what recovery rolls back to).
+    pub fn latest(&self) -> Option<&Snapshot> {
+        self.store.latest()
+    }
+
+    pub fn get(&self, epoch: u64) -> Option<&Snapshot> {
+        self.store.get(epoch)
+    }
+
+    pub fn installed_epochs(&self) -> Vec<u64> {
+        self.store.epochs()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    pub fn discarded(&self) -> u64 {
+        self.discarded
+    }
+}
+
+/// Seeded schedule of injected task kills: up to `kills` victims, each
+/// after a uniform `min_delay_ms..=max_delay_ms` pause, victim chosen
+/// uniformly among live tasks. Fully deterministic for a given seed and
+/// live-task sequence.
+pub struct FaultInjector {
+    rng: Rng,
+    remaining: u32,
+    min_delay_ms: u64,
+    max_delay_ms: u64,
+    next_at: Option<Instant>,
+}
+
+impl FaultInjector {
+    pub fn new(seed: u64, kills: u32, min_delay_ms: u64, max_delay_ms: u64) -> Self {
+        let mut inj = Self {
+            rng: Rng::new(seed),
+            remaining: kills,
+            min_delay_ms,
+            max_delay_ms: max_delay_ms.max(min_delay_ms),
+            next_at: None,
+        };
+        inj.arm();
+        inj
+    }
+
+    /// Build from the `[engine.fault]` section; `None` when disabled.
+    pub fn from_config(cfg: &FaultConfig) -> Option<Self> {
+        cfg.enabled
+            .then(|| Self::new(cfg.seed, cfg.kills, cfg.min_delay_ms, cfg.max_delay_ms))
+    }
+
+    /// Schedule the next kill relative to now (no-op once exhausted).
+    fn arm(&mut self) {
+        if self.remaining == 0 {
+            self.next_at = None;
+            return;
+        }
+        let delay = self
+            .rng
+            .range(self.min_delay_ms, self.max_delay_ms + 1);
+        self.next_at = Some(Instant::now() + Duration::from_millis(delay));
+    }
+
+    /// If a kill is due, consume it and return the victim's index among
+    /// `live` current tasks (the next kill re-arms from now).
+    pub fn fire(&mut self, live: usize) -> Option<usize> {
+        if live == 0 {
+            return None;
+        }
+        let at = self.next_at?;
+        if Instant::now() < at {
+            return None;
+        }
+        self.remaining -= 1;
+        let victim = self.rng.gen_range(live as u64) as usize;
+        self.arm();
+        Some(victim)
+    }
+
+    /// Kills left to inject.
+    pub fn remaining(&self) -> u32 {
+        self.remaining
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.remaining == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::key_to_group;
+    use crate::state::state_key;
+
+    fn export_for_keys(keys: &[u64]) -> OperatorState {
+        let mut st = OperatorState::default();
+        for &k in keys {
+            let group = key_to_group(k, 128);
+            st.keyed
+                .entry(group)
+                .or_default()
+                .push((state_key(group, &k.to_be_bytes()), vec![k as u8]));
+        }
+        st
+    }
+
+    fn ack(epoch: u64, op: &str, subtask: u32, keys: &[u64]) -> CheckpointAck {
+        CheckpointAck {
+            epoch,
+            op_name: op.to_string(),
+            subtask,
+            exports: vec![(op.to_string(), export_for_keys(keys))],
+            source_offset: None,
+            aborted: false,
+        }
+    }
+
+    fn coordinator(retain: usize) -> CheckpointCoordinator {
+        CheckpointCoordinator::new("job", retain, &Registry::new())
+    }
+
+    #[test]
+    fn epoch_installs_only_when_all_tasks_acked() {
+        let mut c = coordinator(3);
+        c.begin(1, 3);
+        assert_eq!(c.in_flight(), Some(1));
+        assert_eq!(c.on_ack(ack(1, "count", 0, &[1, 2])), None);
+        assert!(c.latest().is_none(), "partial epoch must not be visible");
+        assert_eq!(c.on_ack(ack(1, "count", 1, &[3])), None);
+        let mut src = ack(1, "source", 0, &[]);
+        src.source_offset = Some(500);
+        assert_eq!(c.on_ack(src), Some(1));
+        let snap = c.latest().unwrap();
+        assert_eq!(snap.epoch(), 1);
+        assert_eq!(snap.open("job").unwrap().total_entries(), 3);
+        assert_eq!(snap.source_offsets["source"], vec![500]);
+        assert_eq!(c.completed(), 1);
+        assert_eq!(c.in_flight(), None);
+    }
+
+    #[test]
+    fn source_offsets_order_by_subtask() {
+        let mut c = coordinator(3);
+        c.begin(4, 2);
+        let mut s1 = ack(4, "source", 1, &[]);
+        s1.source_offset = Some(20);
+        let mut s0 = ack(4, "source", 0, &[]);
+        s0.source_offset = Some(10);
+        c.on_ack(s1); // subtask 1 acks first
+        assert_eq!(c.on_ack(s0), Some(4));
+        assert_eq!(c.latest().unwrap().source_offsets["source"], vec![10, 20]);
+    }
+
+    #[test]
+    fn aborted_ack_discards_epoch() {
+        let mut c = coordinator(3);
+        c.begin(1, 2);
+        c.on_ack(ack(1, "count", 0, &[1]));
+        let mut aborted = ack(1, "count", 1, &[]);
+        aborted.aborted = true;
+        assert_eq!(c.on_ack(aborted), None);
+        assert_eq!(c.discarded(), 1);
+        assert!(c.latest().is_none());
+        // The next epoch proceeds normally.
+        c.begin(2, 1);
+        assert_eq!(c.on_ack(ack(2, "count", 0, &[7])), Some(2));
+        assert_eq!(c.latest().unwrap().epoch(), 2);
+    }
+
+    #[test]
+    fn stale_and_superseding_epochs() {
+        let mut c = coordinator(3);
+        c.begin(1, 2);
+        c.on_ack(ack(1, "count", 0, &[1]));
+        // Epoch 2 begins before 1 completed: 1 is discarded.
+        c.begin(2, 2);
+        assert_eq!(c.discarded(), 1);
+        // A late ack for epoch 1 is ignored, not counted toward epoch 2.
+        assert_eq!(c.on_ack(ack(1, "count", 1, &[2])), None);
+        c.on_ack(ack(2, "count", 0, &[3]));
+        assert_eq!(c.on_ack(ack(2, "count", 1, &[4])), Some(2));
+        assert_eq!(
+            c.latest().unwrap().open("job").unwrap().total_entries(),
+            2,
+            "epoch 2 must only contain epoch-2 exports"
+        );
+    }
+
+    #[test]
+    fn retain_prunes_old_epochs() {
+        let mut c = coordinator(2);
+        for epoch in 1..=4u64 {
+            c.begin(epoch, 1);
+            assert_eq!(c.on_ack(ack(epoch, "op", 0, &[epoch])), Some(epoch));
+        }
+        assert_eq!(c.installed_epochs(), vec![3, 4]);
+        assert_eq!(c.latest().unwrap().epoch(), 4);
+        assert_eq!(c.completed(), 4);
+    }
+
+    #[test]
+    fn checkpoint_metrics_recorded() {
+        let reg = Registry::new();
+        let mut c = CheckpointCoordinator::new("job", 3, &reg);
+        c.begin(1, 1);
+        c.on_ack(ack(1, "op", 0, &[1, 2, 3]));
+        let snap = reg.snapshot();
+        let histo = |name: &str| {
+            snap.iter()
+                .find(|(id, _)| id.name == name)
+                .map(|(_, s)| match s {
+                    crate::metrics::Sample::Histo { count, .. } => *count,
+                    _ => 0,
+                })
+                .unwrap_or(0)
+        };
+        assert_eq!(histo(names::CHECKPOINT_DURATION_NS), 1);
+        assert_eq!(histo(names::CHECKPOINT_SIZE_BYTES), 1);
+    }
+
+    #[test]
+    fn fault_injector_is_deterministic_and_bounded() {
+        let fire_all = |seed: u64| -> Vec<usize> {
+            let mut inj = FaultInjector::new(seed, 3, 0, 0);
+            let mut victims = Vec::new();
+            while !inj.exhausted() {
+                if let Some(v) = inj.fire(5) {
+                    victims.push(v);
+                }
+            }
+            victims
+        };
+        let a = fire_all(42);
+        let b = fire_all(42);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|&v| v < 5));
+        // Exhausted injectors never fire again.
+        let mut inj = FaultInjector::new(42, 0, 0, 0);
+        assert!(inj.exhausted());
+        assert_eq!(inj.fire(5), None);
+    }
+
+    #[test]
+    fn fault_injector_respects_delay_window() {
+        let mut inj = FaultInjector::new(7, 1, 40, 60);
+        assert_eq!(inj.fire(3), None, "not due immediately");
+        std::thread::sleep(Duration::from_millis(80));
+        assert!(inj.fire(3).is_some(), "due after the max delay");
+    }
+
+    #[test]
+    fn from_config_gates_on_enabled() {
+        let mut cfg = FaultConfig::default();
+        assert!(FaultInjector::from_config(&cfg).is_none());
+        cfg.enabled = true;
+        let inj = FaultInjector::from_config(&cfg).unwrap();
+        assert_eq!(inj.remaining(), cfg.kills);
+    }
+}

@@ -10,15 +10,15 @@
 //! stop-with-savepoint fallback — so memory-level-only reconfigurations
 //! cost orders of magnitude less downtime than restarts.
 
+use super::checkpoint::{CheckpointCoordinator, FaultInjector};
 use super::job::{JobManager, RunningJob, StreamJob};
+use super::savepoint::{Savepoint, Snapshot};
 use super::scrape::Scraper;
 use crate::graph::ScalingAssignment;
 use crate::metrics::window::WindowAggregator;
-use crate::metrics::{names, Registry};
-use crate::scaler::{
-    plan_reconfig, should_trigger, GraphMeta, Policy, PolicyInput, ReconfigTier,
-};
-use anyhow::Result;
+use crate::metrics::{names, MetricId, Registry};
+use crate::scaler::{plan_reconfig, GraphMeta, Policy, PolicyInput, ReconfigTier};
+use anyhow::{anyhow, Result};
 use std::time::{Duration, Instant};
 
 /// Downtime breakdown of one reconfiguration: draining + exporting the old
@@ -73,7 +73,7 @@ pub fn autoscale_live(
     primary_op: &str,
     duration: Duration,
     time_scale: f64,
-    initial_savepoint: Option<&super::savepoint::Savepoint>,
+    initial_savepoint: Option<&Savepoint>,
 ) -> Result<LiveReport> {
     let meta = GraphMeta::from_graph(&job.graph);
     let cfg = jm.config.clone();
@@ -110,12 +110,9 @@ pub fn autoscale_live(
         }
         if aggregator.sample_count(primary_op) >= window_samples {
             let windows = aggregator.close();
-            if should_trigger(&meta, &windows, &assignment, &cfg.scaler) {
-                let next = policy.decide(&PolicyInput {
-                    meta: &meta,
-                    windows: &windows,
-                    current: &assignment,
-                });
+            let input = PolicyInput::new(&meta, &windows, &assignment);
+            if policy.should_trigger(&input, &cfg.scaler) {
+                let next = policy.decide(&input);
                 if next != assignment {
                     let t0 = Instant::now();
                     let rplan = plan_reconfig(&meta, &assignment, &next);
@@ -165,15 +162,24 @@ pub fn autoscale_live(
                             )
                         }
                         ReconfigTier::Full => {
-                            let savepoint = running.stop_with_savepoint()?;
+                            // The exported state rides through the same
+                            // versioned Snapshot envelope as checkpoints, so
+                            // a mismatched format or job fails loudly here
+                            // instead of restoring garbage.
+                            let snapshot = Snapshot::savepoint(
+                                &job.graph.name,
+                                reconfigs.len() as u64 + 1,
+                                running.stop_with_savepoint()?,
+                            );
                             let t_save = t0.elapsed();
-                            let entries = savepoint.total_entries();
+                            let restored = snapshot.open(&job.graph.name)?;
+                            let entries = restored.total_entries();
                             // Same registry across the epoch: counters are
                             // get-or-create, so totals stay cumulative over
                             // the whole run; only dead-subtask state gauges
                             // are pruned.
                             prune_stale_gauges(&registry, &next);
-                            running = jm.deploy(job, &next, &registry, Some(&savepoint))?;
+                            running = jm.deploy(job, &next, &registry, Some(restored))?;
                             (
                                 entries,
                                 DowntimeBreakdown {
@@ -224,6 +230,132 @@ fn prune_stale_gauges(registry: &Registry, next: &ScalingAssignment) {
                 _ => true,
             }
     });
+}
+
+/// One task failure (injected or organic) and its automatic recovery.
+#[derive(Debug, Clone)]
+pub struct RecoveryEvent {
+    /// When the failure was detected, relative to the supervised run start.
+    pub at: Duration,
+    /// First failure message reaped (for injected faults:
+    /// `injected fault at <op>/<subtask>`).
+    pub failure: String,
+    /// Checkpoint epoch the job was rolled back to.
+    pub restored_epoch: u64,
+    /// Detection → redeployed-from-snapshot, wall clock.
+    pub downtime: Duration,
+}
+
+/// Outcome of [`run_supervised`].
+pub struct SupervisedReport {
+    pub checkpoints_completed: u64,
+    pub checkpoints_discarded: u64,
+    /// Crash injections actually delivered to a live task.
+    pub kills: u32,
+    pub recoveries: Vec<RecoveryEvent>,
+    /// State assembled from the clean EOS drain at the end of the run. For
+    /// a deterministic job this is byte-identical to a crash-free run.
+    pub final_state: Savepoint,
+}
+
+/// Drive a bounded `job` to completion under the periodic checkpoint loop,
+/// with seeded fault injection (`[engine.fault]`) and automatic recovery.
+///
+/// The loop is the job-manager half of the checkpoint/recovery protocol:
+///
+/// 1. every `checkpoint.interval_s`, inject `Checkpoint(epoch)` at all
+///    source tasks and open the epoch in the [`CheckpointCoordinator`];
+/// 2. drain task acks into the coordinator, which installs the epoch's
+///    [`Snapshot`] atomically once every task has acked;
+/// 3. let the [`FaultInjector`] kill a random live task on its seeded
+///    schedule;
+/// 4. on any task failure, tear the incarnation down
+///    ([`RunningJob::abandon`]), roll back to `coordinator.latest()`, and
+///    redeploy with sources fast-forwarded to the checkpointed offsets —
+///    the replayed stream is byte-identical to what the dead incarnation
+///    produced after its last barrier.
+///
+/// Fails if a task dies before the first checkpoint completes (nothing to
+/// roll back to — raise `fault.min_delay_ms` or shrink
+/// `checkpoint.interval_s`).
+pub fn run_supervised(
+    jm: &mut JobManager,
+    job: &StreamJob,
+    assignment: &ScalingAssignment,
+    registry: &Registry,
+) -> Result<SupervisedReport> {
+    let cfg = jm.config.clone();
+    let ckpt = cfg.checkpoint.clone();
+    let interval = Duration::from_secs_f64(ckpt.interval_s);
+    let mut coordinator =
+        CheckpointCoordinator::new(&job.graph.name, ckpt.retain, registry);
+    let mut injector = FaultInjector::from_config(&cfg.engine.fault);
+    let recovery_ns = registry.histo(
+        MetricId::new(names::RECOVERY_DURATION_NS).with("job", &job.graph.name),
+    );
+    let mut running = jm.deploy(job, assignment, registry, None)?;
+    let start = Instant::now();
+    let mut next_epoch = 1u64;
+    let mut checkpoint_due = ckpt.enabled.then(|| Instant::now() + interval);
+    let mut kills = 0u32;
+    let mut recoveries = Vec::new();
+    loop {
+        if checkpoint_due.is_some_and(|due| Instant::now() >= due) {
+            let needed = running.trigger_checkpoint(next_epoch);
+            if needed > 0 {
+                coordinator.begin(next_epoch, needed);
+                next_epoch += 1;
+            }
+            checkpoint_due = Some(Instant::now() + interval);
+        }
+        for ack in running.poll_acks() {
+            coordinator.on_ack(ack);
+        }
+        if let Some(inj) = injector.as_mut() {
+            if let Some(victim) = inj.fire(running.live_tasks()) {
+                if running.inject_crash(victim).is_some() {
+                    kills += 1;
+                }
+            }
+        }
+        if let Some(failure) = running.check_failure() {
+            let t0 = Instant::now();
+            running.abandon();
+            let snapshot = coordinator.latest().ok_or_else(|| {
+                anyhow!("task failed ({failure}) before any checkpoint completed")
+            })?;
+            let restored_epoch = snapshot.epoch();
+            running = jm.deploy_from_snapshot(job, assignment, registry, snapshot)?;
+            let downtime = t0.elapsed();
+            recovery_ns.record(downtime.as_nanos() as u64);
+            recoveries.push(RecoveryEvent {
+                at: start.elapsed(),
+                failure,
+                restored_epoch,
+                downtime,
+            });
+            // The in-flight epoch (if any) died with the old incarnation;
+            // give the recovered one a full interval before the next barrier.
+            checkpoint_due = ckpt.enabled.then(|| Instant::now() + interval);
+            continue;
+        }
+        if !running.is_running() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // Catch acks that raced the EOS drain so the counters are accurate.
+    for ack in running.poll_acks() {
+        coordinator.on_ack(ack);
+    }
+    let final_state = running.wait_drained()?;
+    Ok(SupervisedReport {
+        checkpoints_completed: coordinator.completed(),
+        checkpoints_discarded: coordinator.discarded(),
+        kills,
+        recoveries,
+        final_state,
+    })
 }
 
 #[cfg(test)]
@@ -369,15 +501,12 @@ mod tests {
             theta < cfg.scaler.cache_hit_threshold,
             "working set 240 MB vs 94 MB cache must miss: θ = {theta}"
         );
+        let input = PolicyInput::new(&meta, &windows, &assignment);
         assert!(
-            should_trigger(&meta, &windows, &assignment, &cfg.scaler),
+            policy.should_trigger(&input, &cfg.scaler),
             "saturated stateful op must trigger: {kv:?}"
         );
-        let next = policy.decide(&PolicyInput {
-            meta: &meta,
-            windows: &windows,
-            current: &assignment,
-        });
+        let next = policy.decide(&input);
         // Justin's signature: parallelism unchanged, memory level bumped.
         assert_eq!(
             next.parallelism("kvstore"),

@@ -19,6 +19,10 @@ pub enum Envelope {
     Batch { port: usize, records: Vec<Record> },
     /// Event-time watermark from one upstream task.
     Watermark { port: usize, ts: u64 },
+    /// Checkpoint barrier for epoch `epoch` (Chandy–Lamport alignment): all
+    /// records before it belong to the epoch's consistent cut, all records
+    /// after it do not.
+    Barrier { port: usize, epoch: u64 },
     /// The upstream task has finished (drain for reconfiguration/shutdown).
     Eos,
 }
@@ -183,6 +187,33 @@ impl OutputPartition {
         blocked
     }
 
+    /// Broadcast a checkpoint barrier to all downstream subtasks. Pending
+    /// data buffers are flushed first, so every record emitted before the
+    /// barrier reaches the consumer before it — the consistent-cut
+    /// invariant barriers exist to provide.
+    pub fn send_barrier(&mut self, my_channel_id: u32, epoch: u64) -> u64 {
+        let mut blocked = self.flush(my_channel_id);
+        for dest in 0..self.senders.len() {
+            let msg = (
+                my_channel_id,
+                Envelope::Barrier {
+                    port: self.port,
+                    epoch,
+                },
+            );
+            match self.senders[dest].try_send(msg) {
+                Ok(()) => {}
+                Err(TrySendError::Full(msg)) => {
+                    let start = Instant::now();
+                    let _ = self.senders[dest].send(msg);
+                    blocked += start.elapsed().as_nanos() as u64;
+                }
+                Err(TrySendError::Disconnected(_)) => {}
+            }
+        }
+        blocked
+    }
+
     /// Send EOS to all downstream subtasks (flushes first).
     pub fn send_eos(&mut self, my_channel_id: u32) {
         self.flush(my_channel_id);
@@ -296,8 +327,140 @@ impl InputTracker {
         self.eos_seen.len() >= self.expected_channels
     }
 
+    /// Number of live input channels currently expected.
+    pub fn expected(&self) -> usize {
+        self.expected_channels
+    }
+
     pub fn current_watermark(&self) -> u64 {
         self.emitted_watermark
+    }
+}
+
+/// What [`BarrierAligner::on_barrier`] decided about one incoming barrier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BarrierEvent {
+    /// The barrier joined an in-flight alignment; hold further envelopes
+    /// from its channel until the alignment completes.
+    Hold,
+    /// Every live input channel has delivered this epoch's barrier: the
+    /// task sits exactly on the consistent cut — snapshot now.
+    Complete(u64),
+    /// Stale barrier (retired channel or superseded epoch): drop it.
+    Ignore,
+}
+
+/// Aligns checkpoint barriers across a task's input channels
+/// (Chandy–Lamport). Once a channel delivers the epoch's barrier, all its
+/// subsequent envelopes must be *held* (not processed) until every other
+/// live channel catches up — otherwise post-barrier records would leak into
+/// the epoch's snapshot. EOS counts as a barrier-equivalent for the rest of
+/// the stream: a finished channel can never deliver a barrier, so it must
+/// not block alignment. The EOS set is sticky across epochs.
+#[derive(Debug, Default)]
+pub struct BarrierAligner {
+    /// The epoch currently aligning, if any.
+    epoch: Option<u64>,
+    /// Channels whose barrier for `epoch` has arrived.
+    seen: std::collections::BTreeSet<u32>,
+    /// Channels that have delivered EOS (sticky — they never barrier again).
+    eos: std::collections::BTreeSet<u32>,
+    /// Channels retired by a partial redeploy (sticky, mirrors
+    /// [`InputTracker`]).
+    retired: std::collections::BTreeSet<u32>,
+    expected: usize,
+}
+
+impl BarrierAligner {
+    pub fn new(expected: usize) -> Self {
+        Self {
+            expected,
+            ..Default::default()
+        }
+    }
+
+    /// Is an alignment in flight?
+    pub fn aligning(&self) -> bool {
+        self.epoch.is_some()
+    }
+
+    /// The epoch currently aligning, if any.
+    pub fn epoch(&self) -> Option<u64> {
+        self.epoch
+    }
+
+    /// Must envelopes from `channel` be held back right now?
+    pub fn should_hold(&self, channel: u32) -> bool {
+        self.epoch.is_some() && self.seen.contains(&channel)
+    }
+
+    /// Abort the in-flight alignment (the epoch will never complete here).
+    /// Returns the aborted epoch, if any.
+    pub fn abort(&mut self) -> Option<u64> {
+        self.seen.clear();
+        self.epoch.take()
+    }
+
+    fn live_count(&self) -> usize {
+        // EOS'd channels count as already-aligned for every future epoch.
+        let eos_live = self.eos.iter().filter(|c| !self.retired.contains(c)).count();
+        self.seen.len() + eos_live
+    }
+
+    fn try_complete(&mut self) -> Option<u64> {
+        if self.epoch.is_some() && self.live_count() >= self.expected {
+            self.seen.clear();
+            self.epoch.take()
+        } else {
+            None
+        }
+    }
+
+    /// A barrier for `epoch` arrived on `channel`.
+    pub fn on_barrier(&mut self, channel: u32, epoch: u64) -> BarrierEvent {
+        if self.retired.contains(&channel) || self.eos.contains(&channel) {
+            return BarrierEvent::Ignore;
+        }
+        match self.epoch {
+            None => self.epoch = Some(epoch),
+            Some(current) if epoch > current => {
+                // A newer epoch supersedes a stuck one (its coordinator
+                // already gave up on `current`): restart alignment.
+                self.seen.clear();
+                self.epoch = Some(epoch);
+            }
+            Some(current) if epoch < current => return BarrierEvent::Ignore,
+            Some(_) => {}
+        }
+        self.seen.insert(channel);
+        match self.try_complete() {
+            Some(e) => BarrierEvent::Complete(e),
+            None => BarrierEvent::Hold,
+        }
+    }
+
+    /// A channel finished (EOS). If an alignment was only waiting on it,
+    /// the epoch completes — returns `Some(epoch)` in that case.
+    pub fn on_eos(&mut self, channel: u32) -> Option<u64> {
+        if self.retired.contains(&channel) {
+            return None;
+        }
+        self.eos.insert(channel);
+        self.seen.remove(&channel);
+        self.try_complete()
+    }
+
+    /// A partial redeploy rewired this input: old channels retire and the
+    /// live-channel count changes. Any in-flight alignment straddles the
+    /// old and new topology and cannot complete consistently — abort it.
+    /// Returns the aborted epoch, if any.
+    pub fn rewire(&mut self, retire: &[u32], expected: usize) -> Option<u64> {
+        for ch in retire {
+            self.retired.insert(*ch);
+            self.eos.remove(ch);
+        }
+        self.expected = expected;
+        self.abort()
     }
 }
 
@@ -546,6 +709,83 @@ mod tests {
         assert_eq!(t.on_watermark(10, 120), Some(120));
         assert!(!t.on_eos(9));
         assert!(t.on_eos(10), "both new channels done completes the input");
+    }
+
+    #[test]
+    fn barrier_aligner_holds_then_completes() {
+        let mut a = BarrierAligner::new(2);
+        assert!(!a.aligning());
+        assert_eq!(a.on_barrier(0, 1), BarrierEvent::Hold);
+        assert!(a.aligning());
+        assert!(a.should_hold(0), "barriered channel holds its envelopes");
+        assert!(!a.should_hold(1), "other channel still flows");
+        assert_eq!(a.on_barrier(1, 1), BarrierEvent::Complete(1));
+        assert!(!a.aligning());
+        assert!(!a.should_hold(0), "held envelopes release after completion");
+        // Next epoch aligns again from scratch.
+        assert_eq!(a.on_barrier(1, 2), BarrierEvent::Hold);
+        assert_eq!(a.on_barrier(0, 2), BarrierEvent::Complete(2));
+    }
+
+    #[test]
+    fn barrier_aligner_eos_is_barrier_equivalent_and_sticky() {
+        let mut a = BarrierAligner::new(2);
+        // ch1 finishes before any barrier: from now on epochs only need ch0.
+        assert_eq!(a.on_eos(1), None);
+        assert_eq!(a.on_barrier(0, 1), BarrierEvent::Complete(1));
+        assert_eq!(a.on_barrier(0, 2), BarrierEvent::Complete(2), "sticky");
+        // EOS *during* alignment completes the epoch it was blocking.
+        let mut b = BarrierAligner::new(2);
+        assert_eq!(b.on_barrier(0, 5), BarrierEvent::Hold);
+        assert_eq!(b.on_eos(1), Some(5));
+        // A barrier from an EOS'd channel is impossible traffic: ignored.
+        assert_eq!(b.on_barrier(1, 6), BarrierEvent::Ignore);
+    }
+
+    #[test]
+    fn barrier_aligner_rewire_aborts_inflight_epoch() {
+        let mut a = BarrierAligner::new(1);
+        assert_eq!(a.on_barrier(5, 3), BarrierEvent::Complete(3));
+        // Two inputs now; one barriers, then a partial redeploy replaces
+        // channel 5 with channels 9 and 10.
+        let mut b = BarrierAligner::new(2);
+        assert_eq!(b.on_barrier(5, 4), BarrierEvent::Hold);
+        assert_eq!(b.rewire(&[5], 2), Some(4), "in-flight epoch aborts");
+        assert!(!b.aligning());
+        // Stale traffic from the retired channel is ignored forever.
+        assert_eq!(b.on_barrier(5, 5), BarrierEvent::Ignore);
+        assert_eq!(b.on_eos(5), None);
+        // The new channels align the next epoch normally.
+        assert_eq!(b.on_barrier(9, 5), BarrierEvent::Hold);
+        assert_eq!(b.on_barrier(10, 5), BarrierEvent::Complete(5));
+    }
+
+    #[test]
+    fn barrier_aligner_newer_epoch_supersedes_stuck_one() {
+        let mut a = BarrierAligner::new(2);
+        assert_eq!(a.on_barrier(0, 1), BarrierEvent::Hold);
+        // Epoch 1 never completed (e.g. its trigger raced a reconfig); the
+        // coordinator moved on to epoch 2.
+        assert_eq!(a.on_barrier(1, 2), BarrierEvent::Hold);
+        assert_eq!(a.on_barrier(0, 1), BarrierEvent::Ignore, "stale epoch");
+        assert_eq!(a.on_barrier(0, 2), BarrierEvent::Complete(2));
+    }
+
+    #[test]
+    fn send_barrier_flushes_pending_data_first() {
+        let (senders, receivers) = build_edge_channels(1, 16);
+        let mut out = OutputPartition::new(senders, Partitioning::Rebalance, 0, 128, 8);
+        out.emit(3, kv(1)); // buffered, below batch size
+        out.send_barrier(3, 7);
+        // The pending record precedes the barrier on the wire.
+        match receivers[0].try_recv() {
+            Ok((3, Envelope::Batch { records, .. })) => assert_eq!(records.len(), 1),
+            other => panic!("expected data before barrier: {other:?}"),
+        }
+        match receivers[0].try_recv() {
+            Ok((3, Envelope::Barrier { epoch, .. })) => assert_eq!(epoch, 7),
+            other => panic!("expected barrier: {other:?}"),
+        }
     }
 
     #[test]

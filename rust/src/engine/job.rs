@@ -1,10 +1,11 @@
 //! The job manager: deploys a logical graph as task threads, wires channels,
 //! and performs stop-with-savepoint reconfiguration (rescaling).
 
+use super::checkpoint::CheckpointAck;
 use super::exchange::{build_edge_channels, InputTracker, OutputPartition, Tagged};
 use super::operators::{Operator, Source};
-use super::savepoint::{OperatorState, Savepoint, TaskRestore};
-use super::task::{ChainedOp, ControlMsg, TaskExport, TaskHarness, TaskKind, TaskMetrics};
+use super::savepoint::{OperatorState, Savepoint, Snapshot, TaskRestore};
+use super::task::{ChainedOp, ControlMsg, IdleBackoff, TaskExport, TaskHarness, TaskKind, TaskMetrics};
 use crate::config::Config;
 use crate::graph::{
     plan_chains, ChainLayout, LogicalGraph, LogicalOp, OpId, OpKind, PhysicalPlan,
@@ -118,6 +119,16 @@ pub struct RunningJob {
     chains: BTreeMap<String, Vec<String>>,
     /// Logical op name → its chain head's name.
     head_of: BTreeMap<String, String>,
+    /// Chain heads whose head operator is a source — checkpoint barriers are
+    /// injected there and flow through the exchanges.
+    source_heads: Vec<String>,
+    /// Checkpoint acknowledgements from every task.
+    ack_rx: Receiver<CheckpointAck>,
+    /// Cloned into tasks spawned after deploy (partial redeploys).
+    ack_tx: Sender<CheckpointAck>,
+    /// Exports of tasks reaped early by [`check_failure`](Self::check_failure)
+    /// after a clean exit, merged back into the final drain savepoint.
+    drained: Savepoint,
 }
 
 impl RunningJob {
@@ -131,22 +142,173 @@ impl RunningJob {
     /// Wait for the job to drain on its own (bounded sources) and assemble
     /// the savepoint. Never returns for unbounded sources — use
     /// [`stop_with_savepoint`](Self::stop_with_savepoint) for those.
+    ///
+    /// Tasks are reaped in *completion* order, not spawn order: the first
+    /// failure is reported as soon as its thread dies (signalling the rest
+    /// to stop) instead of after every earlier-spawned task has drained. A
+    /// panicking task re-raises its original payload here rather than
+    /// flattening it into an error string.
     pub fn wait_drained(self) -> Result<Savepoint> {
-        drop(self.senders);
-        let mut savepoint = Savepoint::default();
-        for slot in self.tasks.into_values().flatten() {
-            let export = slot
-                .handle
-                .join()
-                .map_err(|e| anyhow::anyhow!("task panicked: {e:?}"))??;
-            savepoint.merge_task_export(&export.op_name.clone(), export.state);
-            // Fused chain members export under their own logical names, so
-            // the savepoint looks identical to an unchained run.
-            for (name, state) in export.chained {
-                savepoint.merge_task_export(&name, state);
+        let RunningJob {
+            senders,
+            tasks,
+            stop,
+            drained,
+            ..
+        } = self;
+        drop(senders);
+        let mut pending: Vec<TaskSlot> = tasks.into_values().flatten().collect();
+        let mut savepoint = drained;
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut panic_payload: Option<Box<dyn std::any::Any + Send>> = None;
+        let mut backoff = IdleBackoff::new();
+        while !pending.is_empty() {
+            let mut progressed = false;
+            let mut i = 0;
+            while i < pending.len() {
+                if !pending[i].handle.is_finished() {
+                    i += 1;
+                    continue;
+                }
+                progressed = true;
+                let slot = pending.swap_remove(i);
+                match slot.handle.join() {
+                    Ok(Ok(export)) => {
+                        savepoint.merge_task_export(&export.op_name, export.state);
+                        // Fused chain members export under their own logical
+                        // names, so the savepoint looks identical to an
+                        // unchained run.
+                        for (name, state) in export.chained {
+                            savepoint.merge_task_export(&name, state);
+                        }
+                    }
+                    Ok(Err(e)) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                            stop.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    Err(payload) => {
+                        if panic_payload.is_none() {
+                            panic_payload = Some(payload);
+                            stop.store(true, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+            if progressed {
+                backoff.reset();
+            } else {
+                backoff.wait();
             }
         }
+        if let Some(payload) = panic_payload {
+            std::panic::resume_unwind(payload);
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
         Ok(savepoint)
+    }
+
+    /// Tear the job down without a savepoint (the recovery path): signal
+    /// stop, drop the inbound senders so the EOS/disconnect cascade unwinds
+    /// every surviving task, and join them all, discarding exports and
+    /// errors — the job restarts from its last completed checkpoint.
+    pub fn abandon(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        drop(self.senders);
+        for slot in self.tasks.into_values().flatten() {
+            let _ = slot.handle.join();
+        }
+    }
+
+    /// Number of task threads the job was deployed with.
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.values().map(Vec::len).sum()
+    }
+
+    /// Number of task threads still running.
+    pub fn live_tasks(&self) -> usize {
+        self.tasks
+            .values()
+            .flatten()
+            .filter(|s| !s.handle.is_finished())
+            .count()
+    }
+
+    /// Inject a checkpoint barrier for `epoch` at every source task. Returns
+    /// the number of acks the epoch needs to complete (one per task), or 0
+    /// if no source accepted the trigger (all exhausted or gone).
+    pub fn trigger_checkpoint(&self, epoch: u64) -> usize {
+        let mut sources = 0;
+        for head in &self.source_heads {
+            if let Some(slots) = self.tasks.get(head) {
+                for slot in slots {
+                    if slot.control.send(ControlMsg::Checkpoint(epoch)).is_ok() {
+                        sources += 1;
+                    }
+                }
+            }
+        }
+        if sources == 0 {
+            0
+        } else {
+            self.num_tasks()
+        }
+    }
+
+    /// Non-blocking drain of pending checkpoint acks.
+    pub fn poll_acks(&self) -> Vec<CheckpointAck> {
+        self.ack_rx.try_iter().collect()
+    }
+
+    /// Send a crash injection to the `victim`-th live task (in deterministic
+    /// operator/subtask order). Returns the victim's identity if delivered.
+    pub fn inject_crash(&self, victim: usize) -> Option<String> {
+        let mut i = 0;
+        for (head, slots) in &self.tasks {
+            for (subtask, slot) in slots.iter().enumerate() {
+                if slot.handle.is_finished() {
+                    continue;
+                }
+                if i == victim {
+                    let _ = slot.control.send(ControlMsg::Crash);
+                    return Some(format!("{head}/{subtask}"));
+                }
+                i += 1;
+            }
+        }
+        None
+    }
+
+    /// Non-blockingly reap finished task threads. Returns the first failure
+    /// message found, if any reaped task died with an error or panic. Clean
+    /// exits (the EOS drain of a bounded job) keep their exports: they are
+    /// merged back into the savepoint [`wait_drained`](Self::wait_drained)
+    /// returns.
+    pub fn check_failure(&mut self) -> Option<String> {
+        for slots in self.tasks.values_mut() {
+            let mut i = 0;
+            while i < slots.len() {
+                if !slots[i].handle.is_finished() {
+                    i += 1;
+                    continue;
+                }
+                let slot = slots.swap_remove(i);
+                match slot.handle.join() {
+                    Ok(Ok(export)) => {
+                        self.drained.merge_task_export(&export.op_name, export.state);
+                        for (name, state) in export.chained {
+                            self.drained.merge_task_export(&name, state);
+                        }
+                    }
+                    Ok(Err(e)) => return Some(e.to_string()),
+                    Err(p) => return Some(format!("task panicked: {p:?}")),
+                }
+            }
+        }
+        None
     }
 
     /// Members of the deployed chain containing `op`, head first (None for
@@ -246,6 +408,38 @@ impl JobManager {
         registry: &Registry,
         savepoint: Option<&Savepoint>,
     ) -> Result<RunningJob> {
+        self.deploy_inner(job, assignment, registry, savepoint, None)
+    }
+
+    /// Recovery deploy: restore operator state from a [`Snapshot`] (version
+    /// and job identity are verified loudly) and fast-forward every source
+    /// to its checkpointed replay offset, so the recovered job regenerates
+    /// exactly the post-checkpoint stream.
+    pub fn deploy_from_snapshot(
+        &mut self,
+        job: &StreamJob,
+        assignment: &ScalingAssignment,
+        registry: &Registry,
+        snapshot: &Snapshot,
+    ) -> Result<RunningJob> {
+        let state = snapshot.open(&job.graph.name)?;
+        self.deploy_inner(
+            job,
+            assignment,
+            registry,
+            Some(state),
+            Some(&snapshot.source_offsets),
+        )
+    }
+
+    fn deploy_inner(
+        &mut self,
+        job: &StreamJob,
+        assignment: &ScalingAssignment,
+        registry: &Registry,
+        savepoint: Option<&Savepoint>,
+        source_offsets: Option<&BTreeMap<String, Vec<u64>>>,
+    ) -> Result<RunningJob> {
         job.validate()?;
         self.epoch += 1;
         let graph = &job.graph;
@@ -255,6 +449,21 @@ impl JobManager {
             .cluster
             .place(&plan.slot_requests())
             .context("placing tasks on task managers")?;
+        // A snapshot's replay offsets are per-subtask: restoring under a
+        // different source parallelism would replay the wrong cut. Fail
+        // loudly instead of silently double- or under-playing records.
+        if let Some(offsets) = source_offsets {
+            for (op_name, offs) in offsets {
+                if let Some(op) = graph.ops.iter().find(|o| &o.name == op_name) {
+                    anyhow::ensure!(
+                        plan.op_parallelism(op.id) as usize == offs.len(),
+                        "snapshot has {} source offsets for {op_name} but parallelism is {}",
+                        offs.len(),
+                        plan.op_parallelism(op.id)
+                    );
+                }
+            }
+        }
         let layout = plan_chains(graph, &plan.parallelism, cfg.engine.chaining);
 
         // Inbound channels per chain head (members receive in-thread from
@@ -283,6 +492,7 @@ impl JobManager {
         }
 
         let stop = Arc::new(AtomicBool::new(false));
+        let (ack_tx, ack_rx) = std::sync::mpsc::channel();
         let mut tasks: BTreeMap<String, Vec<TaskSlot>> = BTreeMap::new();
         let mut channel_id: u32 = 0;
         for chain in &layout.chains {
@@ -345,6 +555,10 @@ impl JobManager {
                         InputTracker::new(in_channels[head.id]),
                     ))
                 };
+                let source_offset = source_offsets
+                    .and_then(|m| m.get(&head.name))
+                    .and_then(|offs| offs.get(subtask as usize))
+                    .copied();
                 slots.push(self.spawn_task(
                     job,
                     head,
@@ -358,6 +572,8 @@ impl JobManager {
                     restore,
                     members,
                     stop.clone(),
+                    ack_tx.clone(),
+                    source_offset,
                 )?);
             }
             tasks.insert(head.name.clone(), slots);
@@ -379,6 +595,13 @@ impl JobManager {
             .filter(|op| op.kind != OpKind::Source)
             .map(|op| (op.name.clone(), std::mem::take(&mut op_senders[op.id])))
             .collect();
+        let source_heads = layout
+            .chains
+            .iter()
+            .map(|c| graph.op(c[0]))
+            .filter(|op| op.kind == OpKind::Source)
+            .map(|op| op.name.clone())
+            .collect();
         Ok(RunningJob {
             plan,
             placement,
@@ -389,6 +612,10 @@ impl JobManager {
             next_channel_id: channel_id,
             chains,
             head_of,
+            source_heads,
+            ack_rx,
+            ack_tx,
+            drained: Savepoint::default(),
         })
     }
 
@@ -479,11 +706,19 @@ impl JobManager {
         restore: TaskRestore,
         chain: Vec<ChainedOp>,
         stop: Arc<AtomicBool>,
+        ack_tx: Sender<CheckpointAck>,
+        source_offset: Option<u64>,
     ) -> Result<TaskSlot> {
         let cfg = &self.config;
         let (state, stall_total) = self.build_backend(op, subtask, managed_mb, registry)?;
         let kind = match &job.factories[op.id] {
-            OpFactory::Source(f) => TaskKind::Source(f(subtask, parallelism)),
+            OpFactory::Source(f) => {
+                let mut src = f(subtask, parallelism);
+                if let Some(offset) = source_offset {
+                    src.restore_offset(offset);
+                }
+                TaskKind::Source(src)
+            }
             OpFactory::Transform(f) => TaskKind::Transform(f(subtask, parallelism)),
         };
         let (control_tx, control_rx) = std::sync::mpsc::channel();
@@ -501,6 +736,7 @@ impl JobManager {
             restore,
             flush_interval: Duration::from_millis(cfg.engine.flush_interval_ms),
             control: control_rx,
+            ack_tx: Some(ack_tx),
             stall_ns: stall_total,
             chain,
             chain_stride: cfg.engine.chain_sample_stride,
@@ -672,22 +908,41 @@ impl JobManager {
             new_receivers.insert(head.id, rx);
         }
 
-        // 3. Join the old tasks; their exports — keyed by logical operator,
-        // chained members included — form the unit savepoint.
+        // 3. Join the old tasks in completion order; their exports — keyed
+        // by logical operator, chained members included — form the unit
+        // savepoint. The first failure aborts immediately; a panicking task
+        // re-raises its original payload.
         let mut exported: BTreeMap<String, OperatorState> = BTreeMap::new();
         let mut retired = Vec::with_capacity(old_slots.len());
-        for slot in old_slots {
-            retired.push(slot.channel_id);
-            let export = slot
-                .handle
-                .join()
-                .map_err(|e| anyhow::anyhow!("task panicked: {e:?}"))??;
-            exported
-                .entry(export.op_name.clone())
-                .or_default()
-                .merge(export.state);
-            for (name, state) in export.chained {
-                exported.entry(name).or_default().merge(state);
+        let mut pending = old_slots;
+        let mut backoff = IdleBackoff::new();
+        while !pending.is_empty() {
+            let mut progressed = false;
+            let mut i = 0;
+            while i < pending.len() {
+                if !pending[i].handle.is_finished() {
+                    i += 1;
+                    continue;
+                }
+                progressed = true;
+                let slot = pending.swap_remove(i);
+                retired.push(slot.channel_id);
+                let export = match slot.handle.join() {
+                    Ok(res) => res?,
+                    Err(payload) => std::panic::resume_unwind(payload),
+                };
+                exported
+                    .entry(export.op_name.clone())
+                    .or_default()
+                    .merge(export.state);
+                for (name, state) in export.chained {
+                    exported.entry(name).or_default().merge(state);
+                }
+            }
+            if progressed {
+                backoff.reset();
+            } else {
+                backoff.wait();
             }
         }
         let savepoint_entries: usize = exported.values().map(|s| s.entry_count()).sum();
@@ -765,6 +1020,8 @@ impl JobManager {
                     restore,
                     members,
                     running.stop.clone(),
+                    running.ack_tx.clone(),
+                    None,
                 )?);
             }
             running.tasks.insert(head.name.clone(), new_slots);

@@ -15,6 +15,7 @@
 //! | Savepoint + rescale  | [`savepoint`]                         |
 //! | Metrics reporter     | [`scrape::Scraper`]                   |
 
+pub mod checkpoint;
 pub mod controller;
 pub mod exchange;
 pub mod job;
@@ -26,14 +27,22 @@ pub mod task;
 pub mod window;
 pub mod xla_op;
 
-pub use controller::{autoscale_live, DowntimeBreakdown, LiveReconfig, LiveReport};
+pub use checkpoint::{CheckpointAck, CheckpointCoordinator, FaultInjector};
+pub use controller::{
+    autoscale_live, run_supervised, DowntimeBreakdown, LiveReconfig, LiveReport,
+    RecoveryEvent, SupervisedReport,
+};
+pub use exchange::{BarrierAligner, BarrierEvent};
 pub use job::{JobManager, OpFactory, PartialRedeploy, RunningJob, StreamJob};
 pub use operators::{
     AccessMode, Aggregator, CountAggregator, FlatMapOp, IncrementalJoinOp, KeyedWindowAggregate,
     KvStoreOp, MapOp, OpCtx, Operator, SinkOp, Source, SourceBatch, SumPriceAggregator,
     WindowedJoinOp,
 };
-pub use savepoint::{OperatorState, Savepoint, TaskRestore};
+pub use savepoint::{
+    InMemorySnapshotStore, OperatorState, Savepoint, Snapshot, SnapshotHeader, SnapshotKind,
+    SnapshotStore, TaskRestore, SNAPSHOT_VERSION,
+};
 pub use scrape::Scraper;
 pub use sources::RateLimitedSource;
 pub use task::{ChainedOp, ControlMsg, IdleBackoff};

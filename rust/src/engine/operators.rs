@@ -693,6 +693,16 @@ pub trait Source: Send {
     fn poll(&mut self, max: usize) -> SourceBatch;
     /// Low watermark of everything emitted so far.
     fn watermark(&self) -> u64;
+    /// Replay position for a checkpoint: the number of records emitted so
+    /// far, captured *before* the barrier goes downstream so replaying from
+    /// it regenerates exactly the post-barrier stream. `None` means the
+    /// source cannot replay (its checkpoints then carry no offset).
+    fn checkpoint_offset(&self) -> Option<u64> {
+        None
+    }
+    /// Resume emission after recovery as if `offset` records were already
+    /// produced. Sources that return `None` above may ignore this.
+    fn restore_offset(&mut self, _offset: u64) {}
 }
 
 #[cfg(test)]

@@ -1,15 +1,25 @@
-//! Savepoints: consistent state exports used for reconfiguration.
+//! Snapshots: consistent state exports used for reconfiguration and
+//! fault recovery.
 //!
 //! On a rescale, each stateful task exports its keyed state (already
 //! prefixed by key group) and per-key-group operator bookkeeping; the job
 //! manager reassembles fragments and hands every new task the key groups in
 //! its range — Flink's savepoint/rescale mechanism in miniature.
+//!
+//! Both planned savepoints (reconfiguration) and periodic checkpoints
+//! (fault tolerance) travel as one versioned [`Snapshot`] type: a format
+//! header (version, job id, epoch, kind) wrapped around the operator-state
+//! payload. Restores go through [`Snapshot::open`], which fails loudly on a
+//! version or job mismatch instead of silently loading foreign state. A
+//! [`SnapshotStore`] keeps completed snapshots per job; the in-memory
+//! implementation is what the checkpoint coordinator installs epochs into.
 
 use crate::graph::groups_for_task;
+use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
 /// Exported state of one operator, keyed by key group.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct OperatorState {
     /// Key group → sorted (state_key, value) pairs (keys keep their group
     /// prefix, so they can be bulk-loaded into the new backend directly).
@@ -52,7 +62,7 @@ impl OperatorState {
 }
 
 /// What one task receives at (re)start.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct TaskRestore {
     pub keyed: Vec<(Vec<u8>, Vec<u8>)>,
     pub aux: Vec<Vec<u8>>,
@@ -65,7 +75,7 @@ impl TaskRestore {
 }
 
 /// A complete savepoint: operator name → exported state.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct Savepoint {
     pub operators: BTreeMap<String, OperatorState>,
 }
@@ -85,6 +95,170 @@ impl Savepoint {
     /// Total keyed entries across operators (savepoint "size" proxy).
     pub fn total_entries(&self) -> usize {
         self.operators.values().map(|o| o.entry_count()).sum()
+    }
+
+    /// Approximate serialized size in bytes (keyed entries + aux blobs).
+    pub fn size_bytes(&self) -> u64 {
+        self.operators
+            .values()
+            .map(|o| {
+                let keyed: usize = o
+                    .keyed
+                    .values()
+                    .flatten()
+                    .map(|(k, v)| k.len() + v.len())
+                    .sum();
+                let aux: usize = o.aux.values().flatten().map(|b| b.len()).sum();
+                (keyed + aux) as u64
+            })
+            .sum()
+    }
+}
+
+/// Current snapshot wire/format version. Bump on incompatible layout
+/// changes; [`Snapshot::open`] refuses to restore any other version.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// What produced a snapshot: a planned stop (reconfiguration) or the
+/// periodic checkpoint loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnapshotKind {
+    Savepoint,
+    Checkpoint,
+}
+
+impl std::fmt::Display for SnapshotKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotKind::Savepoint => write!(f, "savepoint"),
+            SnapshotKind::Checkpoint => write!(f, "checkpoint"),
+        }
+    }
+}
+
+/// Format header every snapshot carries; restores validate it first.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnapshotHeader {
+    /// Format version ([`SNAPSHOT_VERSION`] when produced by this build).
+    pub version: u32,
+    /// Job the state belongs to; restoring into a different job is an error.
+    pub job: String,
+    /// Checkpoint epoch (coordinator counter), or the reconfiguration
+    /// epoch for savepoints.
+    pub epoch: u64,
+    pub kind: SnapshotKind,
+}
+
+/// The unified snapshot: a validated header around the operator-state
+/// payload. Savepoints (reconfig) and checkpoints (fault tolerance) differ
+/// only in `header.kind` and in who installs them.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub header: SnapshotHeader,
+    /// Operator name → exported state; also carries checkpointed source
+    /// offsets keyed by operator (see [`Snapshot::source_offsets`]).
+    pub state: Savepoint,
+    /// Source operator name → per-subtask replay offsets captured when the
+    /// barrier was injected.
+    pub source_offsets: BTreeMap<String, Vec<u64>>,
+}
+
+impl Snapshot {
+    pub fn savepoint(job: impl Into<String>, epoch: u64, state: Savepoint) -> Self {
+        Self::with_kind(job, epoch, SnapshotKind::Savepoint, state)
+    }
+
+    pub fn checkpoint(job: impl Into<String>, epoch: u64, state: Savepoint) -> Self {
+        Self::with_kind(job, epoch, SnapshotKind::Checkpoint, state)
+    }
+
+    fn with_kind(job: impl Into<String>, epoch: u64, kind: SnapshotKind, state: Savepoint) -> Self {
+        Self {
+            header: SnapshotHeader {
+                version: SNAPSHOT_VERSION,
+                job: job.into(),
+                epoch,
+                kind,
+            },
+            state,
+            source_offsets: BTreeMap::new(),
+        }
+    }
+
+    /// Validate the header and hand out the payload for a restore into
+    /// `job`. Fails loudly on a version or job mismatch — restoring
+    /// foreign or future-format state silently is never acceptable.
+    pub fn open(&self, job: &str) -> Result<&Savepoint> {
+        if self.header.version != SNAPSHOT_VERSION {
+            bail!(
+                "snapshot format version {} not supported (this build reads version {})",
+                self.header.version,
+                SNAPSHOT_VERSION
+            );
+        }
+        if self.header.job != job {
+            bail!(
+                "snapshot belongs to job {:?}, refusing restore into job {:?}",
+                self.header.job,
+                job
+            );
+        }
+        Ok(&self.state)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.header.epoch
+    }
+
+    pub fn kind(&self) -> SnapshotKind {
+        self.header.kind
+    }
+}
+
+/// Where completed snapshots live. The engine keeps them in memory today;
+/// a durable store (object storage, DFS) would implement the same trait.
+pub trait SnapshotStore: Send {
+    /// Install a completed snapshot. Installation is atomic: the snapshot
+    /// becomes visible as `latest` only as a whole.
+    fn put(&mut self, snapshot: Snapshot);
+    /// Fetch a snapshot by epoch.
+    fn get(&self, epoch: u64) -> Option<&Snapshot>;
+    /// The most recent completed snapshot, if any.
+    fn latest(&self) -> Option<&Snapshot>;
+    /// Drop all but the `retain` most recent snapshots.
+    fn prune(&mut self, retain: usize);
+    /// Completed epochs, ascending.
+    fn epochs(&self) -> Vec<u64>;
+}
+
+/// In-memory [`SnapshotStore`] keyed by epoch.
+#[derive(Debug, Default)]
+pub struct InMemorySnapshotStore {
+    snapshots: BTreeMap<u64, Snapshot>,
+}
+
+impl SnapshotStore for InMemorySnapshotStore {
+    fn put(&mut self, snapshot: Snapshot) {
+        self.snapshots.insert(snapshot.epoch(), snapshot);
+    }
+
+    fn get(&self, epoch: u64) -> Option<&Snapshot> {
+        self.snapshots.get(&epoch)
+    }
+
+    fn latest(&self) -> Option<&Snapshot> {
+        self.snapshots.values().next_back()
+    }
+
+    fn prune(&mut self, retain: usize) {
+        while self.snapshots.len() > retain {
+            let oldest = *self.snapshots.keys().next().unwrap();
+            self.snapshots.remove(&oldest);
+        }
+    }
+
+    fn epochs(&self) -> Vec<u64> {
+        self.snapshots.keys().copied().collect()
     }
 }
 
@@ -187,6 +361,48 @@ mod tests {
         assert_eq!(sp.total_entries(), 4);
         assert_eq!(sp.operator("count").unwrap().entry_count(), 3);
         assert!(sp.operator("missing").is_none());
+    }
+
+    #[test]
+    fn snapshot_open_validates_version_and_job() {
+        let mut sp = Savepoint::default();
+        sp.merge_task_export("count", export_for_keys(&[1, 2], 128));
+        let snap = Snapshot::checkpoint("wordcount", 3, sp);
+        assert_eq!(snap.epoch(), 3);
+        assert_eq!(snap.kind(), SnapshotKind::Checkpoint);
+        assert_eq!(snap.open("wordcount").unwrap().total_entries(), 2);
+
+        let err = snap.open("other-job").unwrap_err().to_string();
+        assert!(err.contains("refusing restore"), "job mismatch: {err}");
+
+        let mut stale = snap.clone();
+        stale.header.version = SNAPSHOT_VERSION + 1;
+        let err = stale.open("wordcount").unwrap_err().to_string();
+        assert!(err.contains("version"), "version mismatch: {err}");
+    }
+
+    #[test]
+    fn in_memory_store_installs_latest_and_prunes() {
+        let mut store = InMemorySnapshotStore::default();
+        for epoch in 1..=5u64 {
+            store.put(Snapshot::checkpoint("j", epoch, Savepoint::default()));
+        }
+        assert_eq!(store.latest().unwrap().epoch(), 5);
+        assert!(store.get(2).is_some());
+        store.prune(2);
+        assert_eq!(store.epochs(), vec![4, 5]);
+        assert!(store.get(2).is_none());
+        assert_eq!(store.latest().unwrap().epoch(), 5);
+    }
+
+    #[test]
+    fn savepoint_size_bytes_counts_keys_values_and_aux() {
+        let mut sp = Savepoint::default();
+        let mut st = OperatorState::default();
+        st.keyed.entry(0).or_default().push((vec![1, 2], vec![3]));
+        st.aux.entry(0).or_default().push(vec![4, 5, 6, 7]);
+        sp.merge_task_export("op", st);
+        assert_eq!(sp.size_bytes(), 2 + 1 + 4);
     }
 
     #[test]

@@ -2,15 +2,19 @@
 //! model, §2), with busy/idle/backpressure time accounting feeding the
 //! auto-scaler's busyness metric.
 
-use super::exchange::{Envelope, InputTracker, OutputPartition, Tagged};
+use super::checkpoint::CheckpointAck;
+use super::exchange::{
+    BarrierAligner, BarrierEvent, Envelope, InputTracker, OutputPartition, Tagged,
+};
 use super::operators::{OpCtx, Operator, Source, SourceBatch};
 use super::savepoint::{OperatorState, TaskRestore};
 use crate::graph::Record;
 use crate::metrics::{names, Counter, MetricId, Registry};
 use crate::state::{split_state_key, StateBackend};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -38,6 +42,13 @@ pub enum ControlMsg {
     /// state when the input disconnects, but do NOT propagate EOS (the
     /// downstream operators keep running).
     Decommission,
+    /// Inject a checkpoint barrier for `epoch`. Only sources act on it (they
+    /// snapshot their offset and emit the barrier downstream); transforms
+    /// align on barriers arriving through their input channels instead.
+    Checkpoint(u64),
+    /// Fault injection: fail the task immediately with an error, as if the
+    /// process hosting it crashed. No state is exported.
+    Crash,
 }
 
 /// Exponential idle backoff for the engine's poll loops: starts at 50 µs
@@ -175,6 +186,9 @@ pub struct TaskHarness {
     pub flush_interval: Duration,
     /// Control-plane channel (live resizes, exchange re-wiring, decommission).
     pub control: Receiver<ControlMsg>,
+    /// Where checkpoint acknowledgements go (None disables checkpointing for
+    /// this task — barriers still propagate, but nothing is exported).
+    pub ack_tx: Option<Sender<CheckpointAck>>,
     /// Cumulative LSM write-stall nanoseconds, shared with the state
     /// backend's metric hooks. Sampled around record processing so stall
     /// time is billed as blocked (backpressure), not busy — a stalled task
@@ -245,6 +259,114 @@ fn export_operator_state(state: &mut dyn StateBackend, op: &dyn Operator) -> Res
         export.aux.entry(group).or_default().push(blob);
     }
     Ok(export)
+}
+
+/// Tell the coordinator an epoch will never complete at this task (its
+/// alignment was aborted by a rewire, disconnect, or teardown).
+fn send_aborted_ack(
+    ack_tx: &Option<Sender<CheckpointAck>>,
+    op_name: &str,
+    subtask: u32,
+    epoch: u64,
+) {
+    if let Some(tx) = ack_tx {
+        let _ = tx.send(CheckpointAck {
+            epoch,
+            op_name: op_name.to_string(),
+            subtask,
+            exports: Vec::new(),
+            source_offset: None,
+            aborted: true,
+        });
+    }
+}
+
+/// Take a transform's checkpoint for `epoch`: the task sits exactly on the
+/// consistent cut (every live input delivered the barrier, nothing
+/// post-barrier has been processed). Quiesce each backend so the export sees
+/// all writes, export the head and every chain member, pass the barrier
+/// downstream, and ack. Returns ns blocked on the outgoing exchange.
+#[allow(clippy::too_many_arguments)]
+fn checkpoint_transform(
+    op_name: &str,
+    subtask: u32,
+    epoch: u64,
+    op: &dyn Operator,
+    state: &mut dyn StateBackend,
+    chain: &mut [ChainedOp],
+    outputs: &mut [OutputPartition],
+    channel_id: u32,
+    ack_tx: &Option<Sender<CheckpointAck>>,
+) -> Result<u64> {
+    state.flush()?;
+    let mut exports = vec![(op_name.to_string(), export_operator_state(state, op)?)];
+    for m in chain.iter_mut() {
+        m.state.flush()?;
+        exports.push((
+            m.op_name.clone(),
+            export_operator_state(m.state.as_mut(), m.op.as_ref())?,
+        ));
+    }
+    let mut bp = 0;
+    for out in outputs {
+        bp += out.send_barrier(channel_id, epoch);
+    }
+    if let Some(tx) = ack_tx {
+        let _ = tx.send(CheckpointAck {
+            epoch,
+            op_name: op_name.to_string(),
+            subtask,
+            exports,
+            source_offset: None,
+            aborted: false,
+        });
+    }
+    Ok(bp)
+}
+
+/// Take a source's checkpoint for `epoch`. The replay offset is captured
+/// BEFORE the barrier goes out and `send_barrier` flushes pending buffers
+/// first, so every record counted by the offset precedes the barrier on the
+/// wire — replaying from the offset regenerates exactly the post-barrier
+/// stream. Chain members run synchronously in this thread, so their state
+/// already reflects every pre-barrier record. Returns ns blocked sending.
+#[allow(clippy::too_many_arguments)]
+fn checkpoint_source(
+    op_name: &str,
+    subtask: u32,
+    epoch: u64,
+    source: &dyn Source,
+    chain: &mut [ChainedOp],
+    outputs: &mut [OutputPartition],
+    channel_id: u32,
+    ack_tx: &Option<Sender<CheckpointAck>>,
+) -> Result<u64> {
+    let offset = source.checkpoint_offset();
+    // The head source has no keyed state; export the same empty shape the
+    // savepoint path records for it.
+    let mut exports = vec![(op_name.to_string(), OperatorState::default())];
+    for m in chain.iter_mut() {
+        m.state.flush()?;
+        exports.push((
+            m.op_name.clone(),
+            export_operator_state(m.state.as_mut(), m.op.as_ref())?,
+        ));
+    }
+    let mut bp = 0;
+    for out in outputs {
+        bp += out.send_barrier(channel_id, epoch);
+    }
+    if let Some(tx) = ack_tx {
+        let _ = tx.send(CheckpointAck {
+            epoch,
+            op_name: op_name.to_string(),
+            subtask,
+            exports,
+            source_offset: offset,
+            aborted: false,
+        });
+    }
+    Ok(bp)
 }
 
 /// Flow `recs` through the chain members starting at index `start` — by
@@ -412,11 +534,23 @@ where
     Ok(bp)
 }
 
+/// What one control-poll round produced beyond in-place rewiring.
+#[derive(Default)]
+struct ControlOutcome {
+    /// Nanoseconds blocked flushing during an output swap.
+    blocked_ns: u64,
+    /// A checkpoint barrier injection request (sources act on it).
+    checkpoint: Option<u64>,
+    /// An injected fault: the task must fail now.
+    crash: bool,
+    /// An input rewire aborted this in-flight alignment epoch.
+    aborted_epoch: Option<u64>,
+}
+
 impl TaskHarness {
     /// Drain all pending control messages. Called once per loop iteration in
     /// both task loops (an associated fn because the transform loop has the
-    /// tracker moved out of `self`). Returns nanoseconds spent blocked while
-    /// flushing during an output swap.
+    /// tracker moved out of `self`).
     #[allow(clippy::too_many_arguments)]
     fn poll_control(
         control: &Receiver<ControlMsg>,
@@ -425,10 +559,11 @@ impl TaskHarness {
         state: &mut dyn StateBackend,
         chain: &mut [ChainedOp],
         mut tracker: Option<&mut InputTracker>,
+        mut aligner: Option<&mut BarrierAligner>,
         channel_id: u32,
         decommissioned: &mut bool,
-    ) -> u64 {
-        let mut blocked = 0u64;
+    ) -> ControlOutcome {
+        let mut out = ControlOutcome::default();
         while let Ok(msg) = control.try_recv() {
             match msg {
                 ControlMsg::ResizeMemory { op, managed_mb } => {
@@ -439,19 +574,26 @@ impl TaskHarness {
                     }
                 }
                 ControlMsg::SwapOutput { output, senders } => {
-                    if let Some(out) = outputs.get_mut(output) {
-                        blocked += out.swap_senders(channel_id, senders);
+                    if let Some(o) = outputs.get_mut(output) {
+                        out.blocked_ns += o.swap_senders(channel_id, senders);
                     }
                 }
                 ControlMsg::RewireInput { retire, expected } => {
                     if let Some(t) = tracker.as_deref_mut() {
                         t.rewire(&retire, expected);
                     }
+                    if let Some(a) = aligner.as_deref_mut() {
+                        if let Some(epoch) = a.rewire(&retire, expected) {
+                            out.aborted_epoch = Some(epoch);
+                        }
+                    }
                 }
                 ControlMsg::Decommission => *decommissioned = true,
+                ControlMsg::Checkpoint(epoch) => out.checkpoint = Some(epoch),
+                ControlMsg::Crash => out.crash = true,
             }
         }
-        blocked
+        out
     }
 
     /// Run the task to completion (EOS or stop); returns the state export.
@@ -492,17 +634,38 @@ impl TaskHarness {
             if self.stop.load(Ordering::Relaxed) {
                 break;
             }
-            let bp_ctl = Self::poll_control(
+            let ctl = Self::poll_control(
                 &self.control,
                 &mut self.outputs,
                 &self.op_name,
                 self.state.as_mut(),
                 &mut self.chain,
                 None,
+                None,
                 self.channel_id,
                 &mut decommissioned,
             );
-            self.metrics.backpressure_ns.add(bp_ctl);
+            self.metrics.backpressure_ns.add(ctl.blocked_ns);
+            if ctl.crash {
+                return Err(anyhow!(
+                    "injected fault at {}/{}",
+                    self.op_name,
+                    self.subtask
+                ));
+            }
+            if let Some(epoch) = ctl.checkpoint {
+                let bp = checkpoint_source(
+                    &self.op_name,
+                    self.subtask,
+                    epoch,
+                    source.as_ref(),
+                    &mut self.chain,
+                    &mut self.outputs,
+                    self.channel_id,
+                    &self.ack_tx,
+                )?;
+                self.metrics.backpressure_ns.add(bp);
+            }
             let t0 = Instant::now();
             let batch = source.poll(256);
             match batch {
@@ -649,28 +812,101 @@ impl TaskHarness {
         let mut chain_next: Vec<Record> = Vec::new();
         let mut sample_tick = 0usize;
         let stride = self.chain_stride.max(1);
+        // Barrier alignment: envelopes from channels that already delivered
+        // the in-flight epoch's barrier go to `held`; on completion (or
+        // abort) they move to `replay`, which is consumed before the input
+        // queue so per-channel FIFO order is preserved.
+        let mut aligner = BarrierAligner::new(tracker.expected());
+        let mut held: Vec<Tagged> = Vec::new();
+        let mut replay: VecDeque<Tagged> = VecDeque::new();
+        let mut input_done = false;
         loop {
-            let bp_ctl = Self::poll_control(
+            let ctl = Self::poll_control(
                 &self.control,
                 &mut self.outputs,
                 &self.op_name,
                 self.state.as_mut(),
                 &mut self.chain,
                 Some(&mut tracker),
+                Some(&mut aligner),
                 self.channel_id,
                 &mut decommissioned,
             );
-            self.metrics.backpressure_ns.add(bp_ctl);
-            let t_recv = Instant::now();
-            let msg = rx.recv_timeout(self.flush_interval);
-            let recv_idle = t_recv.elapsed().as_nanos() as u64;
-            self.metrics.idle_ns.add(recv_idle);
-            // Chain members share the thread: waiting for input is idle
-            // time for them too.
-            for m in &mut self.chain {
-                m.metrics.idle_ns.add(recv_idle);
+            self.metrics.backpressure_ns.add(ctl.blocked_ns);
+            if ctl.crash {
+                return Err(anyhow!(
+                    "injected fault at {}/{}",
+                    self.op_name,
+                    self.subtask
+                ));
             }
+            if let Some(epoch) = ctl.aborted_epoch {
+                // A rewire aborted the alignment: the held envelopes are
+                // plain data again, and the coordinator must give up on the
+                // epoch.
+                send_aborted_ack(&self.ack_tx, &self.op_name, self.subtask, epoch);
+                replay.extend(held.drain(..));
+            }
+            if input_done && replay.is_empty() {
+                break;
+            }
+            let msg = match replay.pop_front() {
+                Some(m) => Ok(m),
+                None => {
+                    let t_recv = Instant::now();
+                    let r = rx.recv_timeout(self.flush_interval);
+                    let recv_idle = t_recv.elapsed().as_nanos() as u64;
+                    self.metrics.idle_ns.add(recv_idle);
+                    // Chain members share the thread: waiting for input is
+                    // idle time for them too.
+                    for m in &mut self.chain {
+                        m.metrics.idle_ns.add(recv_idle);
+                    }
+                    r
+                }
+            };
             match msg {
+                // While aligning, a channel that already delivered the
+                // barrier is ahead of the cut: hold its data and watermarks
+                // until every other live channel catches up.
+                Ok((from, env))
+                    if aligner.should_hold(from)
+                        && !matches!(env, Envelope::Eos | Envelope::Barrier { .. }) =>
+                {
+                    held.push((from, env));
+                }
+                Ok((from, Envelope::Barrier { port, epoch })) => {
+                    if aligner.epoch().is_some_and(|e| epoch > e) {
+                        // A newer epoch supersedes a stuck alignment. The
+                        // held envelopes precede this barrier on their
+                        // channels, so they are pre-cut data for the *new*
+                        // epoch: abort, replay them, then re-deliver this
+                        // barrier after them.
+                        let stale = aligner.abort().expect("aligning");
+                        send_aborted_ack(&self.ack_tx, &self.op_name, self.subtask, stale);
+                        replay.extend(held.drain(..));
+                        replay.push_back((from, Envelope::Barrier { port, epoch }));
+                        continue;
+                    }
+                    match aligner.on_barrier(from, epoch) {
+                        BarrierEvent::Complete(epoch) => {
+                            let bp = checkpoint_transform(
+                                &self.op_name,
+                                self.subtask,
+                                epoch,
+                                op.as_ref(),
+                                self.state.as_mut(),
+                                &mut self.chain,
+                                &mut self.outputs,
+                                self.channel_id,
+                                &self.ack_tx,
+                            )?;
+                            self.metrics.backpressure_ns.add(bp);
+                            replay.extend(held.drain(..));
+                        }
+                        BarrierEvent::Hold | BarrierEvent::Ignore => {}
+                    }
+                }
                 Ok((from, Envelope::Batch { port, records })) => {
                     let _ = from;
                     let t0 = Instant::now();
@@ -790,8 +1026,25 @@ impl TaskHarness {
                     }
                 }
                 Ok((from, Envelope::Eos)) => {
+                    // EOS is barrier-equivalent: a finished channel can never
+                    // deliver a barrier, so it must not block an alignment.
+                    if let Some(epoch) = aligner.on_eos(from) {
+                        let bp = checkpoint_transform(
+                            &self.op_name,
+                            self.subtask,
+                            epoch,
+                            op.as_ref(),
+                            self.state.as_mut(),
+                            &mut self.chain,
+                            &mut self.outputs,
+                            self.channel_id,
+                            &self.ack_tx,
+                        )?;
+                        self.metrics.backpressure_ns.add(bp);
+                        replay.extend(held.drain(..));
+                    }
                     if tracker.on_eos(from) {
-                        break;
+                        input_done = true;
                     }
                 }
                 Err(RecvTimeoutError::Timeout) => {
@@ -800,7 +1053,15 @@ impl TaskHarness {
                     }
                     last_flush = Instant::now();
                 }
-                Err(RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    // A peer vanished (crash or teardown): an in-flight
+                    // alignment can never complete here.
+                    if let Some(epoch) = aligner.abort() {
+                        send_aborted_ack(&self.ack_tx, &self.op_name, self.subtask, epoch);
+                        replay.extend(held.drain(..));
+                    }
+                    input_done = true;
+                }
             }
             if last_flush.elapsed() >= self.flush_interval {
                 last_flush = Instant::now();
@@ -817,9 +1078,14 @@ impl TaskHarness {
             self.state.as_mut(),
             &mut self.chain,
             Some(&mut tracker),
+            Some(&mut aligner),
             self.channel_id,
             &mut decommissioned,
         );
+        // An alignment still in flight at teardown can never complete.
+        if let Some(epoch) = aligner.abort() {
+            send_aborted_ack(&self.ack_tx, &self.op_name, self.subtask, epoch);
+        }
         // Drain: let the operator flush, export state, propagate EOS — unless
         // decommissioned (a partial redeploy replaces this task; downstream
         // keeps running and must not see an end-of-stream).
@@ -944,6 +1210,7 @@ mod tests {
             restore: TaskRestore::default(),
             flush_interval: Duration::from_millis(10),
             control: ctl(),
+            ack_tx: None,
             stall_ns: None,
             chain: Vec::new(),
             chain_stride: 64,
@@ -1006,6 +1273,7 @@ mod tests {
             restore: TaskRestore::default(),
             flush_interval: Duration::from_millis(5),
             control: ctl(),
+            ack_tx: None,
             stall_ns: None,
             chain: Vec::new(),
             chain_stride: 64,
@@ -1080,6 +1348,7 @@ mod tests {
                 restore: TaskRestore::default(),
                 flush_interval: Duration::from_millis(5),
                 control: ctl(),
+                ack_tx: None,
                 stall_ns: None,
                 chain: Vec::new(),
                 chain_stride: 64,
@@ -1139,6 +1408,7 @@ mod tests {
             restore,
             flush_interval: Duration::from_millis(5),
             control: ctl(),
+            ack_tx: None,
             stall_ns: None,
             chain: Vec::new(),
             chain_stride: 64,
@@ -1227,6 +1497,7 @@ mod tests {
             restore: TaskRestore::default(),
             flush_interval: Duration::from_millis(5),
             control: ctl(),
+            ack_tx: None,
             stall_ns: None,
             chain: Vec::new(),
             chain_stride: 64,
@@ -1323,6 +1594,7 @@ mod tests {
             restore: TaskRestore::default(),
             flush_interval: Duration::from_millis(10),
             control: ctl(),
+            ack_tx: None,
             stall_ns: None,
             chain: vec![member],
             chain_stride: 1,
@@ -1396,6 +1668,7 @@ mod tests {
             restore: TaskRestore::default(),
             flush_interval: Duration::from_millis(5),
             control: ctl(),
+            ack_tx: None,
             stall_ns: None,
             chain: vec![member],
             chain_stride: 64,
@@ -1502,6 +1775,7 @@ mod tests {
             restore: TaskRestore::default(),
             flush_interval: Duration::from_millis(5),
             control: ctl(),
+            ack_tx: None,
             stall_ns: None,
             chain: vec![member],
             chain_stride: 7,
@@ -1515,5 +1789,220 @@ mod tests {
             .all(|r| matches!(r, Record::Pair { value: 3, .. })));
         assert_eq!(map_metrics.records_in.get(), 100);
         assert_eq!(map_metrics.records_out.get(), 100);
+    }
+
+    #[test]
+    fn transform_aligns_barriers_and_acks_checkpoint() {
+        // Two upstream channels feed one map task. Channel 0 delivers its
+        // barrier first; its post-barrier record must be held until channel 1
+        // catches up, and must reach downstream only after the barrier.
+        let (up_tx, up_rx) = build_edge_channels(1, 64);
+        let (down_tx, down_rx) = build_edge_channels(1, 64);
+        let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+        let harness = TaskHarness {
+            channel_id: 30,
+            op_name: "map".into(),
+            subtask: 0,
+            kind: TaskKind::Transform(Box::new(MapOp { f: Some::<Record> })),
+            input: Some((up_rx.into_iter().next().unwrap(), InputTracker::new(2))),
+            outputs: vec![OutputPartition::new(
+                down_tx,
+                Partitioning::Rebalance,
+                0,
+                128,
+                16,
+            )],
+            state: Box::new(HeapBackend::new()),
+            key_groups: 128,
+            metrics: metrics(),
+            stop: Arc::new(AtomicBool::new(false)),
+            restore: TaskRestore::default(),
+            flush_interval: Duration::from_millis(10),
+            control: ctl(),
+            ack_tx: Some(ack_tx),
+            stall_ns: None,
+            chain: Vec::new(),
+            chain_stride: 64,
+        };
+        let h = std::thread::spawn(move || harness.run().unwrap());
+        let batch = |records| Envelope::Batch { port: 0, records };
+        up_tx[0].send((0, batch(vec![pair(1, 1), pair(2, 2)]))).unwrap();
+        up_tx[0].send((0, Envelope::Barrier { port: 0, epoch: 1 })).unwrap();
+        // Post-barrier on channel 0: must be held.
+        up_tx[0].send((0, batch(vec![pair(3, 3)]))).unwrap();
+        // Pre-barrier on channel 1: must be processed before the cut.
+        up_tx[0].send((1, batch(vec![pair(4, 4)]))).unwrap();
+        up_tx[0].send((1, Envelope::Barrier { port: 0, epoch: 1 })).unwrap();
+        up_tx[0].send((0, Envelope::Eos)).unwrap();
+        up_tx[0].send((1, Envelope::Eos)).unwrap();
+        h.join().unwrap();
+
+        let ack = ack_rx.recv().unwrap();
+        assert_eq!(ack.epoch, 1);
+        assert!(!ack.aborted);
+        assert_eq!(ack.source_offset, None);
+        assert_eq!(ack.exports.len(), 1);
+        assert_eq!(ack.exports[0].0, "map");
+
+        let mut before = Vec::new();
+        let mut after = Vec::new();
+        let mut saw_barrier = false;
+        loop {
+            match down_rx[0].recv().unwrap() {
+                (_, Envelope::Batch { records, .. }) => {
+                    if saw_barrier {
+                        after.extend(records);
+                    } else {
+                        before.extend(records);
+                    }
+                }
+                (_, Envelope::Barrier { epoch, .. }) => {
+                    assert_eq!(epoch, 1);
+                    saw_barrier = true;
+                }
+                (_, Envelope::Eos) => break,
+                _ => {}
+            }
+        }
+        let keys = |v: &[Record]| -> Vec<u64> {
+            v.iter()
+                .map(|r| match r {
+                    Record::Pair { key, .. } => *key,
+                    _ => 0,
+                })
+                .collect()
+        };
+        assert_eq!(keys(&before), vec![1, 2, 4], "pre-cut records precede the barrier");
+        assert_eq!(keys(&after), vec![3], "held record replays after the barrier");
+    }
+
+    #[test]
+    fn source_checkpoint_offset_matches_records_before_barrier() {
+        // The consistent-cut invariant: the offset the source acks equals
+        // the number of records that reach downstream before the barrier.
+        struct OffsetSource {
+            emitted: u64,
+        }
+        impl Source for OffsetSource {
+            fn poll(&mut self, max: usize) -> SourceBatch {
+                let n = max.min(10) as u64;
+                let mut out = Vec::with_capacity(n as usize);
+                for _ in 0..n {
+                    self.emitted += 1;
+                    out.push(Record::Pair {
+                        key: self.emitted,
+                        value: 1,
+                        ts: self.emitted,
+                    });
+                }
+                SourceBatch::Records(out)
+            }
+            fn watermark(&self) -> u64 {
+                self.emitted
+            }
+            fn checkpoint_offset(&self) -> Option<u64> {
+                Some(self.emitted)
+            }
+        }
+        let (down_tx, down_rx) = build_edge_channels(1, 1024);
+        let (ctl_tx, ctl_rx) = std::sync::mpsc::channel();
+        let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+        let stop = Arc::new(AtomicBool::new(false));
+        let harness = TaskHarness {
+            channel_id: 31,
+            op_name: "src".into(),
+            subtask: 0,
+            kind: TaskKind::Source(Box::new(OffsetSource { emitted: 0 })),
+            input: None,
+            outputs: vec![OutputPartition::new(
+                down_tx,
+                Partitioning::Rebalance,
+                0,
+                128,
+                16,
+            )],
+            state: Box::new(HeapBackend::new()),
+            key_groups: 128,
+            metrics: metrics(),
+            stop: stop.clone(),
+            restore: TaskRestore::default(),
+            flush_interval: Duration::from_millis(5),
+            control: ctl_rx,
+            ack_tx: Some(ack_tx),
+            stall_ns: None,
+            chain: Vec::new(),
+            chain_stride: 64,
+        };
+        let h = std::thread::spawn(move || harness.run().unwrap());
+        ctl_tx.send(ControlMsg::Checkpoint(7)).unwrap();
+        let mut before_barrier = 0u64;
+        loop {
+            match down_rx[0].recv().unwrap() {
+                (_, Envelope::Batch { records, .. }) => before_barrier += records.len() as u64,
+                (_, Envelope::Barrier { epoch, .. }) => {
+                    assert_eq!(epoch, 7);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        loop {
+            match down_rx[0].recv().unwrap() {
+                (_, Envelope::Eos) => break,
+                _ => {}
+            }
+        }
+        h.join().unwrap();
+        let ack = ack_rx.recv().unwrap();
+        assert_eq!(ack.epoch, 7);
+        assert!(!ack.aborted);
+        assert_eq!(
+            ack.source_offset,
+            Some(before_barrier),
+            "offset must count exactly the pre-barrier records"
+        );
+    }
+
+    #[test]
+    fn crash_control_fails_task_without_export() {
+        let (up_tx, up_rx) = build_edge_channels(1, 64);
+        let (down_tx, _down_rx) = build_edge_channels(1, 64);
+        let (ctl_tx, ctl_rx) = std::sync::mpsc::channel();
+        let harness = TaskHarness {
+            channel_id: 32,
+            op_name: "map".into(),
+            subtask: 3,
+            kind: TaskKind::Transform(Box::new(MapOp { f: Some::<Record> })),
+            input: Some((up_rx.into_iter().next().unwrap(), InputTracker::new(1))),
+            outputs: vec![OutputPartition::new(
+                down_tx,
+                Partitioning::Rebalance,
+                0,
+                128,
+                16,
+            )],
+            state: Box::new(HeapBackend::new()),
+            key_groups: 128,
+            metrics: metrics(),
+            stop: Arc::new(AtomicBool::new(false)),
+            restore: TaskRestore::default(),
+            flush_interval: Duration::from_millis(5),
+            control: ctl_rx,
+            ack_tx: None,
+            stall_ns: None,
+            chain: Vec::new(),
+            chain_stride: 64,
+        };
+        let h = std::thread::spawn(move || harness.run());
+        ctl_tx.send(ControlMsg::Crash).unwrap();
+        let err = h.join().unwrap().unwrap_err();
+        assert!(
+            err.to_string().contains("injected fault at map/3"),
+            "unexpected error: {err}"
+        );
+        // Keep the upstream alive until the task has died so the crash path
+        // (not a disconnect) ends the task.
+        drop(up_tx);
     }
 }

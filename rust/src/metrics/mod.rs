@@ -296,6 +296,12 @@ pub mod names {
     pub const SOURCE_RATE: &str = "source_rate";
     /// Sink: observed end-to-end rate (events/s).
     pub const SINK_RATE: &str = "sink_rate";
+    /// Checkpoint end-to-end duration histogram, ns (per job).
+    pub const CHECKPOINT_DURATION_NS: &str = "checkpoint_duration_ns";
+    /// Completed checkpoint size histogram, bytes (per job).
+    pub const CHECKPOINT_SIZE_BYTES: &str = "checkpoint_size_bytes";
+    /// Failure-to-recovered duration histogram, ns (per job).
+    pub const RECOVERY_DURATION_NS: &str = "recovery_duration_ns";
 }
 
 #[cfg(test)]

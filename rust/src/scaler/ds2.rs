@@ -29,13 +29,13 @@ impl Ds2 {
     /// Sources keep their parallelism (§5 treats them as injectors); sinks
     /// are pinned at their current parallelism (paper fixes them at 1).
     pub fn plan(&self, input: &PolicyInput) -> ScalingAssignment {
-        let meta: &GraphMeta = input.meta;
-        let mut next = input.current.clone();
+        let meta: &GraphMeta = input.meta();
+        let mut next = input.current().clone();
         // Target *output* rate each operator must eventually sustain.
         let mut out_rate: BTreeMap<&str, f64> = BTreeMap::new();
         for op in meta.topo() {
-            let window = input.windows.get(&op.name);
-            let current = input.current.get(&op.name);
+            let window = input.window(&op.name);
+            let current = input.current().get(&op.name);
             match op.kind {
                 OpKind::Source => {
                     // The source's observed output is what the query absorbs
@@ -110,11 +110,7 @@ mod tests {
         windows: &'a BTreeMap<String, crate::metrics::window::OperatorWindow>,
         current: &'a ScalingAssignment,
     ) -> PolicyInput<'a> {
-        PolicyInput {
-            meta,
-            windows,
-            current,
-        }
+        PolicyInput::new(meta, windows, current)
     }
 
     #[test]

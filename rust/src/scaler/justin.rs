@@ -123,7 +123,7 @@ impl Policy for Justin {
         // Line 1: C^t ← DS2().
         let mut next = self.ds2.plan(input);
         let prev = self.history.take().unwrap_or_else(|| History {
-            assignment: input.current.clone(),
+            assignment: input.current().clone(),
             ..Default::default()
         });
         let mut new_vertical: BTreeMap<String, bool> = BTreeMap::new();
@@ -133,11 +133,11 @@ impl Policy for Justin {
         let mut new_tau = BTreeMap::new();
 
         // Line 2: iterate over all operators.
-        for op in input.meta.topo() {
+        for op in input.meta().topo() {
             if op.kind == OpKind::Source {
                 continue; // injectors are outside the resource model (§5)
             }
-            let window = input.windows.get(&op.name);
+            let window = input.window(&op.name);
             let theta_now = window.and_then(|w| w.cache_hit_rate);
             let tau_now = window.and_then(|w| w.access_latency_us);
             new_theta.insert(op.name.clone(), theta_now);
@@ -323,11 +323,9 @@ mod tests {
             );
             windows.insert("agg".to_string(), agg);
             windows.insert("sink".to_string(), window(0.05, 100.0, 100_000.0, 0.0));
-            let next = self.justin.decide(&PolicyInput {
-                meta: &self.meta,
-                windows: &windows,
-                current: &self.current,
-            });
+            let next = self
+                .justin
+                .decide(&PolicyInput::new(&self.meta, &windows, &self.current));
             self.current = next.clone();
             next
         }
@@ -343,11 +341,7 @@ mod tests {
         windows.insert("map".into(), window(0.9, 1000.0, 700.0, 1000.0));
         windows.insert("sink".into(), window(0.0, 0.0, 1.0, 0.0));
         let mut justin = Justin::new(ScalerConfig::default());
-        let next = justin.decide(&PolicyInput {
-            meta: &meta,
-            windows: &windows,
-            current: &current,
-        });
+        let next = justin.decide(&PolicyInput::new(&meta, &windows, &current));
         assert_eq!(next.get("map").memory_level, None, "map gets ⊥");
         assert_eq!(next.get("sink").memory_level, None, "sink gets ⊥ too");
         assert!(next.parallelism("map") > 1, "DS2 scale-out still applies");
@@ -513,16 +507,8 @@ mod tests {
             stateful_window(0.97, 28_000.0, 30_000.0, 0.55, 1400.0),
         );
         windows.insert("sink".into(), window(0.02, 100.0, 1e6, 0.0));
-        let d1_j = justin.decide(&PolicyInput {
-            meta: &meta,
-            windows: &windows,
-            current: &cur_j,
-        });
-        let d1_d = ds2.decide(&PolicyInput {
-            meta: &meta,
-            windows: &windows,
-            current: &cur_d,
-        });
+        let d1_j = justin.decide(&PolicyInput::new(&meta, &windows, &cur_j));
+        let d1_d = ds2.decide(&PolicyInput::new(&meta, &windows, &cur_d));
         assert_eq!(d1_j.parallelism("sessions"), 1, "Justin scales up");
         assert_eq!(d1_j.get("sessions").memory_level, Some(1));
         assert!(d1_d.parallelism("sessions") > 1, "DS2 scales out");
@@ -535,11 +521,7 @@ mod tests {
             "sessions".into(),
             stateful_window(0.9, 48_000.0, 52_000.0, 0.92, 300.0),
         );
-        let d2_j = justin.decide(&PolicyInput {
-            meta: &meta,
-            windows: &windows,
-            current: &cur_j,
-        });
+        let d2_j = justin.decide(&PolicyInput::new(&meta, &windows, &cur_j));
         let final_j = d2_j.parallelism("sessions");
 
         let mut windows_d = windows.clone();
@@ -547,11 +529,7 @@ mod tests {
             "sessions".into(),
             stateful_window(0.9, 48_000.0, 30_000.0, 0.55, 1400.0),
         );
-        let d2_d = ds2.decide(&PolicyInput {
-            meta: &meta,
-            windows: &windows_d,
-            current: &cur_d,
-        });
+        let d2_d = ds2.decide(&PolicyInput::new(&meta, &windows_d, &cur_d));
         let final_d = d2_d.parallelism("sessions");
         assert!(
             final_j < final_d,

@@ -66,78 +66,114 @@ impl GraphMeta {
     }
 }
 
-/// Everything a policy sees at decision time `t`.
+/// Everything a policy sees at decision time `t`. Constructed once per
+/// decision round ([`PolicyInput::new`]) and read through accessors, so the
+/// observation is immutable to policies and its representation can evolve
+/// without touching every policy.
 pub struct PolicyInput<'a> {
-    pub meta: &'a GraphMeta,
+    meta: &'a GraphMeta,
+    windows: &'a BTreeMap<String, OperatorWindow>,
+    current: &'a ScalingAssignment,
+}
+
+impl<'a> PolicyInput<'a> {
+    pub fn new(
+        meta: &'a GraphMeta,
+        windows: &'a BTreeMap<String, OperatorWindow>,
+        current: &'a ScalingAssignment,
+    ) -> Self {
+        Self {
+            meta,
+            windows,
+            current,
+        }
+    }
+
+    /// Graph shape: operators, statefulness, upstream edges.
+    pub fn meta(&self) -> &'a GraphMeta {
+        self.meta
+    }
+
     /// Decision-window metrics per operator.
-    pub windows: &'a BTreeMap<String, OperatorWindow>,
+    pub fn windows(&self) -> &'a BTreeMap<String, OperatorWindow> {
+        self.windows
+    }
+
+    /// One operator's decision window, if it reported this round.
+    pub fn window(&self, op: &str) -> Option<&'a OperatorWindow> {
+        self.windows.get(op)
+    }
+
     /// The configuration C^{t-1}.
-    pub current: &'a ScalingAssignment,
+    pub fn current(&self) -> &'a ScalingAssignment {
+        self.current
+    }
 }
 
 /// An auto-scaling policy.
 pub trait Policy: Send {
     fn name(&self) -> &'static str;
+
     /// Compute the next configuration C^t.
     fn decide(&mut self, input: &PolicyInput) -> ScalingAssignment;
+
     /// Reset decision history (new experiment).
     fn reset(&mut self) {}
-}
 
-/// The reconfiguration trigger (§4: "high busyness for one of its operators
-/// in addition to backpressure from its upstream operator(s)"), plus the
-/// §5 busyness band [low, high] for scale-down.
-pub fn should_trigger(
-    meta: &GraphMeta,
-    windows: &BTreeMap<String, OperatorWindow>,
-    current: &ScalingAssignment,
-    cfg: &ScalerConfig,
-) -> bool {
-    for op in &meta.ops {
-        if op.kind == OpKind::Source {
-            continue;
-        }
-        let Some(w) = windows.get(&op.name) else {
-            continue;
-        };
-        // Overload: operator hot and its upstream pushes back.
-        if w.busyness > cfg.busy_high {
-            let upstream_backpressure = op.upstream.iter().any(|u| {
-                windows
-                    .get(u)
-                    .map(|uw| uw.backpressure > 0.05)
-                    .unwrap_or(false)
-            });
-            if upstream_backpressure || w.backpressure > 0.05 {
-                return true;
+    /// The reconfiguration trigger (§4: "high busyness for one of its
+    /// operators in addition to backpressure from its upstream
+    /// operator(s)"), plus the §5 busyness band [low, high] for
+    /// scale-down. Provided: DS2 and Justin share the paper's trigger;
+    /// a policy with its own trigger condition overrides this.
+    fn should_trigger(&self, input: &PolicyInput, cfg: &ScalerConfig) -> bool {
+        let (meta, windows) = (input.meta(), input.windows());
+        for op in &meta.ops {
+            if op.kind == OpKind::Source {
+                continue;
+            }
+            let Some(w) = windows.get(&op.name) else {
+                continue;
+            };
+            // Overload: operator hot and its upstream pushes back.
+            if w.busyness > cfg.busy_high {
+                let upstream_backpressure = op.upstream.iter().any(|u| {
+                    windows
+                        .get(u)
+                        .map(|uw| uw.backpressure > 0.05)
+                        .unwrap_or(false)
+                });
+                if upstream_backpressure || w.backpressure > 0.05 {
+                    return true;
+                }
+            }
+            // Underload: a scalable operator far below the band with
+            // something to give back — extra tasks, or managed memory above
+            // level 0 (the vertical dimension Justin can reclaim).
+            let reclaimable = input.current().parallelism(&op.name) > 1
+                || input
+                    .current()
+                    .get(&op.name)
+                    .memory_level
+                    .is_some_and(|level| level > 0);
+            if op.kind == OpKind::Transform
+                && w.busyness < cfg.busy_low
+                && reclaimable
+                && w.observed_rate > 0.0
+            {
+                // Only trigger scale-down when nothing is overloaded.
+                let any_hot = meta.ops.iter().any(|o| {
+                    windows
+                        .get(&o.name)
+                        .map(|x| x.busyness > cfg.busy_high)
+                        .unwrap_or(false)
+                });
+                if !any_hot {
+                    return true;
+                }
             }
         }
-        // Underload: a scalable operator far below the band with something
-        // to give back — extra tasks, or managed memory above level 0 (the
-        // vertical dimension Justin can reclaim).
-        let reclaimable = current.parallelism(&op.name) > 1
-            || current
-                .get(&op.name)
-                .memory_level
-                .is_some_and(|level| level > 0);
-        if op.kind == OpKind::Transform
-            && w.busyness < cfg.busy_low
-            && reclaimable
-            && w.observed_rate > 0.0
-        {
-            // Only trigger scale-down when nothing is overloaded.
-            let any_hot = meta.ops.iter().any(|o| {
-                windows
-                    .get(&o.name)
-                    .map(|x| x.busyness > cfg.busy_high)
-                    .unwrap_or(false)
-            });
-            if !any_hot {
-                return true;
-            }
-        }
+        false
     }
-    false
 }
 
 /// How a reconfiguration C^{t-1} → C^t can be enacted, cheapest first.
@@ -293,6 +329,26 @@ mod tests {
     use super::*;
     use crate::graph::OpScaling;
 
+    /// Minimal policy: exercises the provided `should_trigger` untouched.
+    struct NoOpPolicy;
+    impl Policy for NoOpPolicy {
+        fn name(&self) -> &'static str {
+            "noop"
+        }
+        fn decide(&mut self, input: &PolicyInput) -> ScalingAssignment {
+            input.current().clone()
+        }
+    }
+
+    fn triggers(
+        meta: &GraphMeta,
+        windows: &BTreeMap<String, OperatorWindow>,
+        current: &ScalingAssignment,
+        cfg: &ScalerConfig,
+    ) -> bool {
+        NoOpPolicy.should_trigger(&PolicyInput::new(meta, windows, current), cfg)
+    }
+
     #[test]
     fn trigger_on_hot_operator_with_backpressure() {
         let meta = linear_meta(&[("map", false)]);
@@ -308,7 +364,7 @@ mod tests {
         windows.insert("source".to_string(), src);
         windows.insert("map".to_string(), window(0.95, 1000.0, 1050.0, 1000.0));
         windows.insert("sink".to_string(), window(0.1, 1000.0, 10_000.0, 0.0));
-        assert!(should_trigger(&meta, &windows, &current, &cfg));
+        assert!(triggers(&meta, &windows, &current, &cfg));
     }
 
     #[test]
@@ -324,7 +380,7 @@ mod tests {
         windows.insert("source".to_string(), window(0.5, 1000.0, 2000.0, 1000.0));
         windows.insert("map".to_string(), window(0.5, 1000.0, 2000.0, 1000.0));
         windows.insert("sink".to_string(), window(0.3, 1000.0, 3000.0, 0.0));
-        assert!(!should_trigger(&meta, &windows, &current, &cfg));
+        assert!(!triggers(&meta, &windows, &current, &cfg));
     }
 
     #[test]
@@ -340,16 +396,16 @@ mod tests {
         windows.insert("source".to_string(), window(0.2, 100.0, 500.0, 100.0));
         windows.insert("map".to_string(), window(0.05, 100.0, 2000.0, 100.0));
         windows.insert("sink".to_string(), window(0.05, 100.0, 2000.0, 0.0));
-        assert!(should_trigger(&meta, &windows, &current, &cfg));
+        assert!(triggers(&meta, &windows, &current, &cfg));
         // …but not at p=1 with level-0 memory (nothing left to release).
         let mut a1 = ScalingAssignment::default();
         a1.set("map", OpScaling::new(1, Some(0)));
-        assert!(!should_trigger(&meta, &windows, &a1, &cfg));
+        assert!(!triggers(&meta, &windows, &a1, &cfg));
         // A held memory level alone is reclaimable → triggers.
         let mut a_mem = ScalingAssignment::default();
         a_mem.set("map", OpScaling::new(1, Some(2)));
         assert!(
-            should_trigger(&meta, &windows, &a_mem, &cfg),
+            triggers(&meta, &windows, &a_mem, &cfg),
             "idle op holding managed memory above level 0 must trigger"
         );
     }
@@ -368,12 +424,12 @@ mod tests {
         src.backpressure = 0.3;
         windows.insert("source".to_string(), src);
         assert!(
-            !should_trigger(&meta, &windows, &current, &cfg),
+            !triggers(&meta, &windows, &current, &cfg),
             "no operator windows → no decision"
         );
         // A hot op present alongside a missing one still triggers.
         windows.insert("map".to_string(), window(0.95, 1000.0, 1050.0, 1000.0));
-        assert!(should_trigger(&meta, &windows, &current, &cfg));
+        assert!(triggers(&meta, &windows, &current, &cfg));
     }
 
     #[test]

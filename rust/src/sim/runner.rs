@@ -8,7 +8,7 @@ use super::profiles::SimQuery;
 use crate::config::Config;
 use crate::graph::{OpKind, ScalingAssignment};
 use crate::metrics::window::{OperatorSample, WindowAggregator};
-use crate::scaler::{plan_reconfig, should_trigger, Policy, ReconfigTier};
+use crate::scaler::{plan_reconfig, Policy, PolicyInput, ReconfigTier};
 use crate::util::rng::Rng;
 
 /// Non-managed memory footprint of one task slot, MB (heap + network +
@@ -38,6 +38,10 @@ pub struct TracePoint {
     /// compaction work into `put_us`); live traces fill this from the
     /// per-operator `stall_seconds` samples.
     pub stall_s: f64,
+    /// Failure-recovery downtime seconds accrued during this sample interval
+    /// (rolling back to the last checkpoint and redeploying). Zero unless
+    /// `sim.failure_mtbf_s` enables injected failures.
+    pub recovery_s: f64,
 }
 
 /// A reconfiguration the policy enacted.
@@ -60,6 +64,8 @@ pub struct AutoscaleTrace {
     pub target_rate: f64,
     pub points: Vec<TracePoint>,
     pub reconfigs: Vec<ReconfigEvent>,
+    /// Virtual times at which an injected task failure struck.
+    pub failures: Vec<f64>,
     pub final_assignment: ScalingAssignment,
     /// First time the achieved rate reaches [`CONVERGENCE_FRACTION`] of the
     /// offered rate and stays there.
@@ -103,6 +109,20 @@ impl AutoscaleTrace {
     /// Total modeled reconfiguration downtime over the run, s.
     pub fn total_downtime_s(&self) -> f64 {
         self.reconfigs.iter().map(|r| r.downtime_s).sum()
+    }
+
+    /// Cumulative failure-recovery downtime over the run, s. A plain sum
+    /// like [`stall_seconds`](Self::stall_seconds): each point carries the
+    /// seconds accrued during its interval.
+    pub fn recovery_seconds(&self) -> f64 {
+        self.points.iter().map(|p| p.recovery_s).sum()
+    }
+
+    /// Mean time to recover: recovery downtime per injected failure. `None`
+    /// when no failure struck.
+    pub fn mttr_s(&self) -> Option<f64> {
+        (!self.failures.is_empty())
+            .then(|| self.recovery_seconds() / self.failures.len() as f64)
     }
 
     /// Reconfiguration count per enactment tier: (in-place, partial, full).
@@ -179,20 +199,44 @@ pub fn run_autoscaling(
     let window_samples = (cfg.scaler.decision_window_s as f64 / granularity).ceil() as u32;
     let mut points = Vec::new();
     let mut reconfigs = Vec::new();
+    let mut failures = Vec::new();
     // Start in "stabilization" so the first window starts clean.
     let mut stabilize_until = 0.0f64;
     let mut downtime_until = 0.0f64;
+    let mut recovery_until = 0.0f64;
+    // Injected failures draw from their own seeded stream so enabling them
+    // does not perturb the measurement-noise sequence of a crash-free run.
+    let mttf = cfg.sim.failure_mtbf_s;
+    let mut failure_rng = Rng::new(cfg.sim.seed ^ 0xFA17_FA17);
+    let mut next_failure_at = if mttf > 0.0 {
+        failure_rng.exp(mttf)
+    } else {
+        f64::INFINITY
+    };
     let mut t = 0.0f64;
     policy.reset();
 
     while t < cfg.sim.duration_s as f64 {
         t += granularity;
+        // A failure rolls the job back to its last checkpoint and redeploys:
+        // the engine charges the recovery downtime (bounded by the partial
+        // tier, see `SimConfig::validate`) and the trace records it.
+        if t >= next_failure_at {
+            failures.push(t);
+            recovery_until = t + cfg.sim.recovery_downtime_s;
+            downtime_until = downtime_until.max(recovery_until);
+            stabilize_until = stabilize_until
+                .max(recovery_until + cfg.scaler.stabilization_s as f64);
+            next_failure_at = t + failure_rng.exp(mttf);
+        }
+        let recovery_s =
+            (recovery_until - (t - granularity)).clamp(0.0, granularity);
         let (cores, memory_mb) =
             resources(query, &assignment, cfg.cluster.managed_mb_per_slot);
         let offered = query.rate_at(t);
         if t < downtime_until {
-            // Reconfiguration in progress: no processing (savepoint +
-            // redeploy), metrics paused.
+            // Reconfiguration or recovery in progress: no processing
+            // (savepoint/rollback + redeploy), metrics paused.
             points.push(TracePoint {
                 t_s: t,
                 rate: 0.0,
@@ -200,6 +244,7 @@ pub fn run_autoscaling(
                 cores,
                 memory_mb,
                 stall_s: 0.0,
+                recovery_s,
             });
             continue;
         }
@@ -220,6 +265,7 @@ pub fn run_autoscaling(
             cores,
             memory_mb,
             stall_s: 0.0,
+            recovery_s,
         });
 
         if t < stabilize_until {
@@ -247,12 +293,9 @@ pub fn run_autoscaling(
             .unwrap_or(0);
         if have >= window_samples {
             let windows = aggregator.close();
-            if should_trigger(&meta, &windows, &assignment, &cfg.scaler) {
-                let next = policy.decide(&crate::scaler::PolicyInput {
-                    meta: &meta,
-                    windows: &windows,
-                    current: &assignment,
-                });
+            let input = PolicyInput::new(&meta, &windows, &assignment);
+            if policy.should_trigger(&input, &cfg.scaler) {
+                let next = policy.decide(&input);
                 if next != assignment {
                     let rplan = plan_reconfig(&meta, &assignment, &next);
                     let downtime_s = match rplan.tier {
@@ -302,6 +345,7 @@ pub fn run_autoscaling(
         target_rate: query.target_rate,
         points,
         reconfigs,
+        failures,
         final_assignment: assignment,
         converged_at_s: converged_at,
     }
@@ -572,6 +616,46 @@ mod tests {
             trace.total_downtime_s()
                 <= trace.steps() as f64 * cfg.sim.reconfig_downtime_s
         );
+    }
+
+    #[test]
+    fn injected_failures_charge_recovery_downtime() {
+        let q = query_profile("q1").unwrap();
+        let mut cfg = fast_cfg();
+        cfg.sim.failure_mtbf_s = 300.0;
+        let mut policy = Ds2::new(cfg.scaler.clone());
+        let trace = run_autoscaling(&q, &mut policy, &cfg);
+        assert!(
+            !trace.failures.is_empty(),
+            "MTBF 300 s over 1500 s must strike at least once"
+        );
+        let rec = trace.recovery_seconds();
+        assert!(rec > 0.0, "recovery downtime accounted");
+        // Per-failure downtime is bounded by the configured recovery cost
+        // (overlapping recoveries merge, so the mean can only be lower).
+        let mttr = trace.mttr_s().unwrap();
+        assert!(
+            mttr <= cfg.sim.recovery_downtime_s + 1e-9,
+            "MTTR {mttr} vs configured {}",
+            cfg.sim.recovery_downtime_s
+        );
+        // The paper's tiering argument: recovering from a checkpoint must
+        // not cost more than a partial redeploy (enforced by validate()).
+        assert!(cfg.sim.recovery_downtime_s <= cfg.sim.reconfig_downtime_partial_s);
+        // Recovery shows up as zero-rate points.
+        assert!(trace.points.iter().any(|p| p.recovery_s > 0.0 && p.rate == 0.0));
+        // Deterministic under the seed, independent of the noise stream.
+        let mut policy2 = Ds2::new(cfg.scaler.clone());
+        let trace2 = run_autoscaling(&q, &mut policy2, &cfg);
+        assert_eq!(trace.failures, trace2.failures);
+    }
+
+    #[test]
+    fn failures_disabled_by_default() {
+        let (_, trace) = run("q1", ScalerKind::Ds2);
+        assert!(trace.failures.is_empty());
+        assert_eq!(trace.recovery_seconds(), 0.0);
+        assert_eq!(trace.mttr_s(), None);
     }
 
     #[test]

@@ -30,6 +30,80 @@ fn engine_cfg() -> Config {
     cfg
 }
 
+/// Per-key running sum over `Record::Pair`s. Commutative and associative,
+/// so the final state is independent of arrival order — but not of
+/// duplication or loss, which is exactly what the checkpoint tests below
+/// must be able to detect.
+struct SumOp;
+
+impl justin::engine::Operator for SumOp {
+    fn on_record(
+        &mut self,
+        _port: usize,
+        rec: justin::graph::Record,
+        ctx: &mut justin::engine::OpCtx,
+    ) -> anyhow::Result<()> {
+        if let justin::graph::Record::Pair { key, value, .. } = rec {
+            let prev = ctx
+                .state_get(key, b"sum")?
+                .map(|v| i64::from_be_bytes(v.as_ref().try_into().unwrap()))
+                .unwrap_or(0);
+            ctx.state_put(key, b"sum", &(prev + value).to_be_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+/// source(×2) —hash→ sum(×2, stateful) —rebalance→ sink, fed by
+/// deterministic rate-limited pair generators: replaying any suffix from a
+/// checkpointed offset regenerates the exact records a crash destroyed.
+fn sum_job(rate: f64, per_source: u64) -> justin::engine::StreamJob {
+    use justin::engine::{OpFactory, RateLimitedSource, SinkOp, StreamJob};
+    use justin::graph::{LogicalGraph, OpKind, Partitioning, Record};
+    use std::sync::Arc;
+
+    let mut graph = LogicalGraph::new("faulty");
+    let src = graph.add_op("source", OpKind::Source, false, vec![], 2);
+    let sum = graph.add_op(
+        "sum",
+        OpKind::Transform,
+        true,
+        vec![(
+            src,
+            Partitioning::Hash(Arc::new(|r: &Record| match r {
+                Record::Pair { key, .. } => *key,
+                _ => 0,
+            })),
+        )],
+        2,
+    );
+    graph.add_op(
+        "sink",
+        OpKind::Sink,
+        false,
+        vec![(sum, Partitioning::Rebalance)],
+        1,
+    );
+    StreamJob {
+        graph,
+        factories: vec![
+            OpFactory::source(move |subtask, _| {
+                let base = subtask as u64;
+                Box::new(
+                    RateLimitedSource::new(rate, move |seq| Record::Pair {
+                        key: (seq * 2 + base) % 257,
+                        value: (seq % 13) as i64 + 1,
+                        ts: seq,
+                    })
+                    .bounded(per_source),
+                ) as _
+            }),
+            OpFactory::transform(|_, _| Box::new(SumOp)),
+            OpFactory::transform(|_, _| Box::new(SinkOp)),
+        ],
+    }
+}
+
 /// Event conservation through a rescale: run q5 bounded, savepoint
 /// mid-stream, restore at a different parallelism and memory level, and
 /// check the window counts that fire downstream account for every bid.
@@ -193,11 +267,7 @@ fn justin_without_storage_signals_matches_ds2_parallelism() {
         }
         a
     };
-    let input = justin::scaler::PolicyInput {
-        meta: &meta,
-        windows: &windows,
-        current: &current,
-    };
+    let input = justin::scaler::PolicyInput::new(&meta, &windows, &current);
     let mut ds2 = Ds2::new(cfg.clone());
     let mut justin = Justin::new(cfg);
     let d = ds2.decide(&input);
@@ -430,12 +500,8 @@ fn chained_attribution_drives_same_ds2_decision_as_unchained() {
         windows.insert("sink".to_string(), mk(0.01, 1e9, 0.0));
         let current = ScalingAssignment::initial(&job.graph);
         let mut ds2 = Ds2::new(scfg.clone());
-        ds2.decide(&PolicyInput {
-            meta: &meta,
-            windows: &windows,
-            current: &current,
-        })
-        .parallelism("work")
+        ds2.decide(&PolicyInput::new(&meta, &windows, &current))
+            .parallelism("work")
     };
     let p_unchained = decide(tr_unchained);
     let p_chained = decide(tr_chained);
@@ -470,5 +536,178 @@ fn config_file_drives_simulation() {
             .parallelism("currency_map")
             <= 8,
         "max_parallelism respected"
+    );
+}
+
+/// The fault-tolerance acceptance property: a fixed-seed fault-injection
+/// run with 3 task kills, recovering each time from the latest periodic
+/// checkpoint (sources replayed from checkpointed offsets), finishes with
+/// state byte-identical to a crash-free run of the same job.
+#[test]
+fn seeded_kill_and_recover_matches_crash_free_state() {
+    use justin::engine::run_supervised;
+    use std::time::Duration;
+
+    // Crash-free reference: no checkpoints, no faults.
+    let reference: Savepoint = {
+        let job = sum_job(15_000.0, 30_000);
+        let mut jm = JobManager::new(engine_cfg());
+        let reg = Registry::new();
+        let a = ScalingAssignment::initial(&job.graph);
+        jm.deploy(&job, &a, &reg, None)
+            .unwrap()
+            .wait_drained()
+            .unwrap()
+    };
+    assert!(reference.total_entries() > 0, "reference run must build state");
+
+    // Supervised run: checkpoint every 25 ms; kill three random live tasks
+    // at seeded 150–350 ms intervals (the first lands well after the first
+    // checkpoint completes, so every failure has a recovery point). CI
+    // sweeps FAULT_SEED over a fixed matrix; the delay bounds hold for any
+    // seed, only victims and exact timings vary.
+    let seed: u64 = std::env::var("FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xFA17);
+    let mut cfg = engine_cfg();
+    cfg.checkpoint.enabled = true;
+    cfg.checkpoint.interval_s = 0.025;
+    cfg.checkpoint.retain = 3;
+    cfg.engine.fault.enabled = true;
+    cfg.engine.fault.seed = seed;
+    cfg.engine.fault.kills = 3;
+    cfg.engine.fault.min_delay_ms = 150;
+    cfg.engine.fault.max_delay_ms = 350;
+    let job = sum_job(15_000.0, 30_000);
+    let mut jm = JobManager::new(cfg);
+    let reg = Registry::new();
+    let a = ScalingAssignment::initial(&job.graph);
+    let report = run_supervised(&mut jm, &job, &a, &reg).unwrap();
+
+    // Persist the recovery trace before asserting anything, so a failing
+    // seed leaves its evidence behind for the CI artifact upload.
+    let trace = format!(
+        "seed: {seed:#x}\nkills: {}\ncheckpoints_completed: {}\n\
+         checkpoints_discarded: {}\nfinal_entries: {}\nrecoveries:\n{}",
+        report.kills,
+        report.checkpoints_completed,
+        report.checkpoints_discarded,
+        report.final_state.total_entries(),
+        report
+            .recoveries
+            .iter()
+            .map(|r| {
+                format!(
+                    "  at={:?} downtime={:?} restored_epoch={} failure={}\n",
+                    r.at, r.downtime, r.restored_epoch, r.failure
+                )
+            })
+            .collect::<String>()
+    );
+    let trace_path = std::path::PathBuf::from(env!("CARGO_TARGET_TMPDIR"))
+        .join(format!("recovery-trace-{seed}.txt"));
+    std::fs::write(&trace_path, trace).unwrap();
+
+    assert!(report.kills >= 3, "only {} of 3 kills delivered", report.kills);
+    assert!(
+        !report.recoveries.is_empty(),
+        "kills must force at least one recovery"
+    );
+    assert!(report.checkpoints_completed >= 1);
+    for r in &report.recoveries {
+        assert!(r.restored_epoch >= 1);
+        assert!(
+            r.downtime < Duration::from_secs(5),
+            "recovery took {:?}",
+            r.downtime
+        );
+    }
+    assert_eq!(
+        report.final_state, reference,
+        "recovered state must be byte-identical to the crash-free run"
+    );
+}
+
+/// Checkpoints interleave safely with both reconfiguration tiers: an
+/// in-place memory resize never disturbs an in-flight epoch, and a partial
+/// redeploy at worst aborts the epoch that straddles the rewire — the next
+/// epoch completes over the new task set and is a valid recovery point.
+#[test]
+fn checkpoints_interleave_with_reconfiguration() {
+    use justin::engine::{CheckpointCoordinator, RunningJob};
+    use std::time::{Duration, Instant};
+
+    fn begin(running: &RunningJob, coord: &mut CheckpointCoordinator, epoch: u64) {
+        let needed = running.trigger_checkpoint(epoch);
+        assert!(needed > 0, "sources must accept the epoch {epoch} barrier");
+        coord.begin(epoch, needed);
+    }
+
+    fn await_install(running: &RunningJob, coord: &mut CheckpointCoordinator, epoch: u64) {
+        let t0 = Instant::now();
+        loop {
+            for ack in running.poll_acks() {
+                if coord.on_ack(ack) == Some(epoch) {
+                    return;
+                }
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(20),
+                "epoch {epoch} never completed"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    // Long-lived job: ~10 s of records if left alone, so every phase below
+    // happens mid-stream.
+    let job = sum_job(50_000.0, 500_000);
+    let mut jm = JobManager::new(engine_cfg());
+    let reg = Registry::new();
+    let assignment = ScalingAssignment::initial(&job.graph);
+    let mut running = jm.deploy(&job, &assignment, &reg, None).unwrap();
+    let mut coord = CheckpointCoordinator::new("faulty", 4, &reg);
+
+    // Epoch 1: steady state.
+    begin(&running, &mut coord, 1);
+    await_install(&running, &mut coord, 1);
+
+    // Tier 1 (in-place): resize managed memory while epoch 2 is in flight.
+    // Resizing restarts nothing, so the epoch still completes.
+    begin(&running, &mut coord, 2);
+    let resized = running.resize_memory("sum", 316);
+    assert!(resized > 0, "in-place resize must reach the LSM tasks");
+    await_install(&running, &mut coord, 2);
+
+    // Tier 2 (partial redeploy): rescale sum 2→3 while epoch 3 is in
+    // flight. The epoch either squeaked through before the rewire or was
+    // aborted by it; the coordinator must never install a torn snapshot.
+    begin(&running, &mut coord, 3);
+    let mut a2 = assignment.clone();
+    a2.set("sum", OpScaling::new(3, Some(1)));
+    jm.redeploy_op(&mut running, &job, "sum", &a2).unwrap();
+    for ack in running.poll_acks() {
+        coord.on_ack(ack);
+    }
+    assert_eq!(running.num_tasks(), 6, "2 sources + 3 sums + 1 sink");
+
+    // Epoch 4 completes over the new task set…
+    begin(&running, &mut coord, 4);
+    await_install(&running, &mut coord, 4);
+    assert!(coord.completed() >= 3, "epochs 1, 2 and 4 must complete");
+    let snap = coord.latest().unwrap();
+    assert_eq!(snap.epoch(), 4, "latest snapshot is the post-reconfig epoch");
+    let entries = snap.open("faulty").unwrap().total_entries();
+    assert!(entries > 0);
+
+    // …and is a valid recovery point at the new scale.
+    running.abandon();
+    let reg2 = Registry::new();
+    let recovered = jm.deploy_from_snapshot(&job, &a2, &reg2, snap).unwrap();
+    let final_state = recovered.stop_with_savepoint().unwrap();
+    assert!(
+        final_state.total_entries() >= entries,
+        "recovered job must carry the snapshot state forward"
     );
 }
