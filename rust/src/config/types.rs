@@ -183,6 +183,13 @@ pub struct CheckpointConfig {
     pub interval_s: f64,
     /// Completed epochs to keep; older ones are pruned after each install.
     pub retain: usize,
+    /// Per-epoch deadline, seconds: a pending epoch older than this is
+    /// aborted (its barrier is stuck — e.g. a task died holding it). 0
+    /// disables the deadline.
+    pub timeout_s: f64,
+    /// Snapshot store directory. Empty = in-memory store; otherwise epochs
+    /// are written to disk (`FsSnapshotStore`) and survive restarts.
+    pub dir: String,
 }
 
 impl Default for CheckpointConfig {
@@ -191,6 +198,8 @@ impl Default for CheckpointConfig {
             enabled: false,
             interval_s: 30.0,
             retain: 3,
+            timeout_s: 0.0,
+            dir: String::new(),
         }
     }
 }
@@ -209,6 +218,8 @@ pub struct FaultConfig {
     pub min_delay_ms: u64,
     /// Maximum delay before each kill, milliseconds.
     pub max_delay_ms: u64,
+    /// Snapshot-storage fault injection (`[engine.fault.store]`).
+    pub store: StoreFaultConfig,
 }
 
 impl Default for FaultConfig {
@@ -219,6 +230,39 @@ impl Default for FaultConfig {
             kills: 3,
             min_delay_ms: 20,
             max_delay_ms: 200,
+            store: StoreFaultConfig::default(),
+        }
+    }
+}
+
+/// Seeded snapshot-storage fault injection (`[engine.fault.store]`): wraps
+/// the job's snapshot store so puts/gets fail transiently with probability
+/// `error_p`, and a bounded budget of torn writes and bit flips silently
+/// corrupts installed epochs (each firing with probability `fault_p` per
+/// put). Uses a dedicated RNG stream derived from `engine.fault.seed`, so
+/// enabling it does not perturb the task-kill schedule.
+#[derive(Debug, Clone)]
+pub struct StoreFaultConfig {
+    pub enabled: bool,
+    /// Probability a put/get fails with a retryable transient error.
+    pub error_p: f64,
+    /// Probability an armed corruption (torn write / bit flip) fires on a
+    /// given put while its budget lasts.
+    pub fault_p: f64,
+    /// Torn-write budget: puts truncated at a random byte.
+    pub torn_writes: u32,
+    /// Bit-flip budget: puts with one random bit inverted.
+    pub bit_flips: u32,
+}
+
+impl Default for StoreFaultConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            error_p: 0.05,
+            fault_p: 0.25,
+            torn_writes: 1,
+            bit_flips: 1,
         }
     }
 }
@@ -311,6 +355,13 @@ pub struct SimConfig {
     /// the last checkpoint and redeploys through the partial tier, so this
     /// must not exceed `reconfig_downtime_partial_s`.
     pub recovery_downtime_s: f64,
+    /// Probability a recovery finds its newest snapshot corrupt and must
+    /// fall back one more epoch (applied repeatedly: depth is geometric,
+    /// capped). 0 disables degraded recoveries.
+    pub store_fault_p: f64,
+    /// Extra downtime charged per fallback level during a degraded
+    /// recovery (older epoch ⇒ longer source replay), seconds.
+    pub recovery_fallback_extra_s: f64,
 }
 
 impl Default for SimConfig {
@@ -327,6 +378,8 @@ impl Default for SimConfig {
             reconfig_downtime_inplace_s: 0.0,
             failure_mtbf_s: 0.0,
             recovery_downtime_s: 6.0,
+            store_fault_p: 0.0,
+            recovery_fallback_extra_s: 2.0,
         }
     }
 }
@@ -482,9 +535,16 @@ impl Config {
             "engine.fault.kills",
             "engine.fault.min_delay_ms",
             "engine.fault.max_delay_ms",
+            "engine.fault.store.enabled",
+            "engine.fault.store.error_p",
+            "engine.fault.store.fault_p",
+            "engine.fault.store.torn_writes",
+            "engine.fault.store.bit_flips",
             "checkpoint.enabled",
             "checkpoint.interval_s",
             "checkpoint.retain",
+            "checkpoint.timeout_s",
+            "checkpoint.dir",
             "lsm.memtable_max_mb",
             "lsm.block_size_kb",
             "lsm.l0_compaction_trigger",
@@ -505,6 +565,8 @@ impl Config {
             "sim.reconfig_downtime_inplace_s",
             "sim.failure_mtbf_s",
             "sim.recovery_downtime_s",
+            "sim.store_fault_p",
+            "sim.recovery_fallback_extra_s",
             "scenario.query",
             "scenario.pattern",
             "scenario.base",
@@ -620,12 +682,46 @@ impl Config {
             c.engine.fault.max_delay_ms,
             u64
         );
+        if let Some(v) = doc.get("engine.fault.store.enabled") {
+            c.engine.fault.store.enabled = v
+                .as_bool()
+                .context("engine.fault.store.enabled must be a bool")?;
+        }
+        get_f64!(
+            doc,
+            "engine.fault.store.error_p",
+            c.engine.fault.store.error_p
+        );
+        get_f64!(
+            doc,
+            "engine.fault.store.fault_p",
+            c.engine.fault.store.fault_p
+        );
+        get_num!(
+            doc,
+            "engine.fault.store.torn_writes",
+            c.engine.fault.store.torn_writes,
+            u32
+        );
+        get_num!(
+            doc,
+            "engine.fault.store.bit_flips",
+            c.engine.fault.store.bit_flips,
+            u32
+        );
 
         if let Some(v) = doc.get("checkpoint.enabled") {
             c.checkpoint.enabled = v.as_bool().context("checkpoint.enabled must be a bool")?;
         }
         get_f64!(doc, "checkpoint.interval_s", c.checkpoint.interval_s);
         get_num!(doc, "checkpoint.retain", c.checkpoint.retain, usize);
+        get_f64!(doc, "checkpoint.timeout_s", c.checkpoint.timeout_s);
+        if let Some(v) = doc.get("checkpoint.dir") {
+            c.checkpoint.dir = v
+                .as_str()
+                .context("checkpoint.dir must be a string")?
+                .to_string();
+        }
 
         get_num!(doc, "lsm.memtable_max_mb", c.lsm.memtable_max_mb, u64);
         get_num!(doc, "lsm.block_size_kb", c.lsm.block_size_kb, u64);
@@ -675,6 +771,12 @@ impl Config {
         );
         get_f64!(doc, "sim.failure_mtbf_s", c.sim.failure_mtbf_s);
         get_f64!(doc, "sim.recovery_downtime_s", c.sim.recovery_downtime_s);
+        get_f64!(doc, "sim.store_fault_p", c.sim.store_fault_p);
+        get_f64!(
+            doc,
+            "sim.recovery_fallback_extra_s",
+            c.sim.recovery_fallback_extra_s
+        );
 
         if let Some(v) = doc.get("scenario.query") {
             c.scenario.query = v
@@ -803,6 +905,31 @@ impl Config {
                 self.engine.fault.min_delay_ms
             );
         }
+        if !self.checkpoint.timeout_s.is_finite() || self.checkpoint.timeout_s < 0.0 {
+            bail!(
+                "checkpoint.timeout_s must be >= 0 (0 disables the deadline), got {}",
+                self.checkpoint.timeout_s
+            );
+        }
+        if self.engine.fault.store.enabled && !self.checkpoint.enabled {
+            bail!(
+                "engine.fault.store.enabled requires checkpoint.enabled — there is \
+                 no snapshot traffic to inject faults into otherwise"
+            );
+        }
+        // error_p = 1 would make every retry fail forever; keep it < 1.
+        if !(0.0..1.0).contains(&self.engine.fault.store.error_p) {
+            bail!(
+                "engine.fault.store.error_p must be in [0,1), got {}",
+                self.engine.fault.store.error_p
+            );
+        }
+        if !(0.0..=1.0).contains(&self.engine.fault.store.fault_p) {
+            bail!(
+                "engine.fault.store.fault_p must be in [0,1], got {}",
+                self.engine.fault.store.fault_p
+            );
+        }
         if self.sim.failure_mtbf_s < 0.0 {
             bail!("sim.failure_mtbf_s must be >= 0 (0 disables failures)");
         }
@@ -816,6 +943,22 @@ impl Config {
                 "sim.recovery_downtime_s ({}) must be in [0, reconfig_downtime_partial_s ({})]",
                 self.sim.recovery_downtime_s,
                 self.sim.reconfig_downtime_partial_s
+            );
+        }
+        // p = 1 would mean every recovery falls back forever (the sim caps
+        // the depth, but the intent is a per-level probability).
+        if !(0.0..1.0).contains(&self.sim.store_fault_p) {
+            bail!(
+                "sim.store_fault_p must be in [0,1), got {}",
+                self.sim.store_fault_p
+            );
+        }
+        if !self.sim.recovery_fallback_extra_s.is_finite()
+            || self.sim.recovery_fallback_extra_s < 0.0
+        {
+            bail!(
+                "sim.recovery_fallback_extra_s must be >= 0, got {}",
+                self.sim.recovery_fallback_extra_s
             );
         }
         Ok(())
@@ -1058,6 +1201,81 @@ mod tests {
         let doc = super::super::parse_toml("[sim]\nrecovery_downtime_s = 8.0").unwrap();
         assert!(Config::from_toml(&doc).is_err(), "recovery > partial rejected");
         let doc = super::super::parse_toml("[sim]\nfailure_mtbf_s = -1.0").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn checkpoint_timeout_and_dir_parse_and_validate() {
+        let c = Config::default();
+        assert!((c.checkpoint.timeout_s - 0.0).abs() < 1e-9, "no deadline by default");
+        assert!(c.checkpoint.dir.is_empty(), "in-memory store by default");
+
+        let doc = super::super::parse_toml(
+            "[checkpoint]\nenabled = true\ntimeout_s = 1.5\ndir = \"/tmp/snaps\"",
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert!((c.checkpoint.timeout_s - 1.5).abs() < 1e-9);
+        assert_eq!(c.checkpoint.dir, "/tmp/snaps");
+
+        let doc = super::super::parse_toml("[checkpoint]\ntimeout_s = -1.0").unwrap();
+        assert!(Config::from_toml(&doc).is_err(), "negative deadline rejected");
+    }
+
+    #[test]
+    fn store_fault_section_parses_and_validates() {
+        let c = Config::default();
+        assert!(!c.engine.fault.store.enabled, "store faults are opt-in");
+        assert!((c.engine.fault.store.error_p - 0.05).abs() < 1e-9);
+        assert!((c.engine.fault.store.fault_p - 0.25).abs() < 1e-9);
+        assert_eq!(c.engine.fault.store.torn_writes, 1);
+        assert_eq!(c.engine.fault.store.bit_flips, 1);
+
+        let doc = super::super::parse_toml(
+            "[checkpoint]\nenabled = true\n[engine.fault.store]\nenabled = true\n\
+             error_p = 0.1\nfault_p = 0.5\ntorn_writes = 2\nbit_flips = 3",
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert!(c.engine.fault.store.enabled);
+        assert!((c.engine.fault.store.error_p - 0.1).abs() < 1e-9);
+        assert!((c.engine.fault.store.fault_p - 0.5).abs() < 1e-9);
+        assert_eq!(c.engine.fault.store.torn_writes, 2);
+        assert_eq!(c.engine.fault.store.bit_flips, 3);
+
+        // Store faults without checkpoint traffic are meaningless.
+        let doc = super::super::parse_toml("[engine.fault.store]\nenabled = true").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+        // error_p = 1 would defeat every retry.
+        let doc = super::super::parse_toml(
+            "[checkpoint]\nenabled = true\n[engine.fault.store]\nenabled = true\nerror_p = 1.0",
+        )
+        .unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+        let doc = super::super::parse_toml(
+            "[checkpoint]\nenabled = true\n[engine.fault.store]\nenabled = true\nfault_p = 1.5",
+        )
+        .unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn sim_fallback_knobs_parse_and_validate() {
+        let c = Config::default();
+        assert!((c.sim.store_fault_p - 0.0).abs() < 1e-9, "degraded recovery off by default");
+        assert!((c.sim.recovery_fallback_extra_s - 2.0).abs() < 1e-9);
+
+        let doc = super::super::parse_toml(
+            "[sim]\nstore_fault_p = 0.2\nrecovery_fallback_extra_s = 3.5",
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert!((c.sim.store_fault_p - 0.2).abs() < 1e-9);
+        assert!((c.sim.recovery_fallback_extra_s - 3.5).abs() < 1e-9);
+
+        let doc = super::super::parse_toml("[sim]\nstore_fault_p = 1.0").unwrap();
+        assert!(Config::from_toml(&doc).is_err(), "p = 1 falls back forever");
+        let doc = super::super::parse_toml("[sim]\nrecovery_fallback_extra_s = -2.0").unwrap();
         assert!(Config::from_toml(&doc).is_err());
     }
 

@@ -13,15 +13,20 @@
 //! recovery rolls the whole job back to `latest()` and replays sources
 //! from the checkpointed offsets.
 
-use super::savepoint::{
-    InMemorySnapshotStore, OperatorState, Savepoint, Snapshot, SnapshotStore,
-};
+use super::savepoint::{OperatorState, Savepoint, Snapshot};
+use super::store::{InMemorySnapshotStore, SnapshotStore};
 use crate::config::FaultConfig;
-use crate::metrics::{names, Histo, MetricId, Registry};
+use crate::metrics::{names, Counter, Histo, MetricId, Registry};
 use crate::util::rng::Rng;
-use std::collections::BTreeMap;
+use anyhow::Result;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Store-write retry policy: attempts and capped exponential backoff.
+const PUT_ATTEMPTS: u32 = 5;
+const PUT_BACKOFF_START: Duration = Duration::from_millis(1);
+const PUT_BACKOFF_CAP: Duration = Duration::from_millis(50);
 
 /// One task's acknowledgement of a checkpoint barrier. Sources ack when
 /// they inject the barrier; transforms ack when alignment completes (or
@@ -46,7 +51,9 @@ pub struct CheckpointAck {
 struct PendingEpoch {
     epoch: u64,
     needed: usize,
-    acked: usize,
+    /// Tasks that have acked, by identity — a duplicate or replayed ack
+    /// (e.g. after a rewire race) must not complete the epoch early.
+    acked: BTreeSet<(String, u32)>,
     state: Savepoint,
     /// source op → subtask → offset.
     offsets: BTreeMap<String, BTreeMap<u32, u64>>,
@@ -60,15 +67,39 @@ pub struct CheckpointCoordinator {
     job: String,
     store: Box<dyn SnapshotStore>,
     retain: usize,
+    /// Per-epoch deadline; a pending epoch older than this is aborted by
+    /// [`Self::check_deadline`]. `None` disables the deadline.
+    timeout: Option<Duration>,
     pending: Option<PendingEpoch>,
     completed: u64,
     discarded: u64,
+    store_failures: u64,
     duration_ns: Arc<Histo>,
     size_bytes: Arc<Histo>,
+    completed_total: Arc<Counter>,
+    discarded_total: Arc<Counter>,
+    store_failures_total: Arc<Counter>,
 }
 
 impl CheckpointCoordinator {
     pub fn new(job: impl Into<String>, retain: usize, registry: &Registry) -> Self {
+        Self::with_store(
+            job,
+            retain,
+            registry,
+            Box::new(InMemorySnapshotStore::default()),
+        )
+    }
+
+    /// Build a coordinator installing epochs into the given store (the
+    /// durable [`super::store::FsSnapshotStore`], a fault-injecting
+    /// wrapper, or the in-memory default).
+    pub fn with_store(
+        job: impl Into<String>,
+        retain: usize,
+        registry: &Registry,
+        store: Box<dyn SnapshotStore>,
+    ) -> Self {
         let job = job.into();
         Self {
             duration_ns: registry.histo(
@@ -77,30 +108,68 @@ impl CheckpointCoordinator {
             size_bytes: registry.histo(
                 MetricId::new(names::CHECKPOINT_SIZE_BYTES).with("job", &job),
             ),
+            completed_total: registry.counter(
+                MetricId::new(names::CHECKPOINT_COMPLETED_TOTAL).with("job", &job),
+            ),
+            discarded_total: registry.counter(
+                MetricId::new(names::CHECKPOINT_DISCARDED_TOTAL).with("job", &job),
+            ),
+            store_failures_total: registry.counter(
+                MetricId::new(names::CHECKPOINT_STORE_FAILURES_TOTAL).with("job", &job),
+            ),
             job,
-            store: Box::new(InMemorySnapshotStore::default()),
+            store,
             retain: retain.max(1),
+            timeout: None,
             pending: None,
             completed: 0,
             discarded: 0,
+            store_failures: 0,
         }
+    }
+
+    /// Set the per-epoch deadline (`checkpoint.timeout_s`); `None` or a
+    /// zero duration disables it.
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) {
+        self.timeout = timeout.filter(|t| !t.is_zero());
     }
 
     /// Start collecting epoch `epoch`, expecting `needed` acks. An earlier
     /// epoch still in flight is discarded — it can no longer complete once
     /// its barriers are superseded downstream.
     pub fn begin(&mut self, epoch: u64, needed: usize) {
-        if self.pending.take().is_some() {
-            self.discarded += 1;
+        if self.pending.is_some() {
+            self.discard_pending();
         }
         self.pending = Some(PendingEpoch {
             epoch,
             needed,
-            acked: 0,
+            acked: BTreeSet::new(),
             state: Savepoint::default(),
             offsets: BTreeMap::new(),
             started: Instant::now(),
         });
+    }
+
+    fn discard_pending(&mut self) {
+        self.pending = None;
+        self.discarded += 1;
+        self.discarded_total.inc();
+    }
+
+    /// Abort the pending epoch if it has outlived the configured deadline
+    /// (a stuck barrier: a dead task's ack will never arrive, and the next
+    /// epoch's barriers supersede this one anyway). Returns the aborted
+    /// epoch, if any.
+    pub fn check_deadline(&mut self) -> Option<u64> {
+        let timeout = self.timeout?;
+        let pending = self.pending.as_ref()?;
+        if pending.started.elapsed() < timeout {
+            return None;
+        }
+        let epoch = pending.epoch;
+        self.discard_pending();
+        Some(epoch)
     }
 
     /// Feed one ack. Returns `Some(epoch)` when this ack completed the
@@ -111,9 +180,11 @@ impl CheckpointCoordinator {
             return None; // stale ack from a discarded epoch
         }
         if ack.aborted {
-            self.pending = None;
-            self.discarded += 1;
+            self.discard_pending();
             return None;
+        }
+        if !pending.acked.insert((ack.op_name.clone(), ack.subtask)) {
+            return None; // duplicate/replayed ack: already counted, skip entirely
         }
         if let Some(offset) = ack.source_offset {
             pending
@@ -125,8 +196,7 @@ impl CheckpointCoordinator {
         for (op, export) in ack.exports {
             pending.state.merge_task_export(&op, export);
         }
-        pending.acked += 1;
-        if pending.acked < pending.needed {
+        if pending.acked.len() < pending.needed {
             return None;
         }
         // Complete: install atomically, then prune.
@@ -141,10 +211,48 @@ impl CheckpointCoordinator {
         self.duration_ns
             .record(done.started.elapsed().as_nanos() as u64);
         self.size_bytes.record(snapshot.state.size_bytes());
-        self.store.put(snapshot);
-        self.store.prune(self.retain);
+        if let Err(err) = self.put_with_retry(&snapshot) {
+            // Storage rejected the epoch even after retries: surface it in
+            // the counters and drop the epoch instead of crashing the job —
+            // the previous installed snapshot remains the recovery point.
+            self.store_failures += 1;
+            self.store_failures_total.inc();
+            self.discarded += 1;
+            self.discarded_total.inc();
+            eprintln!(
+                "[checkpoint] store put failed for epoch {} after {PUT_ATTEMPTS} attempts: {err:#}",
+                done.epoch
+            );
+            return None;
+        }
+        if let Err(err) = self.store.prune(self.retain) {
+            // Pruning failure is not fatal: the epoch is installed; old
+            // files linger until the next successful prune.
+            self.store_failures += 1;
+            self.store_failures_total.inc();
+            eprintln!("[checkpoint] store prune failed: {err:#}");
+        }
         self.completed += 1;
+        self.completed_total.inc();
         Some(done.epoch)
+    }
+
+    /// Install with capped exponential backoff — transient store errors
+    /// (and I/O hiccups generally) must not crash a supervised job.
+    fn put_with_retry(&mut self, snapshot: &Snapshot) -> Result<()> {
+        let mut backoff = PUT_BACKOFF_START;
+        let mut last_err = None;
+        for _ in 0..PUT_ATTEMPTS {
+            match self.store.put(snapshot) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    last_err = Some(e);
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(PUT_BACKOFF_CAP);
+                }
+            }
+        }
+        Err(last_err.unwrap())
     }
 
     /// The epoch currently being collected, if any.
@@ -152,12 +260,20 @@ impl CheckpointCoordinator {
         self.pending.as_ref().map(|p| p.epoch)
     }
 
-    /// Most recent installed snapshot (what recovery rolls back to).
-    pub fn latest(&self) -> Option<&Snapshot> {
+    /// Most recent installed snapshot (what recovery rolls back to). Fails
+    /// if it cannot be read back or does not checksum-verify; recovery
+    /// paths should prefer [`Self::latest_intact`].
+    pub fn latest(&self) -> Result<Option<Snapshot>> {
         self.store.latest()
     }
 
-    pub fn get(&self, epoch: u64) -> Option<&Snapshot> {
+    /// Newest snapshot that reads and checksum-verifies, plus the fallback
+    /// depth (epochs quarantined and skipped to reach it).
+    pub fn latest_intact(&mut self) -> Result<(Option<Snapshot>, u32)> {
+        self.store.latest_intact()
+    }
+
+    pub fn get(&self, epoch: u64) -> Result<Option<Snapshot>> {
         self.store.get(epoch)
     }
 
@@ -171,6 +287,11 @@ impl CheckpointCoordinator {
 
     pub fn discarded(&self) -> u64 {
         self.discarded
+    }
+
+    /// Store `put`/`prune` failures that exhausted their retries.
+    pub fn store_failures(&self) -> u64 {
+        self.store_failures
     }
 }
 
@@ -282,12 +403,15 @@ mod tests {
         c.begin(1, 3);
         assert_eq!(c.in_flight(), Some(1));
         assert_eq!(c.on_ack(ack(1, "count", 0, &[1, 2])), None);
-        assert!(c.latest().is_none(), "partial epoch must not be visible");
+        assert!(
+            c.latest().unwrap().is_none(),
+            "partial epoch must not be visible"
+        );
         assert_eq!(c.on_ack(ack(1, "count", 1, &[3])), None);
         let mut src = ack(1, "source", 0, &[]);
         src.source_offset = Some(500);
         assert_eq!(c.on_ack(src), Some(1));
-        let snap = c.latest().unwrap();
+        let snap = c.latest().unwrap().unwrap();
         assert_eq!(snap.epoch(), 1);
         assert_eq!(snap.open("job").unwrap().total_entries(), 3);
         assert_eq!(snap.source_offsets["source"], vec![500]);
@@ -305,7 +429,10 @@ mod tests {
         s0.source_offset = Some(10);
         c.on_ack(s1); // subtask 1 acks first
         assert_eq!(c.on_ack(s0), Some(4));
-        assert_eq!(c.latest().unwrap().source_offsets["source"], vec![10, 20]);
+        assert_eq!(
+            c.latest().unwrap().unwrap().source_offsets["source"],
+            vec![10, 20]
+        );
     }
 
     #[test]
@@ -317,11 +444,11 @@ mod tests {
         aborted.aborted = true;
         assert_eq!(c.on_ack(aborted), None);
         assert_eq!(c.discarded(), 1);
-        assert!(c.latest().is_none());
+        assert!(c.latest().unwrap().is_none());
         // The next epoch proceeds normally.
         c.begin(2, 1);
         assert_eq!(c.on_ack(ack(2, "count", 0, &[7])), Some(2));
-        assert_eq!(c.latest().unwrap().epoch(), 2);
+        assert_eq!(c.latest().unwrap().unwrap().epoch(), 2);
     }
 
     #[test]
@@ -337,7 +464,12 @@ mod tests {
         c.on_ack(ack(2, "count", 0, &[3]));
         assert_eq!(c.on_ack(ack(2, "count", 1, &[4])), Some(2));
         assert_eq!(
-            c.latest().unwrap().open("job").unwrap().total_entries(),
+            c.latest()
+                .unwrap()
+                .unwrap()
+                .open("job")
+                .unwrap()
+                .total_entries(),
             2,
             "epoch 2 must only contain epoch-2 exports"
         );
@@ -351,8 +483,134 @@ mod tests {
             assert_eq!(c.on_ack(ack(epoch, "op", 0, &[epoch])), Some(epoch));
         }
         assert_eq!(c.installed_epochs(), vec![3, 4]);
-        assert_eq!(c.latest().unwrap().epoch(), 4);
+        assert_eq!(c.latest().unwrap().unwrap().epoch(), 4);
         assert_eq!(c.completed(), 4);
+    }
+
+    #[test]
+    fn duplicate_acks_do_not_complete_epoch_early() {
+        let mut c = coordinator(3);
+        c.begin(1, 2);
+        assert_eq!(c.on_ack(ack(1, "count", 0, &[1, 2])), None);
+        // A replayed ack from the same (op, subtask) — e.g. after a rewire
+        // race — must not count toward the needed total...
+        assert_eq!(c.on_ack(ack(1, "count", 0, &[1, 2])), None);
+        assert_eq!(
+            c.in_flight(),
+            Some(1),
+            "duplicate ack must not complete the epoch"
+        );
+        assert_eq!(c.on_ack(ack(1, "count", 1, &[3])), Some(1));
+        // ...and its exports must not be double-merged.
+        let snap = c.latest().unwrap().unwrap();
+        assert_eq!(snap.open("job").unwrap().total_entries(), 3);
+    }
+
+    #[test]
+    fn deadline_aborts_stuck_epoch_and_next_completes() {
+        let mut c = coordinator(3);
+        c.set_timeout(Some(Duration::from_millis(50)));
+        c.begin(1, 2);
+        c.on_ack(ack(1, "count", 0, &[1]));
+        assert_eq!(c.check_deadline(), None, "deadline not reached yet");
+        std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(c.check_deadline(), Some(1), "stuck epoch aborted");
+        assert_eq!(c.in_flight(), None);
+        assert_eq!(c.discarded(), 1);
+        // The straggler's late ack is now stale, and the next epoch
+        // completes normally.
+        assert_eq!(c.on_ack(ack(1, "count", 1, &[2])), None);
+        c.begin(2, 1);
+        assert_eq!(c.on_ack(ack(2, "count", 0, &[7])), Some(2));
+        assert_eq!(c.latest().unwrap().unwrap().epoch(), 2);
+        // A zero timeout disables the deadline entirely.
+        c.set_timeout(Some(Duration::ZERO));
+        c.begin(3, 2);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(c.check_deadline(), None, "zero timeout = no deadline");
+    }
+
+    #[test]
+    fn coordinator_exports_registry_counters() {
+        let reg = Registry::new();
+        let mut c = CheckpointCoordinator::new("job", 3, &reg);
+        c.begin(1, 1);
+        assert_eq!(c.on_ack(ack(1, "op", 0, &[1])), Some(1));
+        c.begin(2, 2);
+        c.begin(3, 1); // supersedes epoch 2 → discarded
+        assert_eq!(c.on_ack(ack(3, "op", 0, &[2])), Some(3));
+        let snap = reg.snapshot();
+        let counter = |name: &str| {
+            snap.iter()
+                .find(|(id, _)| id.name == name)
+                .map(|(_, s)| match s {
+                    crate::metrics::Sample::Counter(v) => *v,
+                    _ => 0,
+                })
+                .unwrap_or(0)
+        };
+        assert_eq!(counter(names::CHECKPOINT_COMPLETED_TOTAL), 2);
+        assert_eq!(counter(names::CHECKPOINT_DISCARDED_TOTAL), 1);
+        assert_eq!(counter(names::CHECKPOINT_STORE_FAILURES_TOTAL), 0);
+    }
+
+    /// Store that rejects the next `fail_next` puts with a transient error.
+    struct FailingPuts {
+        inner: InMemorySnapshotStore,
+        fail_next: u32,
+    }
+
+    impl SnapshotStore for FailingPuts {
+        fn put_bytes(&mut self, epoch: u64, bytes: &[u8]) -> Result<()> {
+            if self.fail_next > 0 {
+                self.fail_next -= 1;
+                return Err(
+                    crate::engine::store::TransientStoreError("injected put error".into()).into(),
+                );
+            }
+            self.inner.put_bytes(epoch, bytes)
+        }
+        fn get_bytes(&self, epoch: u64) -> Result<Option<Vec<u8>>> {
+            self.inner.get_bytes(epoch)
+        }
+        fn epochs(&self) -> Vec<u64> {
+            self.inner.epochs()
+        }
+        fn prune(&mut self, retain: usize) -> Result<()> {
+            self.inner.prune(retain)
+        }
+        fn quarantine(&mut self, epoch: u64) -> Result<()> {
+            self.inner.quarantine(epoch)
+        }
+    }
+
+    #[test]
+    fn install_retries_transient_put_errors() {
+        let store = FailingPuts {
+            inner: InMemorySnapshotStore::default(),
+            fail_next: 2,
+        };
+        let mut c =
+            CheckpointCoordinator::with_store("job", 3, &Registry::new(), Box::new(store));
+        c.begin(1, 1);
+        assert_eq!(c.on_ack(ack(1, "op", 0, &[1])), Some(1));
+        assert_eq!(c.store_failures(), 0);
+        assert_eq!(c.latest().unwrap().unwrap().epoch(), 1);
+    }
+
+    #[test]
+    fn persistent_put_failure_drops_epoch_without_crashing() {
+        let store = FailingPuts {
+            inner: InMemorySnapshotStore::default(),
+            fail_next: u32::MAX,
+        };
+        let mut c =
+            CheckpointCoordinator::with_store("job", 3, &Registry::new(), Box::new(store));
+        c.begin(1, 1);
+        assert_eq!(c.on_ack(ack(1, "op", 0, &[1])), None, "epoch dropped");
+        assert_eq!(c.store_failures(), 1);
+        assert_eq!(c.discarded(), 1);
+        assert!(c.latest().unwrap().is_none());
     }
 
     #[test]

@@ -14,6 +14,7 @@ use super::checkpoint::{CheckpointCoordinator, FaultInjector};
 use super::job::{JobManager, RunningJob, StreamJob};
 use super::savepoint::{Savepoint, Snapshot};
 use super::scrape::Scraper;
+use super::store::{FaultyStore, FsSnapshotStore, InMemorySnapshotStore, SnapshotStore};
 use crate::graph::ScalingAssignment;
 use crate::metrics::window::WindowAggregator;
 use crate::metrics::{names, MetricId, Registry};
@@ -163,15 +164,23 @@ pub fn autoscale_live(
                         }
                         ReconfigTier::Full => {
                             // The exported state rides through the same
-                            // versioned Snapshot envelope as checkpoints, so
-                            // a mismatched format or job fails loudly here
-                            // instead of restoring garbage.
+                            // versioned Snapshot envelope AND store path as
+                            // checkpoints: installed into a snapshot store
+                            // and read back through the checksummed codec,
+                            // so a mismatched format, job, or corrupted
+                            // encoding fails loudly here instead of
+                            // restoring garbage.
                             let snapshot = Snapshot::savepoint(
                                 &job.graph.name,
                                 reconfigs.len() as u64 + 1,
                                 running.stop_with_savepoint()?,
                             );
                             let t_save = t0.elapsed();
+                            let mut store = InMemorySnapshotStore::default();
+                            store.put(&snapshot)?;
+                            let snapshot = store.latest()?.ok_or_else(|| {
+                                anyhow!("snapshot store lost the full-tier savepoint")
+                            })?;
                             let restored = snapshot.open(&job.graph.name)?;
                             let entries = restored.total_entries();
                             // Same registry across the epoch: counters are
@@ -240,10 +249,14 @@ pub struct RecoveryEvent {
     /// First failure message reaped (for injected faults:
     /// `injected fault at <op>/<subtask>`).
     pub failure: String,
-    /// Checkpoint epoch the job was rolled back to.
+    /// Checkpoint epoch the job was rolled back to (0 = restarted from
+    /// scratch because no intact snapshot survived).
     pub restored_epoch: u64,
     /// Detection → redeployed-from-snapshot, wall clock.
     pub downtime: Duration,
+    /// Epochs skipped (quarantined as corrupt) before an intact snapshot
+    /// was found; 0 when the newest epoch verified cleanly.
+    pub fallback_depth: u32,
 }
 
 /// Outcome of [`run_supervised`].
@@ -252,6 +265,8 @@ pub struct SupervisedReport {
     pub checkpoints_discarded: u64,
     /// Crash injections actually delivered to a live task.
     pub kills: u32,
+    /// Snapshot-store operations that failed after exhausting retries.
+    pub store_failures: u64,
     pub recoveries: Vec<RecoveryEvent>,
     /// State assembled from the clean EOS drain at the end of the run. For
     /// a deterministic job this is byte-identical to a crash-free run.
@@ -268,12 +283,21 @@ pub struct SupervisedReport {
 /// 2. drain task acks into the coordinator, which installs the epoch's
 ///    [`Snapshot`] atomically once every task has acked;
 /// 3. let the [`FaultInjector`] kill a random live task on its seeded
-///    schedule;
+///    schedule, and abort any epoch whose barrier has been stuck past
+///    `checkpoint.timeout_s`;
 /// 4. on any task failure, tear the incarnation down
-///    ([`RunningJob::abandon`]), roll back to `coordinator.latest()`, and
-///    redeploy with sources fast-forwarded to the checkpointed offsets —
+///    ([`RunningJob::abandon`]), roll back to the newest snapshot whose
+///    checksums verify (`coordinator.latest_intact()` — corrupt epochs are
+///    quarantined and skipped, deepening [`RecoveryEvent::fallback_depth`]),
+///    and redeploy with sources fast-forwarded to the checkpointed offsets —
 ///    the replayed stream is byte-identical to what the dead incarnation
-///    produced after its last barrier.
+///    produced after its last barrier. If every installed epoch is corrupt,
+///    the bottom of the fallback chain is a fresh deploy replaying the
+///    sources from offset zero.
+///
+/// Snapshots persist to `checkpoint.dir` through [`FsSnapshotStore`] when
+/// set (in-memory otherwise), optionally wrapped in a seeded [`FaultyStore`]
+/// when `[engine.fault.store]` is enabled.
 ///
 /// Fails if a task dies before the first checkpoint completes (nothing to
 /// roll back to — raise `fault.min_delay_ms` or shrink
@@ -287,8 +311,27 @@ pub fn run_supervised(
     let cfg = jm.config.clone();
     let ckpt = cfg.checkpoint.clone();
     let interval = Duration::from_secs_f64(ckpt.interval_s);
+    let base: Box<dyn SnapshotStore> = if ckpt.dir.is_empty() {
+        Box::new(InMemorySnapshotStore::default())
+    } else {
+        Box::new(FsSnapshotStore::open(&ckpt.dir)?)
+    };
+    let store: Box<dyn SnapshotStore> = if cfg.engine.fault.store.enabled {
+        Box::new(FaultyStore::from_config(
+            base,
+            cfg.engine.fault.seed,
+            &cfg.engine.fault.store,
+        ))
+    } else {
+        base
+    };
     let mut coordinator =
-        CheckpointCoordinator::new(&job.graph.name, ckpt.retain, registry);
+        CheckpointCoordinator::with_store(&job.graph.name, ckpt.retain, registry, store);
+    coordinator
+        .set_timeout((ckpt.timeout_s > 0.0).then(|| Duration::from_secs_f64(ckpt.timeout_s)));
+    let fallback_total = registry.counter(
+        MetricId::new(names::RECOVERY_FALLBACK_DEPTH).with("job", &job.graph.name),
+    );
     let mut injector = FaultInjector::from_config(&cfg.engine.fault);
     let recovery_ns = registry.histo(
         MetricId::new(names::RECOVERY_DURATION_NS).with("job", &job.graph.name),
@@ -311,6 +354,7 @@ pub fn run_supervised(
         for ack in running.poll_acks() {
             coordinator.on_ack(ack);
         }
+        coordinator.check_deadline();
         if let Some(inj) = injector.as_mut() {
             if let Some(victim) = inj.fire(running.live_tasks()) {
                 if running.inject_crash(victim).is_some() {
@@ -321,11 +365,26 @@ pub fn run_supervised(
         if let Some(failure) = running.check_failure() {
             let t0 = Instant::now();
             running.abandon();
-            let snapshot = coordinator.latest().ok_or_else(|| {
-                anyhow!("task failed ({failure}) before any checkpoint completed")
-            })?;
-            let restored_epoch = snapshot.epoch();
-            running = jm.deploy_from_snapshot(job, assignment, registry, snapshot)?;
+            let (snapshot, fallback_depth) = coordinator.latest_intact()?;
+            fallback_total.add(fallback_depth as u64);
+            let restored_epoch;
+            running = match snapshot {
+                Some(snapshot) => {
+                    restored_epoch = snapshot.epoch();
+                    jm.deploy_from_snapshot(job, assignment, registry, &snapshot)?
+                }
+                // At least one epoch completed but none survived intact:
+                // fall all the way back to a fresh deploy from offset zero.
+                None if fallback_depth > 0 || coordinator.completed() > 0 => {
+                    restored_epoch = 0;
+                    jm.deploy(job, assignment, registry, None)?
+                }
+                None => {
+                    return Err(anyhow!(
+                        "task failed ({failure}) before any checkpoint completed"
+                    ));
+                }
+            };
             let downtime = t0.elapsed();
             recovery_ns.record(downtime.as_nanos() as u64);
             recoveries.push(RecoveryEvent {
@@ -333,6 +392,7 @@ pub fn run_supervised(
                 failure,
                 restored_epoch,
                 downtime,
+                fallback_depth,
             });
             // The in-flight epoch (if any) died with the old incarnation;
             // give the recovered one a full interval before the next barrier.
@@ -353,6 +413,7 @@ pub fn run_supervised(
         checkpoints_completed: coordinator.completed(),
         checkpoints_discarded: coordinator.discarded(),
         kills,
+        store_failures: coordinator.store_failures(),
         recoveries,
         final_state,
     })

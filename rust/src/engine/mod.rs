@@ -23,6 +23,7 @@ pub mod operators;
 pub mod savepoint;
 pub mod scrape;
 pub mod sources;
+pub mod store;
 pub mod task;
 pub mod window;
 pub mod xla_op;
@@ -40,11 +41,15 @@ pub use operators::{
     WindowedJoinOp,
 };
 pub use savepoint::{
-    InMemorySnapshotStore, OperatorState, Savepoint, Snapshot, SnapshotHeader, SnapshotKind,
-    SnapshotStore, TaskRestore, SNAPSHOT_VERSION,
+    OperatorState, Savepoint, Snapshot, SnapshotHeader, SnapshotKind, TaskRestore,
+    SNAPSHOT_VERSION,
 };
 pub use scrape::Scraper;
 pub use sources::RateLimitedSource;
+pub use store::{
+    decode_snapshot, encode_snapshot, is_transient, FaultyStore, FsSnapshotStore,
+    InMemorySnapshotStore, SnapshotStore, TransientStoreError, FILE_FORMAT_VERSION,
+};
 pub use task::{ChainedOp, ControlMsg, IdleBackoff};
 pub use window::{Window, WindowAssigner};
 pub use xla_op::{XlaCurrencyMapOp, XlaWindowCountOp};

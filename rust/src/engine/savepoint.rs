@@ -10,9 +10,11 @@
 //! (fault tolerance) travel as one versioned [`Snapshot`] type: a format
 //! header (version, job id, epoch, kind) wrapped around the operator-state
 //! payload. Restores go through [`Snapshot::open`], which fails loudly on a
-//! version or job mismatch instead of silently loading foreign state. A
-//! [`SnapshotStore`] keeps completed snapshots per job; the in-memory
-//! implementation is what the checkpoint coordinator installs epochs into.
+//! version or job mismatch instead of silently loading foreign state.
+//! Completed snapshots are kept per job by a
+//! [`super::store::SnapshotStore`] (in-memory or the durable checksummed
+//! [`super::store::FsSnapshotStore`]), which the checkpoint coordinator
+//! installs epochs into.
 
 use crate::graph::groups_for_task;
 use anyhow::{bail, Result};
@@ -152,7 +154,7 @@ pub struct SnapshotHeader {
 /// The unified snapshot: a validated header around the operator-state
 /// payload. Savepoints (reconfig) and checkpoints (fault tolerance) differ
 /// only in `header.kind` and in who installs them.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Snapshot {
     pub header: SnapshotHeader,
     /// Operator name → exported state; also carries checkpointed source
@@ -212,53 +214,6 @@ impl Snapshot {
 
     pub fn kind(&self) -> SnapshotKind {
         self.header.kind
-    }
-}
-
-/// Where completed snapshots live. The engine keeps them in memory today;
-/// a durable store (object storage, DFS) would implement the same trait.
-pub trait SnapshotStore: Send {
-    /// Install a completed snapshot. Installation is atomic: the snapshot
-    /// becomes visible as `latest` only as a whole.
-    fn put(&mut self, snapshot: Snapshot);
-    /// Fetch a snapshot by epoch.
-    fn get(&self, epoch: u64) -> Option<&Snapshot>;
-    /// The most recent completed snapshot, if any.
-    fn latest(&self) -> Option<&Snapshot>;
-    /// Drop all but the `retain` most recent snapshots.
-    fn prune(&mut self, retain: usize);
-    /// Completed epochs, ascending.
-    fn epochs(&self) -> Vec<u64>;
-}
-
-/// In-memory [`SnapshotStore`] keyed by epoch.
-#[derive(Debug, Default)]
-pub struct InMemorySnapshotStore {
-    snapshots: BTreeMap<u64, Snapshot>,
-}
-
-impl SnapshotStore for InMemorySnapshotStore {
-    fn put(&mut self, snapshot: Snapshot) {
-        self.snapshots.insert(snapshot.epoch(), snapshot);
-    }
-
-    fn get(&self, epoch: u64) -> Option<&Snapshot> {
-        self.snapshots.get(&epoch)
-    }
-
-    fn latest(&self) -> Option<&Snapshot> {
-        self.snapshots.values().next_back()
-    }
-
-    fn prune(&mut self, retain: usize) {
-        while self.snapshots.len() > retain {
-            let oldest = *self.snapshots.keys().next().unwrap();
-            self.snapshots.remove(&oldest);
-        }
-    }
-
-    fn epochs(&self) -> Vec<u64> {
-        self.snapshots.keys().copied().collect()
     }
 }
 
@@ -379,20 +334,6 @@ mod tests {
         stale.header.version = SNAPSHOT_VERSION + 1;
         let err = stale.open("wordcount").unwrap_err().to_string();
         assert!(err.contains("version"), "version mismatch: {err}");
-    }
-
-    #[test]
-    fn in_memory_store_installs_latest_and_prunes() {
-        let mut store = InMemorySnapshotStore::default();
-        for epoch in 1..=5u64 {
-            store.put(Snapshot::checkpoint("j", epoch, Savepoint::default()));
-        }
-        assert_eq!(store.latest().unwrap().epoch(), 5);
-        assert!(store.get(2).is_some());
-        store.prune(2);
-        assert_eq!(store.epochs(), vec![4, 5]);
-        assert!(store.get(2).is_none());
-        assert_eq!(store.latest().unwrap().epoch(), 5);
     }
 
     #[test]

@@ -1,0 +1,977 @@
+//! Durable snapshot storage: a checksummed on-disk format, the fallible
+//! [`SnapshotStore`] trait, and a seeded fault-injecting wrapper.
+//!
+//! Snapshots are encoded into a versioned binary envelope of three
+//! sections — header, source offsets, operator state — each framed as
+//! `[len: u32 LE][payload][crc32(payload): u32 LE]` (the same `crc32fast`
+//! footer discipline as `state/lsm/block.rs`). [`FsSnapshotStore`] writes
+//! one file per epoch via temp-file + fsync + atomic rename, so a crash
+//! mid-`put` never exposes a torn snapshot; `open()` rebuilds the epoch
+//! index from a directory scan and sweeps leftover temp files.
+//!
+//! Every consumer treats storage as something that can fail:
+//! [`TransientStoreError`] marks retryable I/O trouble (the checkpoint
+//! coordinator retries `put`s with capped backoff; reads retry inline),
+//! while anything else — bad magic, truncation, CRC mismatch — means the
+//! snapshot is corrupt. [`SnapshotStore::latest_intact`] walks epochs
+//! newest-first, quarantining corrupt files (`.corrupt` rename) and
+//! reporting how many epochs it had to fall back past. [`FaultyStore`]
+//! wraps any store in a seeded injector (transient errors, torn writes,
+//! bit flips on a dedicated RNG stream) so the whole recovery path is
+//! exercisable deterministically.
+
+use super::savepoint::{OperatorState, Savepoint, Snapshot, SnapshotHeader, SnapshotKind};
+use crate::config::StoreFaultConfig;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+use std::{fs, io};
+
+/// File magic for snapshot files ("Justin SNaPshot").
+pub const SNAPSHOT_MAGIC: [u8; 4] = *b"JSNP";
+
+/// On-disk container-format version (independent of
+/// [`crate::engine::savepoint::SNAPSHOT_VERSION`], which versions the
+/// *logical* payload carried in the header section).
+pub const FILE_FORMAT_VERSION: u32 = 1;
+
+/// Suffix of in-flight temp files (swept on `open()`).
+pub const TMP_SUFFIX: &str = ".tmp";
+
+/// Suffix a corrupt snapshot file is renamed to when quarantined.
+pub const CORRUPT_SUFFIX: &str = ".corrupt";
+
+/// Attempts for transient-read retries inside [`SnapshotStore::latest_intact`].
+const READ_RETRIES: u32 = 4;
+
+/// Marker error for retryable storage failures (I/O hiccups, injected
+/// transient faults). Everything else coming out of a store read is
+/// treated as corruption and quarantined.
+#[derive(Debug, Clone)]
+pub struct TransientStoreError(pub String);
+
+impl std::fmt::Display for TransientStoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "transient store error: {}", self.0)
+    }
+}
+
+impl std::error::Error for TransientStoreError {}
+
+/// Whether `err` (anywhere in its chain) is a retryable storage failure.
+pub fn is_transient(err: &anyhow::Error) -> bool {
+    err.chain()
+        .any(|c| c.downcast_ref::<TransientStoreError>().is_some())
+}
+
+// ---------------------------------------------------------------------------
+// Binary codec
+// ---------------------------------------------------------------------------
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_slice(buf: &mut Vec<u8>, b: &[u8]) {
+    put_u32(buf, b.len() as u32);
+    buf.extend_from_slice(b);
+}
+
+/// Frame one section: `[len][payload][crc32(payload)]`.
+fn push_section(out: &mut Vec<u8>, payload: &[u8]) {
+    put_u32(out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    put_u32(out, crc32fast::hash(payload));
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(data: &'a [u8]) -> Self {
+        Self { data, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.data.len() - self.pos {
+            bail!(
+                "snapshot truncated: wanted {n} bytes at offset {} of {}",
+                self.pos,
+                self.data.len()
+            );
+        }
+        let out = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn slice_field(&mut self) -> Result<Vec<u8>> {
+        let len = self.u32()? as usize;
+        Ok(self.take(len)?.to_vec())
+    }
+
+    fn str_field(&mut self) -> Result<String> {
+        String::from_utf8(self.slice_field()?).context("snapshot string field is not UTF-8")
+    }
+
+    fn finish(&self, section: &str) -> Result<()> {
+        if self.pos != self.data.len() {
+            bail!(
+                "snapshot {section} section has {} trailing bytes",
+                self.data.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Serialize a snapshot into the on-disk envelope.
+pub fn encode_snapshot(snapshot: &Snapshot) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + snapshot.state.size_bytes() as usize);
+    out.extend_from_slice(&SNAPSHOT_MAGIC);
+    put_u32(&mut out, FILE_FORMAT_VERSION);
+
+    let mut header = Vec::new();
+    put_u32(&mut header, snapshot.header.version);
+    put_u64(&mut header, snapshot.header.epoch);
+    header.push(match snapshot.header.kind {
+        SnapshotKind::Savepoint => 0,
+        SnapshotKind::Checkpoint => 1,
+    });
+    put_slice(&mut header, snapshot.header.job.as_bytes());
+    push_section(&mut out, &header);
+
+    let mut offs = Vec::new();
+    put_u32(&mut offs, snapshot.source_offsets.len() as u32);
+    for (op, offsets) in &snapshot.source_offsets {
+        put_slice(&mut offs, op.as_bytes());
+        put_u32(&mut offs, offsets.len() as u32);
+        for &o in offsets {
+            put_u64(&mut offs, o);
+        }
+    }
+    push_section(&mut out, &offs);
+
+    let mut state = Vec::new();
+    put_u32(&mut state, snapshot.state.operators.len() as u32);
+    for (op, st) in &snapshot.state.operators {
+        put_slice(&mut state, op.as_bytes());
+        put_u32(&mut state, st.keyed.len() as u32);
+        for (&group, entries) in &st.keyed {
+            put_u16(&mut state, group);
+            put_u32(&mut state, entries.len() as u32);
+            for (k, v) in entries {
+                put_slice(&mut state, k);
+                put_slice(&mut state, v);
+            }
+        }
+        put_u32(&mut state, st.aux.len() as u32);
+        for (&group, blobs) in &st.aux {
+            put_u16(&mut state, group);
+            put_u32(&mut state, blobs.len() as u32);
+            for b in blobs {
+                put_slice(&mut state, b);
+            }
+        }
+    }
+    push_section(&mut out, &state);
+    out
+}
+
+/// Read one `[len][payload][crc]` section and verify its checksum.
+fn read_section<'a>(cur: &mut Cursor<'a>, section: &str) -> Result<&'a [u8]> {
+    let len = cur.u32()? as usize;
+    let payload = cur.take(len)?;
+    let stored_crc = cur.u32()?;
+    let actual_crc = crc32fast::hash(payload);
+    if stored_crc != actual_crc {
+        bail!("snapshot {section} section CRC mismatch: stored={stored_crc:08x} actual={actual_crc:08x}");
+    }
+    Ok(payload)
+}
+
+fn parse_header(payload: &[u8]) -> Result<SnapshotHeader> {
+    let mut c = Cursor::new(payload);
+    let version = c.u32()?;
+    let epoch = c.u64()?;
+    let kind = match c.u8()? {
+        0 => SnapshotKind::Savepoint,
+        1 => SnapshotKind::Checkpoint,
+        k => bail!("unknown snapshot kind byte {k}"),
+    };
+    let job = c.str_field()?;
+    c.finish("header")?;
+    Ok(SnapshotHeader {
+        version,
+        job,
+        epoch,
+        kind,
+    })
+}
+
+fn parse_offsets(payload: &[u8]) -> Result<BTreeMap<String, Vec<u64>>> {
+    let mut c = Cursor::new(payload);
+    let mut out = BTreeMap::new();
+    let count = c.u32()?;
+    for _ in 0..count {
+        let op = c.str_field()?;
+        let n = c.u32()?;
+        let mut offsets = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            offsets.push(c.u64()?);
+        }
+        out.insert(op, offsets);
+    }
+    c.finish("source_offsets")?;
+    Ok(out)
+}
+
+fn parse_state(payload: &[u8]) -> Result<Savepoint> {
+    let mut c = Cursor::new(payload);
+    let mut sp = Savepoint::default();
+    let ops = c.u32()?;
+    for _ in 0..ops {
+        let op = c.str_field()?;
+        let mut st = OperatorState::default();
+        let groups = c.u32()?;
+        for _ in 0..groups {
+            let group = c.u16()?;
+            let entries = c.u32()?;
+            let slot = st.keyed.entry(group).or_default();
+            for _ in 0..entries {
+                let k = c.slice_field()?;
+                let v = c.slice_field()?;
+                slot.push((k, v));
+            }
+        }
+        let aux_groups = c.u32()?;
+        for _ in 0..aux_groups {
+            let group = c.u16()?;
+            let blobs = c.u32()?;
+            let slot = st.aux.entry(group).or_default();
+            for _ in 0..blobs {
+                slot.push(c.slice_field()?);
+            }
+        }
+        sp.operators.insert(op, st);
+    }
+    c.finish("state")?;
+    Ok(sp)
+}
+
+/// Decode and checksum-verify a snapshot envelope. Any failure here means
+/// the bytes are corrupt (or from an incompatible build), never that the
+/// store itself misbehaved.
+pub fn decode_snapshot(data: &[u8]) -> Result<Snapshot> {
+    let mut cur = Cursor::new(data);
+    let magic = cur.take(4)?;
+    if magic != SNAPSHOT_MAGIC {
+        bail!("bad snapshot magic {magic:02x?}");
+    }
+    let format = cur.u32()?;
+    if format != FILE_FORMAT_VERSION {
+        bail!("snapshot file format {format} not supported (this build reads {FILE_FORMAT_VERSION})");
+    }
+    let header = parse_header(read_section(&mut cur, "header")?)?;
+    let source_offsets = parse_offsets(read_section(&mut cur, "source_offsets")?)?;
+    let state = parse_state(read_section(&mut cur, "state")?)?;
+    cur.finish("file")?;
+    Ok(Snapshot {
+        header,
+        state,
+        source_offsets,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The store trait
+// ---------------------------------------------------------------------------
+
+/// Where completed snapshots live. Implementations move *bytes*; the
+/// provided methods layer the codec on top, so fault wrappers can corrupt
+/// or reject writes without knowing the format.
+pub trait SnapshotStore: Send {
+    /// Durably install the encoded snapshot for `epoch`. Installation must
+    /// be atomic: a failed or interrupted `put` never leaves a partially
+    /// visible epoch behind.
+    fn put_bytes(&mut self, epoch: u64, bytes: &[u8]) -> Result<()>;
+    /// Fetch the raw bytes for `epoch` (`None` if it was never installed).
+    fn get_bytes(&self, epoch: u64) -> Result<Option<Vec<u8>>>;
+    /// Installed epochs, ascending.
+    fn epochs(&self) -> Vec<u64>;
+    /// Drop all but the `retain` most recent epochs.
+    fn prune(&mut self, retain: usize) -> Result<()>;
+    /// Remove `epoch` from the visible index, preserving its bytes out of
+    /// band for forensics (on disk: rename to `.corrupt`).
+    fn quarantine(&mut self, epoch: u64) -> Result<()>;
+
+    /// Encode and install a completed snapshot.
+    fn put(&mut self, snapshot: &Snapshot) -> Result<()> {
+        self.put_bytes(snapshot.epoch(), &encode_snapshot(snapshot))
+    }
+
+    /// Fetch and checksum-verify a snapshot by epoch.
+    fn get(&self, epoch: u64) -> Result<Option<Snapshot>> {
+        match self.get_bytes(epoch)? {
+            Some(bytes) => Ok(Some(decode_snapshot(&bytes)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// The most recent installed snapshot, if any. Fails if that snapshot
+    /// cannot be read or does not verify — use [`Self::latest_intact`] to
+    /// fall back past corruption.
+    fn latest(&self) -> Result<Option<Snapshot>> {
+        match self.epochs().last().copied() {
+            Some(epoch) => self.get(epoch),
+            None => Ok(None),
+        }
+    }
+
+    /// Walk epochs newest-first and return the first snapshot that reads
+    /// and checksum-verifies, along with the number of epochs skipped to
+    /// reach it (the *fallback depth*). Transient read errors are retried
+    /// with a short backoff; corrupt epochs are quarantined and skipped.
+    fn latest_intact(&mut self) -> Result<(Option<Snapshot>, u32)> {
+        let mut depth = 0u32;
+        for epoch in self.epochs().into_iter().rev() {
+            let mut attempt = 0u32;
+            let outcome = loop {
+                match self.get(epoch) {
+                    Ok(snap) => break Ok(snap),
+                    Err(e) if is_transient(&e) && attempt < READ_RETRIES => {
+                        attempt += 1;
+                        std::thread::sleep(Duration::from_millis(1u64 << attempt.min(6)));
+                    }
+                    Err(e) => break Err(e),
+                }
+            };
+            match outcome {
+                Ok(Some(snap)) => return Ok((Some(snap), depth)),
+                // Indexed but gone: treat like a corrupt epoch and keep walking.
+                Ok(None) => depth += 1,
+                // Persistent transient trouble: the store itself is down,
+                // falling back further would not help.
+                Err(e) if is_transient(&e) => return Err(e),
+                Err(_) => {
+                    self.quarantine(epoch)?;
+                    depth += 1;
+                }
+            }
+        }
+        Ok((None, depth))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-memory store
+// ---------------------------------------------------------------------------
+
+/// In-memory [`SnapshotStore`] keyed by epoch (encoded bytes, so it rides
+/// the same codec and CRC path as the durable store).
+#[derive(Debug, Default)]
+pub struct InMemorySnapshotStore {
+    snapshots: BTreeMap<u64, Vec<u8>>,
+    quarantined: BTreeMap<u64, Vec<u8>>,
+}
+
+impl InMemorySnapshotStore {
+    /// Epochs moved aside by [`SnapshotStore::quarantine`].
+    pub fn quarantined_epochs(&self) -> Vec<u64> {
+        self.quarantined.keys().copied().collect()
+    }
+}
+
+impl SnapshotStore for InMemorySnapshotStore {
+    fn put_bytes(&mut self, epoch: u64, bytes: &[u8]) -> Result<()> {
+        self.snapshots.insert(epoch, bytes.to_vec());
+        Ok(())
+    }
+
+    fn get_bytes(&self, epoch: u64) -> Result<Option<Vec<u8>>> {
+        Ok(self.snapshots.get(&epoch).cloned())
+    }
+
+    fn epochs(&self) -> Vec<u64> {
+        self.snapshots.keys().copied().collect()
+    }
+
+    fn prune(&mut self, retain: usize) -> Result<()> {
+        while self.snapshots.len() > retain {
+            let oldest = *self.snapshots.keys().next().unwrap();
+            self.snapshots.remove(&oldest);
+        }
+        Ok(())
+    }
+
+    fn quarantine(&mut self, epoch: u64) -> Result<()> {
+        if let Some(bytes) = self.snapshots.remove(&epoch) {
+            self.quarantined.insert(epoch, bytes);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Filesystem store
+// ---------------------------------------------------------------------------
+
+/// Durable [`SnapshotStore`]: one `epoch-<n>.snap` file per epoch in a
+/// flat directory, written via temp-file + fsync + atomic rename.
+#[derive(Debug)]
+pub struct FsSnapshotStore {
+    dir: PathBuf,
+    epochs: BTreeSet<u64>,
+}
+
+impl FsSnapshotStore {
+    /// Open (creating if needed) a snapshot directory, rebuilding the
+    /// epoch index from a scan and sweeping leftover temp files from any
+    /// previous crash mid-`put`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating snapshot dir {}", dir.display()))?;
+        let mut epochs = BTreeSet::new();
+        for entry in fs::read_dir(&dir)
+            .with_context(|| format!("scanning snapshot dir {}", dir.display()))?
+        {
+            let entry = entry.context("reading snapshot dir entry")?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.ends_with(TMP_SUFFIX) {
+                // A crash between create and rename: never visible, safe to drop.
+                let _ = fs::remove_file(entry.path());
+                continue;
+            }
+            if let Some(epoch) = Self::parse_epoch(&name) {
+                epochs.insert(epoch);
+            }
+        }
+        Ok(Self { dir, epochs })
+    }
+
+    fn file_name(epoch: u64) -> String {
+        format!("epoch-{epoch:020}.snap")
+    }
+
+    fn parse_epoch(name: &str) -> Option<u64> {
+        name.strip_prefix("epoch-")?
+            .strip_suffix(".snap")?
+            .parse()
+            .ok()
+    }
+
+    /// Path the given epoch is (or would be) stored at.
+    pub fn file_path(&self, epoch: u64) -> PathBuf {
+        self.dir.join(Self::file_name(epoch))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Quarantined snapshot files (`*.corrupt`), sorted by name.
+    pub fn corrupt_files(&self) -> Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        for entry in fs::read_dir(&self.dir)
+            .with_context(|| format!("scanning snapshot dir {}", self.dir.display()))?
+        {
+            let entry = entry.context("reading snapshot dir entry")?;
+            if entry.file_name().to_string_lossy().ends_with(CORRUPT_SUFFIX) {
+                out.push(entry.path());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+impl SnapshotStore for FsSnapshotStore {
+    fn put_bytes(&mut self, epoch: u64, bytes: &[u8]) -> Result<()> {
+        // Hidden temp name: never matches the epoch scan, swept on open().
+        let tmp = self
+            .dir
+            .join(format!(".{}{}", Self::file_name(epoch), TMP_SUFFIX));
+        let path = self.file_path(epoch);
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating snapshot temp file {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("writing snapshot temp file {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("syncing snapshot temp file {}", tmp.display()))?;
+        drop(f);
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("installing snapshot {}", path.display()))?;
+        // Persist the rename itself; best-effort (not all platforms allow
+        // opening a directory for fsync).
+        if let Ok(d) = fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        self.epochs.insert(epoch);
+        Ok(())
+    }
+
+    fn get_bytes(&self, epoch: u64) -> Result<Option<Vec<u8>>> {
+        if !self.epochs.contains(&epoch) {
+            return Ok(None);
+        }
+        let path = self.file_path(epoch);
+        let bytes =
+            fs::read(&path).with_context(|| format!("reading snapshot {}", path.display()))?;
+        Ok(Some(bytes))
+    }
+
+    fn epochs(&self) -> Vec<u64> {
+        self.epochs.iter().copied().collect()
+    }
+
+    fn prune(&mut self, retain: usize) -> Result<()> {
+        while self.epochs.len() > retain {
+            let oldest = *self.epochs.iter().next().unwrap();
+            let path = self.file_path(oldest);
+            match fs::remove_file(&path) {
+                Ok(()) => {}
+                Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("pruning snapshot {}", path.display()));
+                }
+            }
+            self.epochs.remove(&oldest);
+        }
+        Ok(())
+    }
+
+    fn quarantine(&mut self, epoch: u64) -> Result<()> {
+        self.epochs.remove(&epoch);
+        let from = self.file_path(epoch);
+        let to = self
+            .dir
+            .join(format!("{}{}", Self::file_name(epoch), CORRUPT_SUFFIX));
+        match fs::rename(&from, &to) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e).with_context(|| format!("quarantining snapshot {}", from.display())),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault-injecting wrapper
+// ---------------------------------------------------------------------------
+
+/// Dedicated RNG stream for storage faults (kept apart from the task-kill
+/// injector so enabling one does not perturb the other's schedule).
+pub const STORE_FAULT_STREAM: u64 = 0x570E_FA17;
+
+/// Seeded fault injector around any [`SnapshotStore`]: transient errors on
+/// put/get with probability `error_p`, plus a bounded budget of torn
+/// writes and bit flips that each fire with probability `fault_p` per put.
+/// Corrupting faults are silent — the `put` "succeeds" and the damage is
+/// only discovered when a read fails its CRC check.
+pub struct FaultyStore {
+    inner: Box<dyn SnapshotStore>,
+    // RefCell so `get_bytes(&self)` can draw from the stream; the store is
+    // Send (moved between threads), never shared.
+    rng: RefCell<Rng>,
+    error_p: f64,
+    fault_p: f64,
+    torn_writes: u32,
+    bit_flips: u32,
+}
+
+impl FaultyStore {
+    pub fn new(
+        inner: Box<dyn SnapshotStore>,
+        seed: u64,
+        error_p: f64,
+        fault_p: f64,
+        torn_writes: u32,
+        bit_flips: u32,
+    ) -> Self {
+        Self {
+            inner,
+            rng: RefCell::new(Rng::new(seed ^ STORE_FAULT_STREAM)),
+            error_p,
+            fault_p,
+            torn_writes,
+            bit_flips,
+        }
+    }
+
+    /// Build from the `[engine.fault.store]` section (caller checks
+    /// `enabled`); `seed` is the base fault seed, diversified onto the
+    /// dedicated storage stream internally.
+    pub fn from_config(inner: Box<dyn SnapshotStore>, seed: u64, cfg: &StoreFaultConfig) -> Self {
+        Self::new(
+            inner,
+            seed,
+            cfg.error_p,
+            cfg.fault_p,
+            cfg.torn_writes,
+            cfg.bit_flips,
+        )
+    }
+
+    /// Corruption budget not yet spent (torn writes, bit flips).
+    pub fn remaining_faults(&self) -> (u32, u32) {
+        (self.torn_writes, self.bit_flips)
+    }
+}
+
+impl SnapshotStore for FaultyStore {
+    fn put_bytes(&mut self, epoch: u64, bytes: &[u8]) -> Result<()> {
+        let mut rng = self.rng.borrow_mut();
+        if rng.chance(self.error_p) {
+            return Err(TransientStoreError(format!(
+                "injected transient error on put(epoch {epoch})"
+            ))
+            .into());
+        }
+        let mut bytes = bytes.to_vec();
+        if self.torn_writes > 0 && bytes.len() > 1 && rng.chance(self.fault_p) {
+            self.torn_writes -= 1;
+            let cut = 1 + rng.gen_range(bytes.len() as u64 - 1) as usize;
+            bytes.truncate(cut);
+        } else if self.bit_flips > 0 && !bytes.is_empty() && rng.chance(self.fault_p) {
+            self.bit_flips -= 1;
+            let bit = rng.gen_range(bytes.len() as u64 * 8);
+            bytes[(bit / 8) as usize] ^= 1 << (bit % 8);
+        }
+        drop(rng);
+        self.inner.put_bytes(epoch, &bytes)
+    }
+
+    fn get_bytes(&self, epoch: u64) -> Result<Option<Vec<u8>>> {
+        if self.rng.borrow_mut().chance(self.error_p) {
+            return Err(TransientStoreError(format!(
+                "injected transient error on get(epoch {epoch})"
+            ))
+            .into());
+        }
+        self.inner.get_bytes(epoch)
+    }
+
+    fn epochs(&self) -> Vec<u64> {
+        self.inner.epochs()
+    }
+
+    fn prune(&mut self, retain: usize) -> Result<()> {
+        self.inner.prune(retain)
+    }
+
+    fn quarantine(&mut self, epoch: u64) -> Result<()> {
+        self.inner.quarantine(epoch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    fn sample_snapshot(job: &str, epoch: u64) -> Snapshot {
+        let mut sp = Savepoint::default();
+        let mut st = OperatorState::default();
+        st.keyed
+            .entry(3)
+            .or_default()
+            .push((vec![0, 3, b'k'], vec![1, 2, 3]));
+        st.keyed.entry(9).or_default().push((vec![0, 9], vec![]));
+        st.aux.entry(3).or_default().push(vec![9, 9, 9]);
+        sp.merge_task_export("count", st);
+        sp.merge_task_export("join", OperatorState::default());
+        let mut snap = Snapshot::checkpoint(job, epoch, sp);
+        snap.source_offsets.insert("src".into(), vec![17, 42]);
+        snap
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "justin-store-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn codec_roundtrip_preserves_snapshot() {
+        prop(50, |g| {
+            let mut sp = Savepoint::default();
+            for op in 0..g.usize(0..4) {
+                let mut st = OperatorState::default();
+                for _ in 0..g.usize(0..20) {
+                    let group = g.u64(0..128) as u16;
+                    let k: Vec<u8> = (0..g.usize(0..12)).map(|_| g.u64(0..256) as u8).collect();
+                    let v: Vec<u8> = (0..g.usize(0..12)).map(|_| g.u64(0..256) as u8).collect();
+                    st.keyed.entry(group).or_default().push((k, v));
+                }
+                for _ in 0..g.usize(0..5) {
+                    let group = g.u64(0..128) as u16;
+                    let b: Vec<u8> = (0..g.usize(0..8)).map(|_| g.u64(0..256) as u8).collect();
+                    st.aux.entry(group).or_default().push(b);
+                }
+                sp.merge_task_export(&format!("op{op}"), st);
+            }
+            let mut snap = Snapshot::checkpoint("job", g.u64(0..1000), sp);
+            for s in 0..g.usize(0..3) {
+                let offs: Vec<u64> = (0..g.usize(1..4)).map(|_| g.u64(0..10_000)).collect();
+                snap.source_offsets.insert(format!("src{s}"), offs);
+            }
+            let decoded = decode_snapshot(&encode_snapshot(&snap)).unwrap();
+            assert_eq!(decoded, snap);
+        });
+    }
+
+    #[test]
+    fn decode_rejects_magic_truncation_and_bitflips() {
+        let bytes = encode_snapshot(&sample_snapshot("job", 7));
+
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xFF;
+        let err = decode_snapshot(&bad_magic).unwrap_err().to_string();
+        assert!(err.contains("magic"), "bad magic: {err}");
+
+        for cut in [3, bytes.len() / 2, bytes.len() - 1] {
+            let err = decode_snapshot(&bytes[..cut]).unwrap_err().to_string();
+            assert!(
+                err.contains("truncated") || err.contains("CRC"),
+                "cut at {cut}: {err}"
+            );
+        }
+
+        // Flip one bit in every payload byte position: decode must never
+        // succeed silently.
+        for pos in 8..bytes.len() {
+            let mut flipped = bytes.clone();
+            flipped[pos] ^= 0x01;
+            assert!(
+                decode_snapshot(&flipped).is_err(),
+                "bit flip at {pos} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn in_memory_store_installs_latest_and_prunes() {
+        let mut store = InMemorySnapshotStore::default();
+        for epoch in 1..=5u64 {
+            store
+                .put(&Snapshot::checkpoint("j", epoch, Savepoint::default()))
+                .unwrap();
+        }
+        assert_eq!(store.latest().unwrap().unwrap().epoch(), 5);
+        assert!(store.get(2).unwrap().is_some());
+        store.prune(2).unwrap();
+        assert_eq!(store.epochs(), vec![4, 5]);
+        assert!(store.get(2).unwrap().is_none());
+        assert_eq!(store.latest().unwrap().unwrap().epoch(), 5);
+    }
+
+    #[test]
+    fn fs_store_roundtrips_and_recovers_index_on_reopen() {
+        let dir = tmp_dir("reopen");
+        let snap = sample_snapshot("job", 2);
+        {
+            let mut store = FsSnapshotStore::open(&dir).unwrap();
+            for epoch in 1..=3u64 {
+                store
+                    .put(&sample_snapshot("job", epoch))
+                    .unwrap_or_else(|e| panic!("put epoch {epoch}: {e}"));
+            }
+        }
+        // Leftover temp file from a "crashed" put must be swept, not listed.
+        fs::write(dir.join(".epoch-00000000000000000009.snap.tmp"), b"junk").unwrap();
+        let store = FsSnapshotStore::open(&dir).unwrap();
+        assert_eq!(store.epochs(), vec![1, 2, 3]);
+        assert_eq!(store.get(2).unwrap().unwrap(), snap);
+        assert_eq!(store.latest().unwrap().unwrap().epoch(), 3);
+        assert!(!dir.join(".epoch-00000000000000000009.snap.tmp").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fs_store_prune_removes_files() {
+        let dir = tmp_dir("prune");
+        let mut store = FsSnapshotStore::open(&dir).unwrap();
+        for epoch in 1..=4u64 {
+            store.put(&sample_snapshot("job", epoch)).unwrap();
+        }
+        store.prune(2).unwrap();
+        assert_eq!(store.epochs(), vec![3, 4]);
+        assert!(!store.file_path(1).exists());
+        assert!(!store.file_path(2).exists());
+        assert!(store.file_path(3).exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// The acceptance scenario: epoch N+1 is written torn (injected),
+    /// recovery skips it, restores epoch N byte-identical, quarantines the
+    /// torn file, and reports fallback depth 1.
+    #[test]
+    fn torn_write_falls_back_to_previous_intact_epoch() {
+        let dir = tmp_dir("torn");
+        let epoch_n = sample_snapshot("job", 1);
+        let mut inner = FsSnapshotStore::open(&dir).unwrap();
+        inner.put(&epoch_n).unwrap();
+
+        // Every subsequent put is torn (fault_p = 1, budget 1).
+        let mut store = FaultyStore::new(Box::new(inner), 42, 0.0, 1.0, 1, 0);
+        store.put(&sample_snapshot("job", 2)).unwrap();
+        assert_eq!(store.remaining_faults(), (0, 0));
+        assert!(
+            store.get(2).is_err(),
+            "torn epoch must fail checksum verification"
+        );
+
+        let (snap, depth) = store.latest_intact().unwrap();
+        assert_eq!(snap.unwrap(), epoch_n, "must restore epoch N byte-identical");
+        assert_eq!(depth, 1, "exactly one epoch skipped");
+        assert_eq!(store.epochs(), vec![1], "torn epoch left the index");
+        let reopened = FsSnapshotStore::open(&dir).unwrap();
+        let corrupt = reopened.corrupt_files().unwrap();
+        assert_eq!(corrupt.len(), 1, "torn file quarantined: {corrupt:?}");
+        assert!(corrupt[0].to_string_lossy().ends_with(".corrupt"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bit_flip_detected_and_quarantined() {
+        let mut inner = InMemorySnapshotStore::default();
+        inner.put(&sample_snapshot("job", 1)).unwrap();
+        let mut store = FaultyStore::new(Box::new(inner), 7, 0.0, 1.0, 0, 1);
+        store.put(&sample_snapshot("job", 2)).unwrap();
+        assert_eq!(store.remaining_faults(), (0, 0));
+        let (snap, depth) = store.latest_intact().unwrap();
+        assert_eq!(snap.unwrap().epoch(), 1);
+        assert_eq!(depth, 1);
+    }
+
+    #[test]
+    fn all_epochs_corrupt_reports_total_depth() {
+        let mut store = FaultyStore::new(
+            Box::new(InMemorySnapshotStore::default()),
+            3,
+            0.0,
+            1.0,
+            2,
+            0,
+        );
+        store.put(&sample_snapshot("job", 1)).unwrap();
+        store.put(&sample_snapshot("job", 2)).unwrap();
+        let (snap, depth) = store.latest_intact().unwrap();
+        assert!(snap.is_none());
+        assert_eq!(depth, 2);
+        assert!(store.epochs().is_empty());
+    }
+
+    /// A store whose reads fail transiently a fixed number of times —
+    /// deterministic coverage for the retry loop in `latest_intact`.
+    struct FlakyReads {
+        inner: InMemorySnapshotStore,
+        failures_left: std::cell::Cell<u32>,
+    }
+
+    impl SnapshotStore for FlakyReads {
+        fn put_bytes(&mut self, epoch: u64, bytes: &[u8]) -> Result<()> {
+            self.inner.put_bytes(epoch, bytes)
+        }
+        fn get_bytes(&self, epoch: u64) -> Result<Option<Vec<u8>>> {
+            let left = self.failures_left.get();
+            if left > 0 {
+                self.failures_left.set(left - 1);
+                return Err(TransientStoreError("flaky read".into()).into());
+            }
+            self.inner.get_bytes(epoch)
+        }
+        fn epochs(&self) -> Vec<u64> {
+            self.inner.epochs()
+        }
+        fn prune(&mut self, retain: usize) -> Result<()> {
+            self.inner.prune(retain)
+        }
+        fn quarantine(&mut self, epoch: u64) -> Result<()> {
+            self.inner.quarantine(epoch)
+        }
+    }
+
+    #[test]
+    fn latest_intact_retries_transient_read_errors() {
+        let mut inner = InMemorySnapshotStore::default();
+        inner.put(&sample_snapshot("job", 5)).unwrap();
+        let mut store = FlakyReads {
+            inner,
+            failures_left: std::cell::Cell::new(2),
+        };
+        let (snap, depth) = store.latest_intact().unwrap();
+        assert_eq!(snap.unwrap().epoch(), 5);
+        assert_eq!(depth, 0, "transient errors must not burn fallback depth");
+    }
+
+    #[test]
+    fn transient_put_errors_are_marked() {
+        let mut store = FaultyStore::new(
+            Box::new(InMemorySnapshotStore::default()),
+            11,
+            1.0,
+            0.0,
+            0,
+            0,
+        );
+        let err = store.put(&sample_snapshot("job", 1)).unwrap_err();
+        assert!(is_transient(&err), "injected put error must be transient");
+        let generic = anyhow::anyhow!("disk on fire");
+        assert!(!is_transient(&generic));
+    }
+
+    #[test]
+    fn faulty_store_is_deterministic_per_seed() {
+        let run = |seed: u64| -> Vec<bool> {
+            let mut store = FaultyStore::new(
+                Box::new(InMemorySnapshotStore::default()),
+                seed,
+                0.3,
+                0.5,
+                2,
+                2,
+            );
+            (1..=10u64)
+                .map(|e| store.put(&sample_snapshot("job", e)).is_ok())
+                .collect()
+        };
+        assert_eq!(run(99), run(99), "same seed, same fault schedule");
+    }
+}

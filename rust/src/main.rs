@@ -9,6 +9,7 @@
 //!                 [--period 1800] [--amplitude 0.5]   # dynamic workloads
 //! justin run --query q5 --rate 200000 --events 2000000  # real engine
 //! justin config --file path.toml      # validate a config file
+//! justin snapshots --dir ./ckpts      # inspect an on-disk snapshot store
 //! ```
 
 use justin::bench::figures::{fig4_print, fig4_series, fig5_compare, FIG5_QUERIES};
@@ -199,13 +200,59 @@ fn real_main() -> anyhow::Result<()> {
             let cfg = justin::config::load(std::path::Path::new(path))?;
             println!("ok: {cfg:#?}");
         }
+        "snapshots" => {
+            // Inspect an on-disk snapshot store: one line per epoch with the
+            // decoded header, file size, and checksum verdict, then any
+            // quarantined (`*.corrupt`) files left behind by recovery.
+            use justin::engine::{FsSnapshotStore, SnapshotStore};
+            let cfg = load_config(&args)?;
+            let dir = args
+                .get("dir")
+                .map(str::to_string)
+                .unwrap_or_else(|| cfg.checkpoint.dir.clone());
+            if dir.is_empty() {
+                anyhow::bail!(
+                    "no snapshot directory: pass --dir PATH or set checkpoint.dir \
+                     in the config file"
+                );
+            }
+            let store = FsSnapshotStore::open(&dir)?;
+            let epochs = store.epochs();
+            println!("{dir}: {} snapshot(s)", epochs.len());
+            for epoch in epochs {
+                let path = store.file_path(epoch);
+                let size = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                match store.get(epoch) {
+                    Ok(Some(snap)) => println!(
+                        "  epoch {epoch:>6}  {:<10}  job={}  format v{}  {size:>8} B  \
+                         entries={}  sources={}  crc ok",
+                        snap.kind().to_string(),
+                        snap.header.job,
+                        snap.header.version,
+                        snap.state.total_entries(),
+                        snap.source_offsets.len(),
+                    ),
+                    Ok(None) => {
+                        println!("  epoch {epoch:>6}  missing on disk  {size:>8} B")
+                    }
+                    Err(e) => {
+                        println!("  epoch {epoch:>6}  CORRUPT  {size:>8} B  ({e:#})")
+                    }
+                }
+            }
+            for path in store.corrupt_files()? {
+                let size = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                println!("  quarantined {}  {size} B", path.display());
+            }
+        }
         _ => {
             println!(
-                "usage: justin <fig4|fig5 [query]|sim|scenario|run|config> [--query q] \
-                 [--policy ds2|justin|both] [--rate N] [--events N] [--duration S] \
-                 [--seed N] [--config file.toml] [--verbose]\n\
+                "usage: justin <fig4|fig5 [query]|sim|scenario|run|config|snapshots> \
+                 [--query q] [--policy ds2|justin|both] [--rate N] [--events N] \
+                 [--duration S] [--seed N] [--config file.toml] [--verbose]\n\
                  scenario options: --pattern constant|step|ramp|diurnal|spike \
-                 --base F --peak F --start S --end S --period S --amplitude F"
+                 --base F --peak F --start S --end S --period S --amplitude F\n\
+                 snapshots options: --dir PATH (defaults to checkpoint.dir)"
             );
         }
     }

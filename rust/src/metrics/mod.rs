@@ -302,6 +302,16 @@ pub mod names {
     pub const CHECKPOINT_SIZE_BYTES: &str = "checkpoint_size_bytes";
     /// Failure-to-recovered duration histogram, ns (per job).
     pub const RECOVERY_DURATION_NS: &str = "recovery_duration_ns";
+    /// Checkpoint epochs installed into the snapshot store (per job).
+    pub const CHECKPOINT_COMPLETED_TOTAL: &str = "checkpoint_completed_total";
+    /// Checkpoint epochs discarded: superseded, aborted, past the
+    /// `checkpoint.timeout_s` deadline, or rejected by storage (per job).
+    pub const CHECKPOINT_DISCARDED_TOTAL: &str = "checkpoint_discarded_total";
+    /// Snapshot-store operations that failed after exhausting retries
+    /// (per job).
+    pub const CHECKPOINT_STORE_FAILURES_TOTAL: &str = "checkpoint_store_failures_total";
+    /// Epochs skipped to reach an intact snapshot during recovery (per job).
+    pub const RECOVERY_FALLBACK_DEPTH: &str = "recovery_fallback_depth_total";
 }
 
 #[cfg(test)]

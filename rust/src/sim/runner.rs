@@ -66,6 +66,11 @@ pub struct AutoscaleTrace {
     pub reconfigs: Vec<ReconfigEvent>,
     /// Virtual times at which an injected task failure struck.
     pub failures: Vec<f64>,
+    /// Snapshot-fallback depth of each failure's recovery, parallel to
+    /// [`failures`](Self::failures): 0 means the newest checkpoint verified
+    /// clean; k > 0 means k corrupt epochs were skipped, each charging
+    /// `sim.recovery_fallback_extra_s` of extra downtime.
+    pub fallback_depths: Vec<u32>,
     pub final_assignment: ScalingAssignment,
     /// First time the achieved rate reaches [`CONVERGENCE_FRACTION`] of the
     /// offered rate and stays there.
@@ -200,6 +205,7 @@ pub fn run_autoscaling(
     let mut points = Vec::new();
     let mut reconfigs = Vec::new();
     let mut failures = Vec::new();
+    let mut fallback_depths = Vec::new();
     // Start in "stabilization" so the first window starts clean.
     let mut stabilize_until = 0.0f64;
     let mut downtime_until = 0.0f64;
@@ -223,7 +229,19 @@ pub fn run_autoscaling(
         // tier, see `SimConfig::validate`) and the trace records it.
         if t >= next_failure_at {
             failures.push(t);
-            recovery_until = t + cfg.sim.recovery_downtime_s;
+            // Degraded recovery: with probability `sim.store_fault_p` the
+            // newest snapshot is corrupt and recovery falls back one more
+            // epoch (geometric, capped at 3 — mirroring the engine's
+            // quarantine-and-skip chain), each level charging
+            // `sim.recovery_fallback_extra_s` of extra downtime.
+            let mut depth = 0u32;
+            while depth < 3 && failure_rng.chance(cfg.sim.store_fault_p) {
+                depth += 1;
+            }
+            fallback_depths.push(depth);
+            recovery_until = t
+                + cfg.sim.recovery_downtime_s
+                + depth as f64 * cfg.sim.recovery_fallback_extra_s;
             downtime_until = downtime_until.max(recovery_until);
             stabilize_until = stabilize_until
                 .max(recovery_until + cfg.scaler.stabilization_s as f64);
@@ -346,6 +364,7 @@ pub fn run_autoscaling(
         points,
         reconfigs,
         failures,
+        fallback_depths,
         final_assignment: assignment,
         converged_at_s: converged_at,
     }
@@ -631,6 +650,9 @@ mod tests {
         );
         let rec = trace.recovery_seconds();
         assert!(rec > 0.0, "recovery downtime accounted");
+        // With store faults off every recovery reads the newest snapshot.
+        assert_eq!(trace.fallback_depths.len(), trace.failures.len());
+        assert!(trace.fallback_depths.iter().all(|&d| d == 0));
         // Per-failure downtime is bounded by the configured recovery cost
         // (overlapping recoveries merge, so the mean can only be lower).
         let mttr = trace.mttr_s().unwrap();
@@ -648,12 +670,47 @@ mod tests {
         let mut policy2 = Ds2::new(cfg.scaler.clone());
         let trace2 = run_autoscaling(&q, &mut policy2, &cfg);
         assert_eq!(trace.failures, trace2.failures);
+        assert_eq!(trace.fallback_depths, trace2.fallback_depths);
+    }
+
+    #[test]
+    fn store_faults_deepen_recovery_downtime() {
+        let q = query_profile("q1").unwrap();
+        let mut cfg = fast_cfg();
+        cfg.sim.failure_mtbf_s = 150.0;
+        cfg.sim.store_fault_p = 0.7;
+        let mut policy = Ds2::new(cfg.scaler.clone());
+        let trace = run_autoscaling(&q, &mut policy, &cfg);
+        assert!(!trace.failures.is_empty());
+        assert_eq!(trace.fallback_depths.len(), trace.failures.len());
+        assert!(
+            trace.fallback_depths.iter().any(|&d| d > 0),
+            "p=0.7 over {} failures must corrupt at least one newest snapshot",
+            trace.failures.len()
+        );
+        assert!(trace.fallback_depths.iter().all(|&d| d <= 3), "depth capped");
+        // MTTR now bounded by the worst-case fallback chain, and strictly
+        // above the clean-recovery cost if any fallback actually happened
+        // without overlapping a longer outage window.
+        let mttr = trace.mttr_s().unwrap();
+        assert!(
+            mttr <= cfg.sim.recovery_downtime_s
+                + 3.0 * cfg.sim.recovery_fallback_extra_s
+                + 1e-9,
+            "MTTR {mttr} exceeds the capped fallback chain"
+        );
+        // Deterministic under the seed.
+        let mut policy2 = Ds2::new(cfg.scaler.clone());
+        let trace2 = run_autoscaling(&q, &mut policy2, &cfg);
+        assert_eq!(trace.failures, trace2.failures);
+        assert_eq!(trace.fallback_depths, trace2.fallback_depths);
     }
 
     #[test]
     fn failures_disabled_by_default() {
         let (_, trace) = run("q1", ScalerKind::Ds2);
         assert!(trace.failures.is_empty());
+        assert!(trace.fallback_depths.is_empty());
         assert_eq!(trace.recovery_seconds(), 0.0);
         assert_eq!(trace.mttr_s(), None);
     }
